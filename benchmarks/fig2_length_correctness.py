@@ -1,0 +1,99 @@
+"""Figure 2: response length vs correctness (weak correlation).
+
+Live path: sample many responses per question from the trained tiny
+reasoner, bin by length, count correct/wrong per bin, report the
+length-correctness point-biserial correlation. Falls back to the synthetic
+trace generator when no checkpoint exists (same claim, oracle-rendered)."""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+
+def synthetic(num_questions=3, responses=64, seed=0):
+    from repro.data import tasks
+    rng = np.random.default_rng(seed)
+    rows = []
+    for qi in range(num_questions):
+        prob = tasks.gen_problem(rng)
+        lengths, corrects = [], []
+        for _ in range(responses):
+            # stochastic verbosity + occasional wrong steps, independent
+            trace = tasks.render_trace(prob, rng, recheck_p=0.3,
+                                       error_p=0.08, overthink_p=0.15)
+            plen = len(prob.prompt_tokens())
+            lengths.append(len(trace) - plen)
+            ans = tasks.extract_answer(trace)
+            c, t = tasks.grade_steps(prob, trace[plen:])
+            corrects.append(ans == prob.answer and c == t)
+        rows.append((qi, np.asarray(lengths), np.asarray(corrects)))
+    return rows
+
+
+def live(ckpt_dir, num_questions=3, responses=64, max_tokens=96, seed=0):
+    import jax
+
+    from repro.data import tasks
+    from repro.data import tokenizer as tk
+    from repro.launch.serve import load_reasoner
+    from repro.serving import Engine, EngineConfig, SamplingParams
+
+    model, params, _ = load_reasoner(ckpt_dir)
+    rng = np.random.default_rng(seed)
+    rows = []
+    for qi in range(num_questions):
+        prob = tasks.gen_problem(rng)
+        eng = Engine(model, params, EngineConfig(
+            page_size=8, num_pages=2048, max_slots=16,
+            max_pages_per_branch=24, eos_id=tk.EOS,
+            sampling=SamplingParams(temperature=1.0, top_p=0.95),
+            seed=seed + qi))
+        blocks, logits, ssm = eng.prefill(prob.prompt_tokens())
+        lengths, corrects = [], []
+        remaining = responses
+        while remaining > 0:
+            hs = []
+            while remaining > 0 and eng.free_slots:
+                h = eng.spawn_branch(0, blocks, logits, ssm,
+                                     len(prob.prompt_tokens()))
+                hs.append(h)
+                remaining -= 1
+            live_set = set(h.branch_id for h in hs)
+            while live_set:
+                eng.decode_step()
+                for h in hs:
+                    if h.branch_id in live_set and (
+                            h.tokens[-1] == tk.EOS
+                            or len(h.tokens) >= max_tokens):
+                        lengths.append(len(h.tokens))
+                        corrects.append(
+                            tasks.extract_answer(h.tokens) == prob.answer)
+                        live_set.discard(h.branch_id)
+                        eng.free_branch(h)
+        eng.release_prefix(blocks)
+        rows.append((qi, np.asarray(lengths), np.asarray(corrects)))
+    return rows
+
+
+def correlation(lengths, corrects):
+    if corrects.std() == 0 or lengths.std() == 0:
+        return 0.0
+    return float(np.corrcoef(lengths, corrects.astype(float))[0, 1])
+
+
+def main(quick: bool = False, ckpt="checkpoints/reasoner"):
+    n_resp = 16 if quick else 64
+    use_live = os.path.exists(os.path.join(ckpt, "lm.npz")) and not quick
+    rows = (live(ckpt, responses=n_resp) if use_live
+            else synthetic(responses=n_resp))
+    mode = "live" if use_live else "synthetic"
+    for qi, lengths, corrects in rows:
+        r = correlation(lengths, corrects)
+        print(f"fig2_q{qi}_{mode},{lengths.mean():.1f},"
+              f"acc={corrects.mean():.2f};len_corr={r:+.3f};"
+              f"len_range={lengths.min()}-{lengths.max()}")
+
+
+if __name__ == "__main__":
+    main()

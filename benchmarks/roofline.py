@@ -1,0 +1,146 @@
+"""Roofline analysis (§g): three terms per (arch x shape x mesh) from the
+dry-run's compiled artifacts.
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory term     = HLO_bytes_per_device / HBM_bw
+    collective term = collective_bytes_per_device / link_bw
+
+HLO quantities come from ``experiments/dryrun/*.json`` (written by
+``repro.launch.dryrun``), loop-corrected via the unrolled-L extrapolation
+(see dryrun.py — XLA counts while bodies once). The SPMD module is the
+per-device program, so per-device numbers divide by per-chip peaks directly
+(equivalent to total/(chips x peak) under even sharding).
+
+MODEL_FLOPS = 6·N·D (train) or 2·N·D (inference), N = active params,
+D = tokens processed; the ratio MODEL_FLOPS/HLO_FLOPs measures how much
+compiled compute is useful (remat, attention, GQA-padding and dispatch
+overheads all push it below 1).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+PEAK_FLOPS = 197e12     # bf16 FLOP/s per v5e chip
+HBM_BW = 819e9          # B/s
+LINK_BW = 50e9          # B/s per ICI link
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def model_flops_per_device(rec: dict) -> float:
+    n_active = rec["params_active"]
+    if rec["kind"] == "train":
+        tokens = rec["global_batch"] * rec["seq_len"]
+        total = 6.0 * n_active * tokens
+    elif rec["kind"] == "prefill":
+        tokens = rec["global_batch"] * rec["seq_len"]
+        total = 2.0 * n_active * tokens
+    else:  # decode: one token per sequence
+        total = 2.0 * n_active * rec["global_batch"]
+    return total / rec["num_devices"]
+
+
+def analyze(rec: dict) -> dict:
+    ex = rec.get("extrapolated", {})
+    if ex.get("ok"):
+        # clamp: constant overheads can make m(2) marginally < m(1), which
+        # extrapolates to tiny negative totals on near-zero terms
+        flops = max(ex["flops"], rec["flops_per_device"])
+        bytes_ = max(ex["bytes"], 0.0)
+        coll = max(ex["coll_total"], 0.0)
+        corrected = True
+    else:
+        flops, bytes_ = rec["flops_per_device"], rec["bytes_per_device"]
+        coll = rec["collectives"]["total_bytes"]
+        corrected = False
+    t_c = flops / PEAK_FLOPS
+    t_m = bytes_ / HBM_BW
+    t_n = coll / LINK_BW
+    dominant = max(("compute", t_c), ("memory", t_m),
+                   ("collective", t_n), key=lambda kv: kv[1])[0]
+    mf = model_flops_per_device(rec)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_n,
+        "dominant": dominant,
+        "model_flops_per_dev": mf,
+        "useful_ratio": mf / flops if flops else 0.0,
+        "hlo_flops_per_dev": flops,
+        "hlo_bytes_per_dev": bytes_,
+        "coll_bytes_per_dev": coll,
+        "temp_gib_per_dev": rec["memory"]["temp_bytes"] / 2 ** 30,
+        "loop_corrected": corrected,
+    }
+
+
+def suggestion(row: dict) -> str:
+    d = row["dominant"]
+    if d == "collective":
+        return ("shrink all-gather/all-reduce traffic: fewer resharding "
+                "boundaries, reduce-scatter grads, or move the hot dim off "
+                "the mesh axis that forces the collective")
+    if d == "memory":
+        return ("cut bytes/step: fuse elementwise chains, keep bf16 end-to-"
+                "end, avoid re-materializing the KV cache or remat'd "
+                "activations")
+    return ("raise MXU utilization: larger effective matmul tiles, remove "
+            "GQA/vocab padding waste, reduce remat recompute")
+
+
+def load_records(mesh: str = "single", tag: str = ""):
+    """tag="" loads baselines only; perf-variant records carry a tag."""
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("mesh") == mesh and rec.get("tag", "") == tag:
+            recs.append(rec)
+    return recs
+
+
+def table(mesh: str = "single", fmt: str = "md") -> str:
+    rows = [analyze(r) for r in load_records(mesh)]
+    rows.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"])))
+    if fmt == "csv":
+        out = ["arch,shape,compute_s,memory_s,collective_s,dominant,"
+               "useful_ratio,temp_gib"]
+        for r in rows:
+            out.append(f"{r['arch']},{r['shape']},{r['compute_s']:.3e},"
+                       f"{r['memory_s']:.3e},{r['collective_s']:.3e},"
+                       f"{r['dominant']},{r['useful_ratio']:.3f},"
+                       f"{r['temp_gib_per_dev']:.2f}")
+        return "\n".join(out)
+    out = ["| arch | shape | compute (s) | memory (s) | collective (s) | "
+           "dominant | 6ND/HLO | temp GiB/dev |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.2e} | "
+            f"{r['memory_s']:.2e} | {r['collective_s']:.2e} | "
+            f"**{r['dominant']}** | {r['useful_ratio']:.2f} | "
+            f"{r['temp_gib_per_dev']:.2f} |")
+    return "\n".join(out)
+
+
+def main(quick: bool = False):
+    rows = [analyze(r) for r in load_records("single")]
+    if not rows:
+        print("roofline,0,no-dryrun-records")
+        return
+    for r in sorted(rows, key=lambda r: (r["arch"],
+                                         SHAPE_ORDER.index(r["shape"]))):
+        total = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        print(f"roofline_{r['arch']}_{r['shape']},{total * 1e6:.1f},"
+              f"dominant={r['dominant']};useful={r['useful_ratio']:.2f}")
+
+
+if __name__ == "__main__":
+    fmt = sys.argv[1] if len(sys.argv) > 1 else "md"
+    mesh = sys.argv[2] if len(sys.argv) > 2 else "single"
+    print(table(mesh=mesh, fmt=fmt))

@@ -1,0 +1,50 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (the second column is the
+headline quantity of that experiment: latency steps, expected length,
+microseconds, or roofline seconds — see each module).
+
+  python -m benchmarks.run [--full]   (default is quick mode)
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+from . import (fig2_length_correctness, fig3_branch_utilization, fig5_e2e,
+               fig6_ablation, fig7_sensitivity, kernel_bench,
+               lemma1_order_stats, roofline)
+
+MODULES = [
+    ("lemma1", lemma1_order_stats),
+    ("fig2", fig2_length_correctness),
+    ("fig3", fig3_branch_utilization),
+    ("fig5", fig5_e2e),
+    ("fig6", fig6_ablation),
+    ("fig7", fig7_sensitivity),
+    ("kernels", kernel_bench),
+    ("roofline", roofline),
+]
+
+
+def main() -> None:
+    quick = "--full" not in sys.argv
+    print("name,us_per_call,derived")
+    failures = []
+    for name, mod in MODULES:
+        t0 = time.time()
+        try:
+            mod.main(quick=quick)
+            print(f"_section_{name},{(time.time() - t0) * 1e6:.0f},ok",
+                  flush=True)
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+            print(f"_section_{name},0,FAILED", flush=True)
+    if failures:
+        sys.exit(f"benchmark failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Quickstart: the SART serving loop in ~40 lines.
+
+Builds a tiny reasoner (untrained — this demo shows the *scheduling*
+machinery), submits a few synthetic reasoning requests, and serves them with
+redundant sampling (N=8, early stop at M=4) + two-phase pruning.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import numpy as np
+
+from repro.core import OraclePRM, Scheduler, SchedulerConfig
+from repro.core.scheduler import percentile_latency
+from repro.data import tasks
+from repro.data import tokenizer as tk
+from repro.models import Model, ModelConfig
+from repro.serving import Engine, EngineConfig, SamplingParams
+
+# 1. a model (any of the 10 assigned archs works via repro.configs.smoke)
+cfg = ModelConfig(name="demo", arch_type="dense", num_layers=2, d_model=128,
+                  vocab_size=tk.VOCAB_SIZE, num_heads=4, num_kv_heads=2,
+                  d_ff=512)
+model = Model(cfg)
+params = model.init_params(jax.random.PRNGKey(0))
+
+# 2. the serving engine: paged KV cache with ref-counted prefix sharing
+engine = Engine(model, params, EngineConfig(
+    page_size=8, num_pages=512, max_slots=16, max_pages_per_branch=16,
+    eos_id=tk.EOS, sampling=SamplingParams(temperature=1.0, top_p=0.95)))
+
+# 3. SART: Algorithm 1 with N=8 branches, early stop at M=4, PRM pruning
+prm = OraclePRM(tasks.oracle_grader, noise=0.05)
+scheduler = Scheduler(
+    engine, prm,
+    SchedulerConfig(policy="sart", n=8, m=4, window=8, max_tokens=64),
+    answer_fn=tasks.extract_answer)
+
+# 4. submit reasoning requests (synthetic verifiable arithmetic chains)
+rng = np.random.default_rng(0)
+problems = [tasks.gen_problem(rng) for _ in range(6)]
+for i, prob in enumerate(problems):
+    print(f"request {i}: {tk.decode(prob.prompt_tokens())}  "
+          f"(answer: {prob.answer})")
+    scheduler.submit(prob.prompt_tokens(), payload=prob, arrival=i * 4)
+
+# 5. serve
+metrics = scheduler.run()
+for r, prob in zip(metrics["requests"], problems):
+    ok = tasks.is_correct(prob, r["answer"])
+    print(f"request {r['request_id']}: answer={r['answer']} "
+          f"({'correct' if ok else 'wrong — untrained model'}) "
+          f"e2e={r['e2e']} steps, queued={r['queue']}, "
+          f"completed={r['num_completed']}, pruned={r['num_pruned']}")
+print(f"P97 latency: {percentile_latency(metrics, 97):.0f} decode steps")
+assert engine.allocator.used_pages == 0, "page leak!"
+print("all KV pages released — no leaks")

@@ -1,0 +1,30 @@
+"""Live engine comparison (paper Fig. 5, small scale): Vanilla vs
+Self-Consistency vs Rebase vs SART on the trained tiny reasoner.
+
+    PYTHONPATH=src python examples/sart_vs_baselines.py
+"""
+import argparse
+
+from repro.launch.serve import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=10)
+    ap.add_argument("--n", type=int, default=8)
+    ap.add_argument("--ckpt", default="checkpoints/reasoner")
+    args = ap.parse_args()
+    print(f"{'policy':14s} {'N':>2s} {'acc':>5s} {'P50':>6s} {'P97':>6s} "
+          f"{'queueP50':>8s} steps")
+    for policy, n in [("vanilla", 1), ("sc", args.n), ("rebase", args.n),
+                      ("sart", args.n)]:
+        out = serve(policy=policy, n=n, num_requests=args.requests,
+                    rate_gap=6, ckpt=args.ckpt, prm_kind="oracle", window=8,
+                    max_tokens=96, max_slots=16, seed=0, temperature=0.9)
+        print(f"{policy:14s} {n:2d} {out['accuracy']:5.2f} "
+              f"{out['p50']:6.0f} {out['p97']:6.0f} "
+              f"{out['queue_p50']:8.0f} {out['decode_steps']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Serve the trained reasoner with SART and watch the two mechanisms work.
+
+Run examples/train_tiny_reasoner.py first (or point --ckpt elsewhere).
+
+    PYTHONPATH=src python examples/serve_reasoning.py --policy sart --n 8
+"""
+import argparse
+import json
+
+from repro.launch.serve import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--policy", default="sart")
+    ap.add_argument("--n", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--ckpt", default="checkpoints/reasoner")
+    ap.add_argument("--prm", default="head", choices=["oracle", "head"])
+    args = ap.parse_args()
+    out = serve(policy=args.policy, n=args.n, num_requests=args.requests,
+                rate_gap=8, ckpt=args.ckpt, prm_kind=args.prm, window=8,
+                max_tokens=96, max_slots=16, seed=0, temperature=0.9)
+    print(json.dumps(out, indent=2))
+
+
+if __name__ == "__main__":
+    main()

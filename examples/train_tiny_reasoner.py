@@ -1,0 +1,58 @@
+"""End-to-end driver: train a ~1M-param reasoner for a few hundred steps on
+the synthetic CoT task, fit the PRM reward head on its hidden states, save a
+checkpoint, and evaluate greedy accuracy.
+
+    PYTHONPATH=src python examples/train_tiny_reasoner.py [--steps 400]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import tasks
+from repro.data import tokenizer as tk
+from repro.launch.train import train_reasoner
+from repro.models import Model, ModelConfig
+
+
+def greedy_eval(model, params, n=30, seed=123, max_new=96):
+    rng = np.random.default_rng(seed)
+    correct = 0
+    for _ in range(n):
+        prob = tasks.gen_problem(rng, 3, 6)
+        toks = prob.prompt_tokens()
+        lg, cache = model.prefill(params, tokens=jnp.asarray(toks)[None],
+                                  max_len=256)
+        cur = int(jnp.argmax(lg[0]))
+        out, pos = [], len(toks)
+        while len(out) < max_new and cur != tk.EOS:
+            out.append(cur)
+            lg2, cache, _ = model.decode_step(
+                params, jnp.array([cur]), cache, jnp.array([pos]))
+            cur = int(jnp.argmax(lg2[0]))
+            pos += 1
+        if tasks.extract_answer(out) == prob.answer:
+            correct += 1
+    return correct / n
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--prm-steps", type=int, default=200)
+    ap.add_argument("--out", default="checkpoints/reasoner")
+    args = ap.parse_args()
+
+    params, head = train_reasoner(args.steps, args.prm_steps, args.out,
+                                  d_model=128, num_layers=2, seed=0)
+    cfg = ModelConfig(name="tiny-reasoner", arch_type="dense", num_layers=2,
+                      d_model=128, vocab_size=tk.VOCAB_SIZE, num_heads=4,
+                      num_kv_heads=2, d_ff=512, max_seq_len=512)
+    model = Model(cfg)
+    acc = greedy_eval(model, params)
+    print(f"[eval] greedy accuracy on held-out problems: {acc:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Regenerate the data-driven sections of EXPERIMENTS.md from
+experiments/dryrun/*.json. Usage:
+
+    PYTHONPATH=src:. python scripts/gen_experiments.py > /tmp/sections.md
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+sys.path.insert(0, "benchmarks")
+sys.path.insert(0, ".")
+
+from benchmarks.roofline import (SHAPE_ORDER, analyze, load_records,
+                                 suggestion, table)
+
+
+def dryrun_table(mesh: str) -> str:
+    recs = load_records(mesh)
+    recs.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"])))
+    out = ["| arch | shape | step | devices | args GiB/dev | temp GiB/dev | "
+           "collective ops | compile s |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        m = r["memory"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} | "
+            f"{r['num_devices']} | {m['argument_bytes']/2**30:.2f} | "
+            f"{m['temp_bytes']/2**30:.2f} | "
+            f"{r['collectives']['total_count']} | {r['compile_s']:.0f} |")
+    return "\n".join(out)
+
+
+def roofline_with_suggestions() -> str:
+    rows = [analyze(r) for r in load_records("single")]
+    rows.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"])))
+    out = ["| arch | shape | compute (s) | memory (s) | collective (s) | "
+           "dominant | 6ND/HLO | next lever |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.2e} | "
+            f"{r['memory_s']:.2e} | {r['collective_s']:.2e} | "
+            f"**{r['dominant']}** | {r['useful_ratio']:.2f} | "
+            f"{suggestion(r)} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    print("## §Dry-run (single-pod 16x16 = 256 chips)\n")
+    print(dryrun_table("single"))
+    print("\n## §Dry-run (multi-pod 2x16x16 = 512 chips)\n")
+    print(dryrun_table("multi"))
+    print("\n## §Roofline (single-pod baselines)\n")
+    print(roofline_with_suggestions())

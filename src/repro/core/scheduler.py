@@ -1,0 +1,390 @@
+"""SART's scheduling workflow (paper Algorithm 1) + baseline policies.
+
+Time base: one decode step of the fixed-size branch batch is one clock tick
+(decoding is memory-bound, so step latency is ~independent of how full the
+batch is — the quantity SART optimizes is the *number* of steps a request
+spans, plus the steps it waits in queue). Prefill counts one tick. The clock
+also advances while the system is idle waiting for arrivals.
+
+Policies (all sharing the engine + continuous batching, as the paper does for
+fair comparison):
+  * ``vanilla``        — N=1, no early stop, no pruning.
+  * ``sc``             — Self-Consistency: N branches, wait for all N,
+                         majority vote.
+  * ``sart``           — redundant sampling (N>M) + early stop at M
+                         completions + two-phase pruning; best-of-N by reward.
+  * ``sart_noprune``   — ablation (paper Fig. 6): early stop only.
+  * ``rebase``         — reward-guided tree search baseline (fork strong
+                         leaves, cull weak ones, ≤N live leaves).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from ..kv import OutOfPagesError
+from ..serving.engine import BranchHandle, Engine
+from .ensemble import best_of_n, majority_vote
+from .pruning import PruningConfig, RequestMeta, TwoPhasePruner
+from .prm import PRM
+
+POLICIES = ("vanilla", "sc", "sart", "sart_noprune", "rebase")
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    policy: str = "sart"
+    n: int = 8                    # branches sampled per request
+    m: int = 0                    # early-stop count (0 -> N//2, paper default)
+    alpha: float = 0.5            # phase-1 prune threshold
+    beta: int = 0                 # phase-1 prune cap (0 -> N//2)
+    window: int = 16              # T: decode steps between pruning rounds
+    max_tokens: int = 256         # per-branch generation cap
+    rebase_temp: float = 0.2      # softmax temperature for rebase expansion
+    preempt: bool = False         # beyond-paper: preemptible scheduling —
+                                  # suspend the weakest running branch to
+                                  # admit a waiting request's prefill
+                                  # (the paper lists this as future work)
+
+    def resolve(self) -> "SchedulerConfig":
+        n, m = self.n, self.m
+        if self.policy == "vanilla":
+            n, m = 1, 1
+        elif self.policy in ("sc", "rebase"):
+            m = n
+        elif m <= 0:
+            m = max(n // 2, 1)
+        return dataclasses.replace(self, n=n, m=max(min(m, n), 1))
+
+
+@dataclasses.dataclass
+class Request:
+    request_id: int
+    prompt: List[int]
+    arrival: int
+    payload: object = None        # task object (answer key, oracle grader)
+    # runtime state
+    meta: Optional[RequestMeta] = None
+    prefix_blocks: object = None
+    last_logits: object = None
+    ssm_state: object = None
+    live: Dict[int, BranchHandle] = dataclasses.field(default_factory=dict)
+    pending: int = 0              # branches awaiting a slot
+    completed: List = dataclasses.field(default_factory=list)
+    first_service: int = -1
+    finish: int = -1
+    final_answer: object = None
+
+    @property
+    def done(self) -> bool:
+        return self.finish >= 0
+
+
+@dataclasses.dataclass
+class Timeline:
+    steps: List[int] = dataclasses.field(default_factory=list)
+    live_branches: List[int] = dataclasses.field(default_factory=list)
+    live_tokens: List[int] = dataclasses.field(default_factory=list)
+
+    def record(self, step, branches, tokens):
+        self.steps.append(step)
+        self.live_branches.append(branches)
+        self.live_tokens.append(tokens)
+
+
+class Scheduler:
+    """Algorithm 1, parameterized by policy."""
+
+    def __init__(self, engine: Engine, prm: PRM, cfg: SchedulerConfig,
+                 answer_fn: Callable):
+        self.engine = engine
+        self.prm = prm
+        self.cfg = cfg.resolve()
+        self.answer_fn = answer_fn
+        self.pruner = TwoPhasePruner(PruningConfig(
+            alpha=self.cfg.alpha, beta=self.cfg.beta,
+            enabled=self.cfg.policy == "sart"))
+        self.request_queue: deque = deque()
+        self.branch_queue: deque = deque()   # requests with pending spawns
+        self.suspended: deque = deque()      # preempted branches to resume
+        self.requests: Dict[int, Request] = {}
+        self.clock = 0
+        self.timeline = Timeline()
+        self._next_request_id = 0
+
+    # ---------------------------------------------------------------- intake
+    def submit(self, prompt: List[int], payload=None,
+               arrival: int = 0) -> Request:
+        req = Request(self._next_request_id, list(prompt), arrival, payload)
+        self._next_request_id += 1
+        self.requests[req.request_id] = req
+        self.request_queue.append(req)
+        return req
+
+    # ------------------------------------------------------------------ main
+    def run(self, max_steps: int = 1_000_000) -> Dict:
+        """Drive everything submitted so far to completion."""
+        while self.clock < max_steps and not self._all_done():
+            self._fill_batch()
+            if self.engine.num_active == 0:
+                self.clock += 1            # idle: waiting for arrivals
+                continue
+            self._decode_window()
+            self._window_bookkeeping()
+        return self.metrics()
+
+    def _all_done(self) -> bool:
+        return all(r.done for r in self.requests.values())
+
+    def _arrived(self) -> Optional[Request]:
+        for _ in range(len(self.request_queue)):
+            req = self.request_queue[0]
+            if req.arrival <= self.clock:
+                self.request_queue.popleft()
+                return req
+            break
+        return None
+
+    # --------------------------------------------------------- batch filling
+    def _fill_batch(self):
+        """Algorithm 1 lines 3-11: branches first, then prefill requests.
+        With ``preempt``, suspended branches resume with top priority."""
+        while self.engine.free_slots:
+            if self.suspended:
+                h = self.suspended[0]
+                if h.done or not self.engine.resume_branch(h):
+                    self.suspended.popleft()
+                    continue
+                self.suspended.popleft()
+            elif self.branch_queue:
+                req = self.branch_queue[0]
+                if req.done or req.pending <= 0:
+                    self.branch_queue.popleft()
+                    continue
+                self._spawn_one(req)
+                if req.pending <= 0:
+                    self.branch_queue.popleft()
+            else:
+                req = self._arrived()
+                if req is None:
+                    break
+                try:
+                    self._prefill(req)
+                except OutOfPagesError:
+                    self.request_queue.appendleft(req)
+                    break
+        if self.cfg.preempt and not self.engine.free_slots:
+            self._maybe_preempt()
+
+    def _maybe_preempt(self):
+        """Suspend the weakest running branch so a waiting request can be
+        admitted (it gets prefilled and its branches queued; the victim
+        resumes as soon as a slot frees)."""
+        waiting = (self.branch_queue
+                   or (self.request_queue
+                       and self.request_queue[0].arrival <= self.clock))
+        if not waiting:
+            return
+        victims = [h for h in self.engine.slots
+                   if h is not None
+                   and len(self.requests[h.request_id].live) > 1]
+        if not victims:
+            return
+        victim = min(victims, key=lambda h: h.last_reward)
+        self.engine.suspend_branch(victim)
+        self.suspended.append(victim)
+        # admit: either seat a queued branch or prefill the next request
+        if self.branch_queue:
+            req = self.branch_queue[0]
+            if not req.done and req.pending > 0:
+                self._spawn_one(req)
+        else:
+            req = self._arrived()
+            if req is not None:
+                try:
+                    self._prefill(req)
+                except OutOfPagesError:
+                    self.request_queue.appendleft(req)
+
+    def _prefill(self, req: Request):
+        """Algorithm 1 PREFILL: one prefill, N branch descriptors."""
+        blocks, logits, ssm_state = self.engine.prefill(req.prompt)
+        req.prefix_blocks = blocks
+        req.last_logits = logits
+        req.ssm_state = ssm_state
+        req.meta = self.pruner.new_meta(self.cfg.n, self.cfg.m)
+        init_branches = (self._rebase_initial_width()
+                         if self.cfg.policy == "rebase" else self.cfg.n)
+        req.pending = init_branches
+        req.first_service = self.clock
+        self.clock += 1                   # prefill tick
+        self.branch_queue.append(req)
+
+    def _rebase_initial_width(self) -> int:
+        return max(self.cfg.n // 2, 1)
+
+    def _spawn_one(self, req: Request):
+        h = self.engine.spawn_branch(
+            req.request_id, req.prefix_blocks, req.last_logits,
+            req.ssm_state, len(req.prompt))
+        if h is None:
+            return
+        req.live[h.branch_id] = h
+        req.pending -= 1
+
+    # -------------------------------------------------------------- decoding
+    def _decode_window(self):
+        """Up to T decode steps; completions release slots eagerly."""
+        for _ in range(self.cfg.window):
+            if self.engine.num_active == 0:
+                break
+            try:
+                self.engine.decode_step()
+            except OutOfPagesError:
+                self._evict_longest()
+                continue
+            self.clock += 1
+            self._check_completions()
+            self.timeline.record(self.clock, self.engine.num_active,
+                                 self.engine.live_tokens())
+
+    def _evict_longest(self):
+        """Memory pressure: force-complete the longest live branch."""
+        live = [h for h in self.engine.slots if h is not None]
+        if not live:
+            return
+        victim = max(live, key=lambda h: h.blocks.length)
+        req = self.requests[victim.request_id]
+        self._complete_branch(req, victim, truncated=True)
+        self._maybe_finalize(req)
+
+    def _check_completions(self):
+        for h in list(self.engine.slots):
+            if h is None or h.done:
+                continue  # freed earlier this pass (sibling's early stop)
+            req = self.requests[h.request_id]
+            eos = h.tokens[-1] == self.engine.cfg.eos_id
+            full = len(h.tokens) >= self.cfg.max_tokens
+            if eos or full:
+                self._complete_branch(req, h, truncated=full and not eos)
+                self._maybe_finalize(req)
+
+    def _complete_branch(self, req: Request, h: BranchHandle,
+                         truncated: bool = False):
+        reward = self.prm.score(req, [h])[0]
+        self.pruner.on_completion(req.meta, reward)
+        req.completed.append((list(h.tokens), reward))
+        del req.live[h.branch_id]
+        self.engine.free_branch(h)
+
+    # ----------------------------------------------------------- bookkeeping
+    def _window_bookkeeping(self):
+        """Pruning / early-stop checks at window granularity (lines 23-41)."""
+        for req in list(self.requests.values()):
+            if req.done or req.meta is None:
+                continue
+            if self.cfg.policy == "rebase":
+                self._rebase_step(req)
+            elif req.live and self.pruner.cfg.enabled:
+                # suspended branches (slot == -1) hold no engine row; they
+                # are scored/pruned once resumed
+                handles = [h for h in req.live.values() if h.slot >= 0]
+                if not handles:
+                    continue
+                rewards = self.prm.score(req, handles)
+                by_id = {h.branch_id: r for h, r in zip(handles, rewards)}
+                for h, r in zip(handles, rewards):
+                    h.last_reward = r
+                for bid in self.pruner.select_prunes(req.meta, by_id):
+                    h = req.live.pop(bid)
+                    self.engine.free_branch(h)
+            self._maybe_finalize(req)
+
+    def _maybe_finalize(self, req: Request):
+        if req.done or req.meta is None:
+            return
+        live_or_pending = len(req.live) + req.pending
+        if req.meta.num_completed >= req.meta.m or live_or_pending == 0:
+            self._finalize(req)
+
+    def _finalize(self, req: Request):
+        """Early stop: terminate remaining branches, pick the final answer."""
+        for h in list(req.live.values()):
+            self.engine.free_branch(h)
+        req.live.clear()
+        req.pending = 0
+        if req.prefix_blocks is not None:
+            self.engine.release_prefix(req.prefix_blocks)
+            req.prefix_blocks = None
+        if self.cfg.policy == "sc":
+            req.final_answer = majority_vote(req.completed, self.answer_fn)
+        else:
+            req.final_answer = best_of_n(req.completed, self.answer_fn)
+        req.finish = self.clock
+
+    # ---------------------------------------------------------------- rebase
+    def _rebase_step(self, req: Request):
+        """Reward-guided tree search: cull weak leaves, fork strong ones."""
+        if not req.live:
+            return
+        handles = list(req.live.values())
+        rewards = np.asarray(self.prm.score(req, handles))
+        for h, r in zip(handles, rewards):
+            h.last_reward = float(r)
+        # cull leaves far below the best (soft budget reallocation)
+        if len(handles) > 1:
+            weights = np.exp((rewards - rewards.max()) / self.cfg.rebase_temp)
+            weights /= weights.sum()
+            cut = weights < 0.5 / len(handles)
+            for h, c in zip(handles, cut):
+                if c and len(req.live) > 1:
+                    req.meta.num_pruned += 1
+                    del req.live[h.branch_id]
+                    self.engine.free_branch(h)
+        # expand best leaves while under budget and slots are free
+        total = (len(req.live) + req.meta.num_completed
+                 + req.pending)
+        ranked = sorted(req.live.values(), key=lambda h: -h.last_reward)
+        for h in ranked:
+            if total >= self.cfg.n or not self.engine.free_slots:
+                break
+            child = self.engine.fork_branch(h)
+            if child is None:
+                break
+            req.live[child.branch_id] = child
+            total += 1
+
+    # ---------------------------------------------------------------- metrics
+    def metrics(self) -> Dict:
+        recs = []
+        for req in self.requests.values():
+            if not req.done:
+                continue
+            recs.append({
+                "request_id": req.request_id,
+                "arrival": req.arrival,
+                "first_service": req.first_service,
+                "finish": req.finish,
+                "e2e": req.finish - req.arrival,
+                "queue": (req.first_service - req.arrival
+                          if req.first_service >= 0 else None),
+                "inference": (req.finish - req.first_service
+                              if req.first_service >= 0 else None),
+                "num_completed": req.meta.num_completed if req.meta else 0,
+                "num_pruned": req.meta.num_pruned if req.meta else 0,
+                "answer": req.final_answer,
+                "response_lengths": [len(t) for t, _ in req.completed],
+            })
+        return {"requests": recs, "timeline": self.timeline,
+                "clock": self.clock,
+                "decode_steps": self.engine.decode_steps_executed}
+
+
+def percentile_latency(metrics: Dict, q: float, key: str = "e2e") -> float:
+    vals = [r[key] for r in metrics["requests"] if r[key] is not None]
+    if not vals:
+        return float("nan")
+    return float(np.percentile(vals, q))

@@ -1,0 +1,102 @@
+"""Logical activation-sharding constraints (MaxText-style).
+
+GSPMD propagation alone loses the batch sharding inside the scanned layer
+body (measured: attention scores materialized at *global* batch and
+all-reduced — 120 GB/device — see EXPERIMENTS.md §Perf iteration 0). Model
+code therefore pins activations to logical axes at layer boundaries via
+``constrain(x, name)``; the launcher binds logical names to mesh
+PartitionSpecs with ``activation_rules(...)`` for the duration of tracing.
+
+Outside any ``activation_rules`` context (CPU unit tests, the live serving
+engine) ``constrain`` is the identity — model code stays mesh-agnostic.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec
+
+_STATE = threading.local()
+
+
+def _current():
+    return getattr(_STATE, "rules", None)
+
+
+# --------------------------------------------------------------------------
+# Analysis mode: XLA's cost_analysis counts a while-loop body ONCE, not
+# times its trip count (measured: train flops identical for L=1,2,3). For
+# the roofline pass the dry-run therefore compiles small-L model variants
+# with EVERY lax.scan fully unrolled (layers, attention q-chunks, SSD
+# chunks) and extrapolates per-layer deltas. Model code asks scan_unroll()
+# for its `unroll=` argument.
+# --------------------------------------------------------------------------
+
+
+@contextlib.contextmanager
+def analysis_mode():
+    prev = getattr(_STATE, "analysis", False)
+    _STATE.analysis = True
+    try:
+        yield
+    finally:
+        _STATE.analysis = prev
+
+
+def scan_unroll():
+    return bool(getattr(_STATE, "analysis", False))
+
+
+def moe_dp_chunks() -> int:
+    """Perf-iteration lever (EXPERIMENTS.md §Perf iteration 2): number of
+    data shards for shard-local MoE dispatch. 0/1 = global dispatch
+    (baseline). Set through the activation_rules map under "_moe_dp"."""
+    cur = _current()
+    if cur is None:
+        return 0
+    return int(cur[1].get("_moe_dp", 0) or 0)
+
+
+@contextlib.contextmanager
+def activation_rules(mesh, rules: Dict[str, PartitionSpec]):
+    prev = _current()
+    _STATE.rules = (mesh, dict(rules))
+    try:
+        yield
+    finally:
+        _STATE.rules = prev
+
+
+def constrain(x, name: str):
+    cur = _current()
+    if cur is None:
+        return x
+    mesh, rules = cur
+    spec = rules.get(name)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def standard_rules(dp, tp="model", *, replicate_batch: bool = False
+                   ) -> Dict[str, PartitionSpec]:
+    """Logical-axis map used by the launchers.
+
+    dp: tuple of data-parallel axis names (('pod','data') or ('data',)).
+    ``replicate_batch``: long_500k mode (global_batch=1).
+    """
+    b = None if replicate_batch else dp
+    return {
+        "btd": PartitionSpec(b, None, None),   # token activations [B,S,D]
+        "bshd": PartitionSpec(b, None, tp, None),  # per-head q/k/v [B,S,H,hd]
+        "btv": PartitionSpec(b, None, tp),     # logits [B,S,V]
+        "bv": PartitionSpec(b, tp),            # decode logits [B,V]
+        "ecd": PartitionSpec(tp, None, None),  # MoE dispatch buffer [E,C,D]
+        "ecf": PartitionSpec(tp, None, None),  # MoE expert hidden [E,C,F]
+        # shard-local MoE dispatch (perf lever): group axis = data shards
+        "gtd": PartitionSpec(b, None, None),   # regrouped tokens [G,T/G,D]
+        "gecd": PartitionSpec(b, tp, None, None),  # local buffers [G,E,C,D]
+    }

@@ -1,0 +1,190 @@
+"""Sharding rules: parameter/optimizer/activation PartitionSpecs.
+
+Scheme (DESIGN.md §5):
+  * tp   = 'model' — tensor/expert parallel: attention heads, FFN hidden,
+           experts, vocab.
+  * fsdp = 'data'  — weight/optimizer-state sharding along the *other*
+           matrix dim (ZeRO-3-style); XLA SPMD inserts the per-layer
+           all-gathers during compute.
+  * batch axes: ('pod', 'data') when multi-pod, else ('data',).
+
+Dims that do not divide the mesh axis (e.g. kv_heads=2 over model=16,
+vocab=50280 over 16) rely on GSPMD's implicit padding — correct, with a
+memory/compute overhead that the roofline analysis surfaces and the perf
+iterations attack (EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+TP = "model"
+FSDP = "data"
+
+# (path regex, spec WITHOUT the leading layer-stack axis)
+_PARAM_RULES = [
+    # Vocab-parallel embeddings with d_model replicated: keeping the logits
+    # contraction dim local avoids GSPMD partial-summing [B,S,V]-sized
+    # tensors over 'data' (measured 410 GB/device of all-reduce with
+    # P(TP, FSDP) — see EXPERIMENTS.md §Perf iteration 0).
+    (r"embed/embedding$",        P(TP, None)),
+    (r"embed/lm_head$",          P(None, TP)),
+    (r"attn/w[qkv]$",            P(FSDP, TP)),
+    (r"attn/wo$",                P(TP, FSDP)),
+    (r"attn/b[qkv]$",            P(TP)),
+    (r"mlp/w_(up|gate)$",        P(FSDP, TP)),
+    (r"mlp/w_down$",             P(TP, FSDP)),
+    (r"mlp/b_up$",               P(TP)),
+    (r"mlp/b_down$",             P(None)),
+    (r"moe/router$",             P(FSDP, None)),
+    (r"moe/w_(up|gate)$",        P(TP, FSDP, None)),   # experts on tp
+    (r"moe/w_down$",             P(TP, None, FSDP)),
+    (r"mamba/in_proj$",          P(FSDP, TP)),
+    (r"mamba/out_proj$",         P(TP, FSDP)),
+    (r"mamba/conv_w$",           P(None, TP)),
+    (r"mamba/conv_b$",           P(TP)),
+    (r"mamba/norm/(scale|bias)$", P(TP)),
+    (r"mamba/(a_log|d_skip|dt_bias)$", P(None)),
+    (r"norm\d?/(scale|bias)$",   P(None)),
+    (r"final_norm/(scale|bias)$", P(None)),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_spec(path_str: str, ndim: int) -> P:
+    stacked = path_str.startswith("layers/")
+    for pat, spec in _PARAM_RULES:
+        if re.search(pat, path_str):
+            parts = tuple(spec)
+            if stacked:
+                parts = (None,) + parts
+            assert len(parts) <= ndim, (path_str, parts, ndim)
+            parts = parts + (None,) * (ndim - len(parts))
+            return P(*parts)
+    raise KeyError(f"no sharding rule for param {path_str!r} (ndim={ndim})")
+
+
+def param_pspecs(params_shape) -> Any:
+    """Map a params shape-pytree (from jax.eval_shape) to PartitionSpecs."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_spec(_path_str(path), leaf.ndim),
+        params_shape)
+
+
+def drop_fsdp(spec_tree) -> Any:
+    """Perf-iteration lever: pure-TP parameter layout for decode.
+
+    Replaces the FSDP ('data') axis in every param spec with replication,
+    leaving tensor/expert parallelism intact. Decode is memory-bound and
+    latency-critical: with 2D (FSDP+TP) weights, XLA all-gathers every
+    layer's weights over 'data' on every single-token step; pure TP keeps
+    weights resident. Only valid when params/TP fit HBM — callers check
+    via ``fits_tp`` (EXPERIMENTS.md §Perf iteration 1).
+    """
+    def fix(spec):
+        if not isinstance(spec, P):
+            return spec
+        out = []
+        for axes in spec:
+            if axes is None:
+                out.append(None)
+            elif isinstance(axes, tuple):
+                kept = tuple(a for a in axes if a != FSDP)
+                out.append(kept if kept else None)
+            else:
+                out.append(None if axes == FSDP else axes)
+        return P(*out)
+
+    return jax.tree.map(fix, spec_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def opt_pspecs(params_shape) -> Any:
+    ps = param_pspecs(params_shape)
+    return {"mu": ps, "nu": ps, "step": P()}
+
+
+def batch_axes(multi_pod: bool) -> Tuple[str, ...]:
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def cache_pspecs(cache_shape, dp, *, shard_seq: bool = False,
+                 tp_size: int = 16) -> Any:
+    """Decode-cache specs, shape-aware.
+
+    KV cache [L,B,S,kv,hd]: the 'model' axis lands on kv_heads when they
+    divide it (stablelm/gemma), otherwise on the *sequence* axis — the
+    flash-decode layout where each model-shard holds a KV slab and SPMD
+    merges partial softmax stats. ``shard_seq``: long_500k mode — batch=1 is
+    replicated and sequence takes the data axis too.
+
+    SSM states: conv channels and SSD head_dim take the model axis (SSD head
+    counts like 24 rarely divide it).
+    """
+    specs = {}
+    for key, leaf in cache_shape.items():
+        if key in ("k", "v"):          # [L, B, S, kv, hd]
+            kv = leaf.shape[3]
+            if kv % tp_size == 0:
+                specs[key] = (P(None, None, dp, TP, None) if shard_seq
+                              else P(None, dp, None, TP, None))
+            else:
+                seq_axes = (tuple(dp) + (TP,)) if shard_seq else TP
+                specs[key] = (P(None, None, seq_axes, None, None)
+                              if shard_seq
+                              else P(None, dp, TP, None, None))
+        elif key == "conv":            # [L, B, W-1, C]
+            specs[key] = P(None, None if shard_seq else dp, None, TP)
+        elif key == "ssd":             # [L, B, H, P, N]
+            specs[key] = P(None, None if shard_seq else dp, None, TP, None)
+        else:
+            raise KeyError(key)
+    return specs
+
+
+def sanitize_pspecs(spec_tree, shape_tree, mesh):
+    """Drop any sharded dim whose size does not divide its mesh axes.
+
+    pjit *input* shardings require exact divisibility (GSPMD pads only
+    intermediates); e.g. vocab=50280 or kv_heads=2 cannot take a 16-way
+    axis — those dims fall back to replication.
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def fix(spec, leaf):
+        if not isinstance(spec, P):
+            return spec
+        parts = list(spec) + [None] * (leaf.ndim - len(spec))
+        out = []
+        for dim, axes in enumerate(parts[:leaf.ndim]):
+            if axes is None:
+                out.append(None)
+                continue
+            names = axes if isinstance(axes, tuple) else (axes,)
+            total = 1
+            for n in names:
+                total *= sizes[n]
+            out.append(axes if leaf.shape[dim] % total == 0 else None)
+        return P(*out)
+
+    return jax.tree.map(fix, spec_tree, shape_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def shardings(mesh, tree_of_pspecs):
+    return jax.tree.map(
+        lambda spec: NamedSharding(mesh, spec), tree_of_pspecs,
+        is_leaf=lambda x: isinstance(x, P))

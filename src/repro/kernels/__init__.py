@@ -1,0 +1,13 @@
+# Compute hot-spots of SART's decode phase, TPU-adapted:
+#   paged_attention — flash-decode over block-table-indexed KV pages (the
+#                     TPU re-think of vLLM PagedAttention, which the paper
+#                     builds on).
+#   ssd_scan        — Mamba2 chunked SSD scan for the ssm/hybrid assigned
+#                     architectures.
+#   flash_prefill   — causal flash-attention forward for the prefill phase
+#                     (prefill latency gates queuing delay in Algorithm 1).
+from .flash_prefill.ops import flash_attention
+from .paged_attention.ops import paged_attention
+from .ssd_scan.ops import ssd
+
+__all__ = ["flash_attention", "paged_attention", "ssd"]

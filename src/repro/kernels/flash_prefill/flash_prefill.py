@@ -1,0 +1,103 @@
+"""Pallas TPU flash-attention (forward) for the prefill phase.
+
+SART's prefill cost is paid once per *request* (the N branches fork off the
+shared prefix KV), so prefill latency directly gates queuing delay when the
+branch queue runs dry (Algorithm 1 line 7). This kernel computes causal
+attention without materializing [Sq, Sk] scores:
+
+  grid = (batch, q_heads, q_blocks, kv_blocks)   — kv minor, sequential
+  VMEM scratch (m, l, acc) carries the online softmax across kv blocks;
+  causal block skipping via pl.when (a kv block strictly above the diagonal
+  contributes nothing and is not computed).
+
+KV is expected head-repeated to q_heads (GQA groups expanded), matching the
+jnp chunked path in `repro.models.attention`. MXU alignment: block sizes
+default to 256/512 with head_dim padded to 128 multiples in production
+configs. Validated against ref.py in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, out_ref, m_ref, l_ref, acc_ref, *,
+                  bq: int, bk: int, scale: float, causal: bool):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * bq
+    k_start = ki * bk
+    # causal: skip kv blocks strictly above the diagonal
+    live = (not causal) or (k_start <= q_start + bq - 1)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32) * scale   # [bq, hd]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)           # [bk, hd]
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [bq, bk]
+        if causal:
+            qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        out_ref[0, :, 0, :] = (acc_ref[...] / denom).astype(out_ref.dtype)
+
+
+def flash_prefill(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, block_q: int = 256,
+                  block_k: int = 256, interpret: bool = False) -> jax.Array:
+    """q, k, v: [B, S, H, hd] (KV already head-repeated). Returns [B,S,H,hd].
+
+    S must divide by the block sizes (callers pad; production shapes are
+    powers of two)."""
+    b, s, h, hd = q.shape
+    bq = min(block_q, s)
+    bk = min(block_k, s)
+    assert s % bq == 0 and s % bk == 0, (s, bq, bk)
+    scale = 1.0 / (hd ** 0.5)
+    grid = (b, h, s // bq, s // bk)
+
+    q_spec = pl.BlockSpec((1, bq, 1, hd), lambda bi, hi, qi, ki: (bi, qi, hi, 0))
+    k_spec = pl.BlockSpec((1, bk, 1, hd), lambda bi, hi, qi, ki: (bi, ki, hi, 0))
+
+    kernel = pl.pallas_call(
+        functools.partial(_flash_kernel, bq=bq, bk=bk, scale=scale,
+                          causal=causal),
+        grid=grid,
+        in_specs=[q_spec, k_spec, k_spec],
+        out_specs=q_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )
+    return kernel(q, k, v)

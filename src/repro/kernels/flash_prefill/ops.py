@@ -1,0 +1,36 @@
+"""Jit'd public wrapper for the flash prefill kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .flash_prefill import flash_prefill
+from .ref import flash_prefill_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "use_kernel"))
+def flash_attention(q, k, v, causal: bool = True, block_q: int = 256,
+                    block_k: int = 256, use_kernel: bool = True):
+    """Flash prefill attention; pads S to the block size."""
+    if not use_kernel:
+        return flash_prefill_ref(q, k, v, causal=causal)
+    s = q.shape[1]
+    bq = min(block_q, max(s, 8))
+    bk = min(block_k, max(s, 8))
+    pad = max((-s) % bq, (-s) % bk)
+    if pad:
+        # causal masking keeps real queries away from padded keys; padded
+        # query rows are sliced off below (padding is causal-only)
+        assert causal, "seq padding requires causal masking"
+        zp = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q, k, v = zp(q), zp(k), zp(v)
+    out = flash_prefill(q, k, v, causal=causal, block_q=bq, block_k=bk,
+                        interpret=not _on_tpu())
+    return out[:, :s]

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the flash prefill kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_prefill_ref(q, k, v, causal: bool = True):
+    """q, k, v: [B, S, H, hd] -> [B, S, H, hd] (full softmax attention)."""
+    hd = q.shape[-1]
+    s = q.shape[1]
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(
+        jnp.asarray(hd, jnp.float32))
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        scores = jnp.where(mask[None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w, v.astype(jnp.float32))
+    return out.astype(q.dtype)

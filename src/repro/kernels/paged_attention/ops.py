@@ -1,0 +1,28 @@
+"""Jit'd public wrapper for the paged flash-decode kernel.
+
+On CPU (this container) the Pallas kernel body executes via
+``interpret=True``; on TPU the same ``pallas_call`` compiles to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .paged_attention import paged_attention_decode
+from .ref import paged_attention_decode_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def paged_attention(q, k_pages, v_pages, block_tables, lengths,
+                    use_kernel: bool = True):
+    """Paged decode attention; kernel on TPU / interpret elsewhere."""
+    if not use_kernel:
+        return paged_attention_decode_ref(q, k_pages, v_pages, block_tables,
+                                          lengths)
+    return paged_attention_decode(q, k_pages, v_pages, block_tables, lengths,
+                                  interpret=not _on_tpu())

@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the paged flash-decode kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def paged_attention_decode_ref(q, k_pages, v_pages, block_tables, lengths):
+    """Shapes as in `paged_attention_decode`. Returns [B, q_heads, head_dim].
+
+    Gathers every sequence's pages into a contiguous [B, S, kv, hd] tensor and
+    runs masked softmax attention — O(B·S) memory, correctness-only.
+    """
+    batch, q_heads, head_dim = q.shape
+    kv_heads, _, page_size, _ = k_pages.shape
+    group = q_heads // kv_heads
+    pages_per_seq = block_tables.shape[1]
+    s_max = pages_per_seq * page_size
+
+    # gather pages -> [B, kv, S, hd]
+    def gather(pages):
+        g = pages[:, block_tables]            # [kv, B, pages_per_seq, P, hd]
+        g = jnp.moveaxis(g, 1, 0)             # [B, kv, pages, P, hd]
+        return g.reshape(batch, kv_heads, s_max, head_dim)
+
+    k = gather(k_pages)
+    v = gather(v_pages)
+
+    qg = q.reshape(batch, kv_heads, group, head_dim).astype(jnp.float32)
+    scores = jnp.einsum("bkgd,bksd->bkgs", qg, k.astype(jnp.float32))
+    scores = scores / jnp.sqrt(jnp.asarray(head_dim, jnp.float32))
+    mask = jnp.arange(s_max)[None, :] < lengths[:, None]   # [B, S]
+    scores = jnp.where(mask[:, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bksd->bkgd", w, v.astype(jnp.float32))
+    return out.reshape(batch, q_heads, head_dim).astype(q.dtype)

@@ -1,0 +1,28 @@
+"""Jit'd public wrapper for the SSD scan kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .ref import ssd_scan_ref
+from .ssd_scan import ssd_scan
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "use_kernel"))
+def ssd(x, dt, a, b, c, chunk: int = 64, use_kernel: bool = True):
+    """SSD scan; Pallas kernel on TPU / interpret elsewhere. Pads S to chunk."""
+    if not use_kernel:
+        return ssd_scan_ref(x, dt, a, b, c)
+    s = x.shape[1]
+    pad = (-s) % chunk
+    if pad:
+        zpad = lambda t: jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+        x, dt, b, c = zpad(x), zpad(dt), zpad(b), zpad(c)
+    y = ssd_scan(x, dt, a, b, c, chunk=chunk, interpret=not _on_tpu())
+    return y[:, :s]

@@ -1,0 +1,37 @@
+"""Pure-jnp oracles for the SSD scan kernel.
+
+Two references:
+  * ``ssd_scan_ref``       — naive per-token linear recurrence (ground truth).
+  * ``repro.models.mamba2.ssd_chunked`` — the chunked jnp implementation the
+    model uses; tests check kernel == chunked == naive.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(x, dt, a, b, c):
+    """Token-by-token SSM recurrence.
+
+    h_t = exp(dt_t a) h_{t-1} + dt_t B_t x_t ;  y_t = C_t · h_t
+    x: [B,S,H,P]; dt: [B,S,H]; a: [H]; b,c: [B,S,H,N] -> y [B,S,H,P].
+    """
+    bs, s, h, p = x.shape
+    n = b.shape[-1]
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp                      # [B,H,P], [B,H], [B,H,N]
+        decay = jnp.exp(dtt * a)                   # [B,H]
+        upd = jnp.einsum("bh,bhn,bhp->bhpn", dtt, bt, xt)
+        state = state * decay[:, :, None, None] + upd
+        y = jnp.einsum("bhpn,bhn->bhp", state, ct)
+        return state, y
+
+    init = jnp.zeros((bs, h, p, n), jnp.float32)
+    xs = (jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(b, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(c, 1, 0).astype(jnp.float32))
+    _, ys = jax.lax.scan(step, init, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)  # [B,S,H,P]

@@ -1,0 +1,104 @@
+"""Pallas TPU kernel for the Mamba2 SSD chunked scan.
+
+TPU adaptation of the SSD algorithm (arXiv:2405.21060): the GPU
+implementation leans on warp-level parallel prefix; on TPU we instead map the
+chunk axis onto the *sequential minor grid dimension* and carry the inter-
+chunk SSM state in VMEM scratch — the systolic analogue of the chunked
+recurrence. Per grid step the kernel computes, entirely in VMEM:
+
+  intra-chunk:  Y_diag = (C·Bᵀ ∘ L) · X        (two MXU matmuls, [Q,Q] gate)
+  state update: S      = decay·S + (dt·decay_to_end·B)ᵀ X
+  inter-chunk:  Y_off  = (C · S_prev) ∘ exp(cumsum dA)
+
+Grid = (batch, heads, num_chunks); chunk length Q and head_dim P are chosen
+so [Q,Q] + [Q,N] + [P,N] tiles fit VMEM with MXU-aligned (multiples of 128 in
+production; smaller in smoke shapes) dimensions.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(
+    x_ref,      # [1, Q, 1, P]
+    dt_ref,     # [1, Q, 1]
+    a_ref,      # [1]       (per-head decay rate, negative)
+    b_ref,      # [1, Q, 1, N]
+    c_ref,      # [1, Q, 1, N]
+    y_ref,      # [1, Q, 1, P]
+    state_ref,  # scratch [P, N] f32 — carried across the chunk grid dim
+    *,
+    chunk: int,
+):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)      # [Q, P]
+    dt = dt_ref[0, :, 0].astype(jnp.float32)        # [Q]
+    a = a_ref[0].astype(jnp.float32)                # scalar
+    b = b_ref[0, :, 0, :].astype(jnp.float32)       # [Q, N]
+    c = c_ref[0, :, 0, :].astype(jnp.float32)       # [Q, N]
+
+    da = dt * a                                     # [Q] log-decay
+    da_cs = jnp.cumsum(da)                          # [Q]
+
+    # ---- intra-chunk quadratic term ----------------------------------------
+    seg = da_cs[:, None] - da_cs[None, :]           # [Q, Q]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    lmat = jnp.where(ii >= jj, jnp.exp(seg), 0.0)
+    cb = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())))   # [Q, Q]
+    gate = cb * lmat * dt[None, :]
+    y = jax.lax.dot_general(gate, x, (((1,), (0,)), ((), ()))) # [Q, P]
+
+    # ---- inter-chunk contribution from carried state ------------------------
+    s_prev = state_ref[...]                          # [P, N]
+    y_off = jax.lax.dot_general(c, s_prev, (((1,), (1,)), ((), ())))  # [Q, P]
+    y = y + y_off * jnp.exp(da_cs)[:, None]
+
+    # ---- state update --------------------------------------------------------
+    decay_to_end = jnp.exp(da_cs[-1] - da_cs)        # [Q]
+    wb = b * (dt * decay_to_end)[:, None]            # [Q, N]
+    s_new = jax.lax.dot_general(x, wb, (((0,), (0,)), ((), ())))  # [P, N]
+    state_ref[...] = s_prev * jnp.exp(da_cs[-1]) + s_new
+
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+
+def ssd_scan(x, dt, a, b, c, *, chunk: int = 64,
+             interpret: bool = False):
+    """Chunked SSD scan (no initial state, returns outputs only).
+
+    x: [B, S, H, P]; dt: [B, S, H] (>0); a: [H] (<0);
+    b, c: [B, S, H, N] (head-broadcast). S must be a multiple of `chunk`
+    (caller pads). Returns y [B, S, H, P].
+    """
+    bs, s, h, p = x.shape
+    n = b.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    grid = (bs, h, nc)
+    x_spec = pl.BlockSpec((1, chunk, 1, p), lambda bi, hi, ci: (bi, ci, hi, 0))
+    dt_spec = pl.BlockSpec((1, chunk, 1), lambda bi, hi, ci: (bi, ci, hi))
+    a_spec = pl.BlockSpec((1,), lambda bi, hi, ci: (hi,))
+    bc_spec = pl.BlockSpec((1, chunk, 1, n), lambda bi, hi, ci: (bi, ci, hi, 0))
+
+    kernel = pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[x_spec, dt_spec, a_spec, bc_spec, bc_spec],
+        out_specs=x_spec,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )
+    return kernel(x, dt, a, b, c)

@@ -1,0 +1,3 @@
+from .paged import BranchBlocks, OutOfPagesError, PageAllocator
+
+__all__ = ["BranchBlocks", "OutOfPagesError", "PageAllocator"]

@@ -1,0 +1,151 @@
+"""Paged KV cache with ref-counted prefix sharing.
+
+This is SART's memory substrate (paper §4, last paragraph): all N branches of
+a request share the prompt-prefix KV pages; a branch's own generated pages
+are private. Pages are released *eagerly* when a branch is pruned,
+early-stopped, or completed; the shared prefix pages are released when the
+last sibling terminates. This eager release is what lets the scheduler batch
+more requests (the paper's queuing-delay reduction).
+
+Layout (TPU-friendly, consumed by ``repro.kernels.paged_attention``):
+  k_pages, v_pages: [num_layers, kv_heads, num_pages, page_size, head_dim]
+
+The allocator itself is plain Python (it runs on the host between jit'd decode
+steps, exactly like vLLM's block manager runs on the CPU between CUDA steps).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+
+class OutOfPagesError(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class BranchBlocks:
+    """Block table for one branch: shared prefix pages + private pages."""
+    pages: List[int]              # all pages, in sequence order
+    num_shared: int               # leading pages that are ref-shared
+    length: int = 0               # valid tokens
+
+    def copy(self) -> "BranchBlocks":
+        return BranchBlocks(list(self.pages), self.num_shared, self.length)
+
+
+class PageAllocator:
+    """Ref-counted page allocator (host-side)."""
+
+    def __init__(self, num_pages: int, page_size: int):
+        assert num_pages > 0 and page_size > 0
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self._free: List[int] = list(range(num_pages - 1, -1, -1))
+        self._refs: Dict[int, int] = {}
+
+    # ----------------------------------------------------------- primitives
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return self.num_pages - len(self._free)
+
+    def alloc(self) -> int:
+        if not self._free:
+            raise OutOfPagesError("KV pool exhausted")
+        pid = self._free.pop()
+        self._refs[pid] = 1
+        return pid
+
+    def incref(self, pid: int) -> None:
+        self._refs[pid] += 1
+
+    def decref(self, pid: int) -> None:
+        self._refs[pid] -= 1
+        assert self._refs[pid] >= 0, f"page {pid} double-free"
+        if self._refs[pid] == 0:
+            del self._refs[pid]
+            self._free.append(pid)
+
+    def refcount(self, pid: int) -> int:
+        return self._refs.get(pid, 0)
+
+    # ------------------------------------------------------- branch helpers
+    def pages_for(self, num_tokens: int) -> int:
+        return -(-num_tokens // self.page_size)
+
+    def alloc_prefix(self, num_tokens: int) -> BranchBlocks:
+        """Allocate pages for a freshly prefilled prompt."""
+        n = self.pages_for(max(num_tokens, 1))
+        if n > self.free_pages:
+            raise OutOfPagesError(f"need {n} pages, {self.free_pages} free")
+        pages = [self.alloc() for _ in range(n)]
+        return BranchBlocks(pages=pages, num_shared=0, length=num_tokens)
+
+    def fork(self, parent: BranchBlocks) -> BranchBlocks:
+        """Fork a branch off `parent`, sharing all its pages.
+
+        All parent pages (including a trailing partial page) become shared;
+        the engine performs copy-on-write when a branch needs to append into
+        a shared partial page (see ``needs_cow``).
+        """
+        for pid in parent.pages:
+            self.incref(pid)
+        return BranchBlocks(pages=list(parent.pages),
+                            num_shared=len(parent.pages),
+                            length=parent.length)
+
+    def needs_cow(self, b: BranchBlocks) -> bool:
+        """True if appending one token would write into a shared page."""
+        if b.length % self.page_size == 0:
+            return False  # next token opens a fresh page
+        last_idx = len(b.pages) - 1
+        return last_idx < b.num_shared and self.refcount(b.pages[last_idx]) > 1
+
+    def cow_last_page(self, b: BranchBlocks) -> tuple:
+        """Copy-on-write the trailing shared partial page.
+
+        Returns (old_pid, new_pid) so the engine can copy device data.
+        """
+        old = b.pages[-1]
+        new = self.alloc()
+        self.decref(old)
+        b.pages[-1] = new
+        b.num_shared = len(b.pages) - 1
+        return old, new
+
+    def append_token(self, b: BranchBlocks) -> Optional[tuple]:
+        """Account for one more token; allocates a page on boundary.
+
+        Returns (old_pid, new_pid) if a CoW copy is required, else None.
+        The caller must perform the device copy before the next decode step.
+        """
+        cow = None
+        if self.needs_cow(b):
+            cow = self.cow_last_page(b)
+        if b.length % self.page_size == 0:
+            if b.length // self.page_size == len(b.pages):
+                b.pages.append(self.alloc())
+        b.length += 1
+        return cow
+
+    def release(self, b: BranchBlocks) -> None:
+        """Eagerly release a terminated branch's pages (shared pages only
+        drop a reference; freed once all siblings terminate)."""
+        for pid in b.pages:
+            self.decref(pid)
+        b.pages = []
+        b.length = 0
+        b.num_shared = 0
+
+    # ------------------------------------------------------------ invariants
+    def check_invariants(self) -> None:
+        live = set(self._refs)
+        free = set(self._free)
+        assert not (live & free), "page both live and free"
+        assert len(free) == len(self._free), "duplicate free pages"
+        assert live | free == set(range(self.num_pages)), "page leak"
+        assert all(r > 0 for r in self._refs.values())

@@ -1,0 +1,253 @@
+# The dry-run (and ONLY the dry-run) needs 512 placeholder devices so
+# jax.make_mesh can build the production meshes. Must be set before ANY
+# other import — jax locks the device count on first init.
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: .lower().compile() every (arch x shape x mesh) combo.
+
+Proves the distribution config is coherent without real hardware: sharding
+mismatches, compile-time OOM and unsupported collectives all surface here as
+hard failures. Per combo we record:
+  * memory_analysis()  — per-device argument/output/temp bytes (fits check)
+  * cost_analysis()    — per-device HLO FLOPs and bytes accessed
+  * collective bytes   — parsed from the compiled HLO, by collective kind
+into ``experiments/dryrun/<arch>__<shape>__<mesh>.json``, which §Roofline
+(benchmarks/roofline.py) consumes.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-0.5b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all [--mesh single|multi|both] [--subprocess]
+"""
+import argparse
+import json
+import re
+import subprocess
+import sys
+import time
+import traceback
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Sum bytes over every `dtype[d0,d1,...]` in an HLO shape string."""
+    total = 0
+    for m in re.finditer(r"(\w+)\[([0-9,]*)\]", shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Per-kind byte totals of collective ops in the compiled HLO (per
+    device: SPMD module shapes are already per-shard)."""
+    out = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    pat = re.compile(
+        r"=\s+((?:\([^)]*\))|(?:\S+))\s+(" + "|".join(_COLLECTIVES) +
+        r")(?:-start)?\(")
+    for line in hlo_text.splitlines():
+        m = pat.search(line)
+        if not m:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += _shape_bytes(shape_str)
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    out["total_count"] = sum(v["count"] for k, v in out.items()
+                             if isinstance(v, dict))
+    return out
+
+
+def _measure(compiled) -> dict:
+    ca = compiled.cost_analysis() or {}
+    colls = parse_collectives(compiled.as_text())
+    out = {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "transcendentals": float(ca.get("transcendentals", 0.0)),
+    }
+    for kind in _COLLECTIVES:
+        out[f"coll_{kind}"] = float(colls[kind]["bytes"])
+    out["coll_total"] = float(colls["total_bytes"])
+    return out
+
+
+def run_one(arch: str, shape_name: str, mesh_kind: str,
+            save_hlo: bool = False, param_mode: str = "2d",
+            tag: str = "", moe_dp: int = 0) -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    from ..configs import get_config
+    from .mesh import make_production_mesh
+    from .shapes import SHAPES, adapt_config
+    from .steps import build_step
+
+    t0 = time.time()
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    jitted, example_args = build_step(cfg, shape, mesh,
+                                      param_mode=param_mode, moe_dp=moe_dp)
+
+    lowered = jitted.lower(*example_args)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    ca = compiled.cost_analysis() or {}
+    ma = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    colls = parse_collectives(hlo)
+
+    # --- roofline metrics: XLA counts while-loop bodies once, so compile
+    # fully-unrolled L=1 and L=2 analysis variants and extrapolate the
+    # per-layer delta to the real depth.
+    extrap = {}
+    try:
+        m = {}
+        for l in (1, 2):
+            jit_l, args_l = build_step(cfg.replace(num_layers=l), shape,
+                                       mesh, analysis=True,
+                                       param_mode=param_mode, moe_dp=moe_dp)
+            m[l] = _measure(jit_l.lower(*args_l).compile())
+        L = cfg.num_layers
+        for key in m[1]:
+            body = m[2][key] - m[1][key]
+            extrap[key] = m[1][key] + (L - 1) * body
+        extrap["per_layer_flops"] = m[2]["flops"] - m[1]["flops"]
+        extrap["ok"] = True
+    except Exception as e:  # keep the lowering proof even if analysis fails
+        extrap = {"ok": False, "error": f"{type(e).__name__}: {e}"}
+
+    acfg = adapt_config(cfg, shape)
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_kind,
+        "param_mode": param_mode,
+        "moe_dp": moe_dp,
+        "tag": tag,
+        "mesh_shape": list(mesh.devices.shape),
+        "num_devices": int(mesh.devices.size),
+        "kind": shape.kind,
+        "seq_len": shape.seq_len,
+        "global_batch": shape.global_batch,
+        "params_total": acfg.param_count(),
+        "params_active": acfg.active_param_count(),
+        "sliding_window_adapted": bool(
+            acfg.sliding_window and not cfg.sliding_window),
+        "flops_per_device": float(ca.get("flops", 0.0)),
+        "bytes_per_device": float(ca.get("bytes accessed", 0.0)),
+        "transcendentals": float(ca.get("transcendentals", 0.0)),
+        "extrapolated": extrap,   # loop-corrected per-device roofline terms
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_bytes": ma.peak_memory_in_bytes,
+        },
+        "collectives": colls,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+    }
+    os.makedirs(OUT_DIR, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    path = os.path.join(OUT_DIR,
+                        f"{arch}__{shape_name}__{mesh_kind}{suffix}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    if save_hlo:
+        with open(path.replace(".json", ".hlo.txt"), "w") as f:
+            f.write(hlo)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=[None, "train_4k",
+                    "prefill_32k", "decode_32k", "long_500k"])
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true",
+                    help="every assigned arch x shape")
+    ap.add_argument("--subprocess", action="store_true",
+                    help="isolate each combo in a fresh process")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--param-mode", default="2d", choices=["2d", "tp"])
+    ap.add_argument("--moe-dp", type=int, default=0)
+    ap.add_argument("--tag", default="",
+                    help="suffix for the output json (perf variants)")
+    args = ap.parse_args()
+
+    from ..configs import ASSIGNED
+    archs = ASSIGNED if (args.all or args.arch is None) else [args.arch]
+    shapes = (["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+              if (args.all or args.shape is None) else [args.shape])
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mesh in meshes:
+                tag = f"{arch} x {shape} x {mesh}"
+                out = os.path.join(OUT_DIR, f"{arch}__{shape}__{mesh}.json")
+                if args.skip_existing and os.path.exists(out):
+                    print(f"[skip] {tag}", flush=True)
+                    continue
+                if args.subprocess:
+                    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                           "--arch", arch, "--shape", shape, "--mesh", mesh]
+                    if args.save_hlo:
+                        cmd.append("--save-hlo")
+                    r = subprocess.run(cmd, capture_output=True, text=True)
+                    ok = r.returncode == 0
+                    tail = (r.stdout + r.stderr).strip().splitlines()
+                    print(f"[{'ok' if ok else 'FAIL'}] {tag}"
+                          + ("" if ok else f"  {tail[-1] if tail else ''}"),
+                          flush=True)
+                    if not ok:
+                        failures.append(tag)
+                else:
+                    try:
+                        rec = run_one(arch, shape, mesh,
+                                      save_hlo=args.save_hlo,
+                                      param_mode=args.param_mode,
+                                      tag=args.tag, moe_dp=args.moe_dp)
+                        print(f"[ok] {tag}: "
+                              f"flops/dev={rec['flops_per_device']:.3e} "
+                              f"coll={rec['collectives']['total_bytes']:.3e}B "
+                              f"peak={rec['memory']['peak_bytes']/2**30:.2f}GiB "
+                              f"compile={rec['compile_s']}s", flush=True)
+                    except Exception:
+                        traceback.print_exc()
+                        failures.append(tag)
+                        print(f"[FAIL] {tag}", flush=True)
+    if failures:
+        print(f"{len(failures)} FAILURES: {failures}", flush=True)
+        sys.exit(1)
+    print("dry-run: all combinations lowered and compiled", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,125 @@
+"""Serving launcher: SART (or a baseline policy) on the live engine.
+
+    PYTHONPATH=src python -m repro.launch.serve --ckpt checkpoints/reasoner \
+        --policy sart --n 8 --requests 16 --rate 0.2
+
+Runs the trained tiny reasoner behind the Algorithm-1 scheduler with the
+requested policy, reports accuracy and step-latency percentiles. With no
+checkpoint, falls back to an untrained model (scheduling behaviour only).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Optional, Tuple
+
+
+def load_reasoner(ckpt_dir: Optional[str]):
+    """Returns (model, params, prm_head_params_or_None)."""
+    import jax
+
+    from ..data import tokenizer as tk
+    from ..models import Model, ModelConfig
+    from ..training import load_checkpoint
+
+    if ckpt_dir and os.path.exists(os.path.join(ckpt_dir, "config.json")):
+        with open(os.path.join(ckpt_dir, "config.json")) as f:
+            c = json.load(f)
+        cfg = ModelConfig(
+            name="tiny-reasoner", arch_type="dense",
+            num_layers=c["num_layers"], d_model=c["d_model"],
+            vocab_size=c["vocab_size"], num_heads=c["num_heads"],
+            num_kv_heads=c["num_kv_heads"], d_ff=c["d_ff"], max_seq_len=512)
+        model = Model(cfg)
+        like = jax.eval_shape(
+            lambda: model.init_params(jax.random.PRNGKey(0)))
+        params = load_checkpoint(os.path.join(ckpt_dir, "lm.npz"))
+        prm = None
+        prm_path = os.path.join(ckpt_dir, "prm.npz")
+        if os.path.exists(prm_path):
+            prm = load_checkpoint(prm_path)
+        return model, params, prm
+    cfg = ModelConfig(name="untrained", arch_type="dense", num_layers=2,
+                      d_model=128, vocab_size=tk.VOCAB_SIZE, num_heads=4,
+                      num_kv_heads=2, d_ff=512, max_seq_len=512)
+    model = Model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return model, params, None
+
+
+def serve(policy: str, n: int, num_requests: int, rate_gap: int,
+          ckpt: Optional[str], prm_kind: str, window: int, max_tokens: int,
+          max_slots: int, seed: int, temperature: float) -> dict:
+    import numpy as np
+
+    from ..core import OraclePRM, RewardHeadPRM, Scheduler, SchedulerConfig
+    from ..core.scheduler import percentile_latency
+    from ..data import tasks
+    from ..data import tokenizer as tk
+    from ..serving import Engine, EngineConfig, SamplingParams
+
+    model, params, prm_head = load_reasoner(ckpt)
+    engine = Engine(model, params, EngineConfig(
+        page_size=16, num_pages=4096, max_slots=max_slots,
+        max_pages_per_branch=32, eos_id=tk.EOS,
+        sampling=SamplingParams(temperature=temperature, top_p=0.95),
+        seed=seed), prm_params=prm_head)
+    if prm_kind == "head" and prm_head is not None:
+        prm = RewardHeadPRM(engine)
+    else:
+        prm = OraclePRM(tasks.oracle_grader, noise=0.05, seed=seed + 1)
+
+    sch = Scheduler(engine, prm,
+                    SchedulerConfig(policy=policy, n=n, window=window,
+                                    max_tokens=max_tokens),
+                    answer_fn=tasks.extract_answer)
+    rng = np.random.default_rng(seed + 2)
+    problems = []
+    for i in range(num_requests):
+        prob = tasks.gen_problem(rng)
+        problems.append(prob)
+        sch.submit(prob.prompt_tokens(), payload=prob, arrival=i * rate_gap)
+    metrics = sch.run(max_steps=2_000_000)
+    correct = sum(
+        1 for r, prob in zip(metrics["requests"], problems)
+        if tasks.is_correct(prob, r["answer"]))
+    acc = correct / max(num_requests, 1)
+    out = {
+        "policy": policy, "n": n, "accuracy": acc,
+        "p50": percentile_latency(metrics, 50),
+        "p90": percentile_latency(metrics, 90),
+        "p97": percentile_latency(metrics, 97),
+        "p99": percentile_latency(metrics, 99),
+        "queue_p50": percentile_latency(metrics, 50, "queue"),
+        "decode_steps": metrics["decode_steps"],
+        "clock": metrics["clock"],
+    }
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--policy", default="sart",
+                    choices=["vanilla", "sc", "sart", "sart_noprune",
+                             "rebase"])
+    ap.add_argument("--n", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--rate-gap", type=int, default=8,
+                    help="decode steps between arrivals")
+    ap.add_argument("--ckpt", default="checkpoints/reasoner")
+    ap.add_argument("--prm", default="oracle", choices=["oracle", "head"])
+    ap.add_argument("--window", type=int, default=8)
+    ap.add_argument("--max-tokens", type=int, default=96)
+    ap.add_argument("--slots", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.9)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    out = serve(args.policy, args.n, args.requests, args.rate_gap,
+                args.ckpt, args.prm, args.window, args.max_tokens,
+                args.slots, args.seed, args.temperature)
+    print(json.dumps(out, indent=2))
+
+
+if __name__ == "__main__":
+    main()

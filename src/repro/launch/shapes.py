@@ -1,0 +1,81 @@
+"""Assigned input shapes and ShapeDtypeStruct input specs per (arch, shape).
+
+Decode shapes lower ``serve_step`` (ONE new token against a seq_len cache);
+``train_4k`` lowers ``train_step``; ``prefill_32k`` lowers ``prefill_step``.
+
+``long_500k`` requires sub-quadratic attention state: ssm/hybrid run
+natively (O(1) SSM state; hymba's attention is already sliding-window); for
+attention archs without a window the config is adapted to sliding-window
+attention (window 8192, ring-buffer KV) — the carve-out documented in
+DESIGN.md §Arch-applicability.
+
+VLM/audio backbones: ``train``/``prefill`` consume precomputed frontend
+embeddings (``embeds``) per the assignment's frontend-stub carve-out; decode
+consumes generated token ids.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..models import Model, ModelConfig
+
+LONG_WINDOW = 8192
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                  # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def adapt_config(cfg: ModelConfig, shape: ShapeSpec) -> ModelConfig:
+    """Shape-specific config adaptation (long-context window carve-out)."""
+    cfg = cfg.replace(max_seq_len=max(cfg.max_seq_len, shape.seq_len))
+    if shape.name == "long_500k" and cfg.uses_attention \
+            and not cfg.sliding_window:
+        cfg = cfg.replace(sliding_window=LONG_WINDOW)
+    return cfg
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, dtype=jnp.bfloat16
+                ) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input — weak-type-correct,
+    shardable, no device allocation."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        specs = {"labels": sds((b, s), i32), "mask": sds((b, s), jnp.float32)}
+        if cfg.multimodal:
+            specs["embeds"] = sds((b, s, cfg.d_model), dtype)
+            specs["tokens"] = None
+        else:
+            specs["tokens"] = sds((b, s), i32)
+            specs["embeds"] = None
+        return specs
+    if shape.kind == "prefill":
+        if cfg.multimodal:
+            return {"embeds": sds((b, s, cfg.d_model), dtype), "tokens": None}
+        return {"tokens": sds((b, s), i32), "embeds": None}
+    # decode: one token against a seq_len-deep cache
+    model = Model(cfg, dtype=dtype)
+    cache_shape = jax.eval_shape(lambda: model.init_cache(b, s))
+    return {
+        "tokens": sds((b,), i32),
+        "positions": sds((b,), i32),
+        "cache": cache_shape,
+    }

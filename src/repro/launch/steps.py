@@ -1,0 +1,179 @@
+"""Jittable step functions (train / prefill / serve) + their shardings.
+
+These are the functions the multi-pod dry-run lowers and the launchers run.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..distributed.logical import (activation_rules, analysis_mode,
+                                   standard_rules)
+from ..distributed.sharding import (TP, batch_axes, cache_pspecs, drop_fsdp,
+                                    opt_pspecs, param_pspecs,
+                                    sanitize_pspecs, shardings)
+from ..models import Model, ModelConfig, cross_entropy_loss
+from ..training.optimizer import AdamWConfig, adamw_update
+from .shapes import ShapeSpec, adapt_config, input_specs
+
+
+def make_train_step_fn(model: Model, opt_cfg: AdamWConfig):
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            logits, aux = model.forward(
+                p, tokens=batch.get("tokens"), embeds=batch.get("embeds"))
+            loss = cross_entropy_loss(logits, batch["labels"], batch["mask"])
+            return loss + aux, {"loss": loss, "aux_loss": aux}
+
+        (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params, opt_state, gnorm = adamw_update(opt_cfg, params, grads,
+                                                opt_state)
+        metrics["grad_norm"] = gnorm
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step_fn(model: Model, max_len: int):
+    def prefill_step(params, batch):
+        logits, cache = model.prefill(
+            params, tokens=batch.get("tokens"), embeds=batch.get("embeds"),
+            max_len=max_len)
+        return logits, cache
+
+    return prefill_step
+
+
+def make_serve_step_fn(model: Model):
+    def serve_step(params, cache, tokens, positions):
+        logits, cache, hidden = model.decode_step(params, tokens, cache,
+                                                  positions)
+        return logits, cache, hidden
+
+    return serve_step
+
+
+# --------------------------------------------------------------------- dryrun
+
+
+def build_step(arch_cfg: ModelConfig, shape: ShapeSpec, mesh,
+               dtype=jnp.bfloat16, analysis: bool = False,
+               param_mode: str = "2d", moe_dp: int = 0):
+    """Returns (jitted_fn, example_args) ready to .lower(*example_args).
+
+    ``example_args`` are ShapeDtypeStructs — nothing is allocated.
+    ``analysis=True`` fully unrolls every scan so cost_analysis counts all
+    iterations (XLA counts a while body once); used with small num_layers
+    variants by the dry-run's roofline extrapolation.
+    ``param_mode``: "2d" (baseline, FSDP+TP) or "tp" (decode perf lever:
+    weights replicated over 'data', sharded only on 'model').
+    """
+    multi_pod = "pod" in mesh.axis_names
+    dp_axes_t = batch_axes(multi_pod)
+    replicate_batch = shape.kind == "decode" and shape.global_batch == 1
+    rules = standard_rules(dp_axes_t, replicate_batch=replicate_batch)
+    if moe_dp:
+        rules["_moe_dp"] = moe_dp   # shard-local MoE dispatch (perf lever)
+
+    def with_rules(fn):
+        @functools.wraps(fn)
+        def wrapped(*args, **kw):
+            with activation_rules(mesh, rules):
+                if analysis:
+                    with analysis_mode():
+                        return fn(*args, **kw)
+                return fn(*args, **kw)
+        return wrapped
+
+    cfg = adapt_config(arch_cfg, shape)
+    model = Model(cfg, dtype=dtype)
+    pshape = jax.eval_shape(
+        lambda: model.init_params(jax.random.PRNGKey(0)))
+    pshape = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, dtype
+                                       if l.dtype == jnp.float32 else l.dtype),
+        pshape)
+    pspecs = sanitize_pspecs(param_pspecs(pshape), pshape, mesh)
+    if param_mode == "tp":
+        assert shape.kind == "decode", "pure-TP layout is a decode lever"
+        pspecs = drop_fsdp(pspecs)
+    tp_size = dict(zip(mesh.axis_names, mesh.devices.shape))[TP]
+    sh = lambda tree: shardings(mesh, tree)
+    specs = input_specs(cfg, shape, dtype=dtype)
+
+    if shape.kind == "train":
+        opt_cfg = AdamWConfig()
+        fn = with_rules(make_train_step_fn(model, opt_cfg))
+        opt_shape = {
+            "mu": jax.tree.map(
+                lambda l: jax.ShapeDtypeStruct(l.shape, jnp.float32), pshape),
+            "nu": jax.tree.map(
+                lambda l: jax.ShapeDtypeStruct(l.shape, jnp.float32), pshape),
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+        ospecs = {"mu": pspecs, "nu": pspecs, "step": P()}
+        batch_shape = {k: v for k, v in specs.items() if v is not None}
+        bspecs = {}
+        for k, v in batch_shape.items():
+            bspecs[k] = P(*( (batch_axes(multi_pod),) +
+                             (None,) * (len(v.shape) - 1) ))
+        bspecs = sanitize_pspecs(bspecs, batch_shape, mesh)
+        jitted = jax.jit(
+            fn,
+            in_shardings=(sh(pspecs), sh(ospecs), sh(bspecs)),
+            out_shardings=(sh(pspecs), sh(ospecs),
+                           sh({"loss": P(), "aux_loss": P(),
+                               "grad_norm": P()})),
+            donate_argnums=(0, 1),
+        )
+        return jitted, (pshape, opt_shape, batch_shape)
+
+    if shape.kind == "prefill":
+        fn = with_rules(make_prefill_step_fn(model, shape.seq_len))
+        batch_shape = {k: v for k, v in specs.items() if v is not None}
+        bspecs = {k: P(*( (batch_axes(multi_pod),) +
+                          (None,) * (len(v.shape) - 1) ))
+                  for k, v in batch_shape.items()}
+        bspecs = sanitize_pspecs(bspecs, batch_shape, mesh)
+        cache_shape = jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch, shape.seq_len))
+        cspecs = sanitize_pspecs(
+            cache_pspecs(cache_shape, batch_axes(multi_pod),
+                         tp_size=tp_size), cache_shape, mesh)
+        logit_shape = jax.ShapeDtypeStruct(
+            (shape.global_batch, cfg.vocab_size), dtype)
+        lspec = sanitize_pspecs(P(batch_axes(multi_pod), TP), logit_shape,
+                                mesh)
+        jitted = jax.jit(
+            fn,
+            in_shardings=(sh(pspecs), sh(bspecs)),
+            out_shardings=(sh(lspec), sh(cspecs)),
+        )
+        return jitted, (pshape, batch_shape)
+
+    # decode
+    fn = with_rules(make_serve_step_fn(model))
+    shard_seq = shape.global_batch == 1          # long_500k
+    dp_axes = batch_axes(multi_pod)
+    cache_shape = specs["cache"]
+    cspecs = sanitize_pspecs(
+        cache_pspecs(cache_shape, dp_axes, shard_seq=shard_seq,
+                     tp_size=tp_size), cache_shape, mesh)
+    tok_spec = P(None) if shard_seq else P(dp_axes)
+    logit_shape = jax.ShapeDtypeStruct(
+        (shape.global_batch, cfg.vocab_size), dtype)
+    lspec = sanitize_pspecs(P(None if shard_seq else dp_axes, TP),
+                            logit_shape, mesh)
+    jitted = jax.jit(
+        fn,
+        in_shardings=(sh(pspecs), sh(cspecs), sh(tok_spec), sh(tok_spec)),
+        out_shardings=(sh(lspec),
+                       sh(cspecs),
+                       sh(P(None if shard_seq else dp_axes, None))),
+        donate_argnums=(1,),
+    )
+    return jitted, (pshape, cache_shape, specs["tokens"], specs["positions"])

@@ -1,0 +1,118 @@
+"""Training launcher.
+
+Two modes:
+  * CPU end-to-end (default): train the tiny reasoner LM (+ PRM head) on the
+    synthetic CoT task — the model the live serving experiments use.
+      PYTHONPATH=src python -m repro.launch.train --steps 400 \
+          --out checkpoints/reasoner
+  * Smoke an assigned architecture (reduced variant, one step on CPU):
+      PYTHONPATH=src python -m repro.launch.train --arch dbrx-132b --smoke
+
+The production-mesh path for the full configs is exercised via
+``repro.launch.dryrun`` (compile-only on this CPU container).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+
+def train_reasoner(steps: int, prm_steps: int, out_dir: str, d_model: int,
+                   num_layers: int, seed: int):
+    import jax
+
+    from ..data import DataConfig, padded_batches, prm_batches
+    from ..data import tokenizer as tk
+    from ..models import Model, ModelConfig
+    from ..training import (AdamWConfig, save_checkpoint, train_lm,
+                            train_prm_head)
+
+    cfg = ModelConfig(
+        name="tiny-reasoner", arch_type="dense", num_layers=num_layers,
+        d_model=d_model, vocab_size=tk.VOCAB_SIZE,
+        num_heads=max(d_model // 32, 2), num_kv_heads=max(d_model // 64, 1),
+        d_ff=d_model * 4, max_seq_len=512)
+    model = Model(cfg)
+    data_cfg = DataConfig(batch_size=32, seq_len=160, seed=seed)
+
+    print(f"[train] {cfg.name}: L={cfg.num_layers} d={cfg.d_model} "
+          f"({cfg.param_count()/1e6:.2f}M params), {steps} steps")
+    params, hist = train_lm(
+        model, padded_batches(data_cfg), steps,
+        AdamWConfig(lr=1e-3, warmup_steps=50, total_steps=steps),
+        seed=seed, logger=lambda r: print(f"  step {r['step']:4d} "
+                                          f"loss {r['loss']:.4f}"))
+
+    print(f"[train] PRM head: {prm_steps} steps")
+    head, phist = train_prm_head(
+        model, params, prm_batches(data_cfg), prm_steps, seed=seed,
+        logger=lambda r: print(f"  step {r['step']:4d} "
+                               f"prm_loss {r['prm_loss']:.4f}"))
+
+    os.makedirs(out_dir, exist_ok=True)
+    save_checkpoint(os.path.join(out_dir, "lm.npz"), params)
+    save_checkpoint(os.path.join(out_dir, "prm.npz"), head)
+    with open(os.path.join(out_dir, "config.json"), "w") as f:
+        json.dump({"d_model": cfg.d_model, "num_layers": cfg.num_layers,
+                   "num_heads": cfg.num_heads,
+                   "num_kv_heads": cfg.num_kv_heads, "d_ff": cfg.d_ff,
+                   "vocab_size": cfg.vocab_size,
+                   "history": hist, "prm_history": phist}, f)
+    print(f"[train] saved to {out_dir}")
+    return params, head
+
+
+def smoke_arch(arch: str, seed: int = 0):
+    """One forward + one train step of the reduced family variant on CPU."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from ..configs import smoke
+    from ..models import Model
+    from ..training import AdamWConfig, init_opt_state, make_train_step
+
+    cfg = smoke(arch)
+    model = Model(cfg)
+    params = model.init_params(jax.random.PRNGKey(seed))
+    b, s = 2, 64
+    rng = np.random.default_rng(seed)
+    batch = {
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32),
+        "mask": jnp.ones((b, s), jnp.float32),
+    }
+    if cfg.multimodal:
+        batch["embeds"] = jnp.asarray(rng.normal(size=(b, s, cfg.d_model)),
+                                      jnp.float32)
+    else:
+        batch["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+    step = jax.jit(make_train_step(model, AdamWConfig(total_steps=10)))
+    opt = init_opt_state(params)
+    params, opt, metrics = step(params, opt, batch)
+    loss = float(metrics["loss"])
+    assert jnp.isfinite(loss), f"{arch}: non-finite loss"
+    print(f"[smoke] {arch}: train step ok, loss={loss:.4f}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="assigned arch to smoke")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--prm-steps", type=int, default=200)
+    ap.add_argument("--out", default="checkpoints/reasoner")
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    if args.arch:
+        smoke_arch(args.arch, args.seed)
+    else:
+        train_reasoner(args.steps, args.prm_steps, args.out, args.d_model,
+                       args.layers, args.seed)
+
+
+if __name__ == "__main__":
+    main()

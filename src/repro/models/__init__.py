@@ -1,0 +1,4 @@
+from .config import ModelConfig, smoke_variant
+from .model import Model, cross_entropy_loss
+
+__all__ = ["ModelConfig", "smoke_variant", "Model", "cross_entropy_loss"]

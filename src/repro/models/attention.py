@@ -1,0 +1,217 @@
+"""GQA attention: training (full/sliding-window causal), prefill and decode.
+
+Decode path operates against a dense KV cache `[B, S_max, KV, hd]` (the
+serving engine's paged variant lives in `repro.kernels.paged_attention`; the
+dense variant here is what the multi-pod dry-run lowers, with batch sharded on
+'data', heads on 'model', and — for long_500k — sequence on 'data').
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.logical import constrain, scan_unroll
+from .config import ModelConfig
+from .layers import apply_mrope, apply_rope, dense_init
+
+NEG_INF = -1e30
+
+# Full-sequence attention materializes [Sq, Sk] scores; beyond this length
+# the train/prefill paths switch to the chunked (flash-style) formulation,
+# which keeps the transient at [q_chunk, Sk] per head. TPU-native: XLA does
+# not auto-flash, so the blocking is done at the JAX level.
+CHUNKED_THRESHOLD = 2048
+Q_CHUNK = 512
+
+
+def init_attention(key, cfg: ModelConfig, dtype=jnp.float32):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, kv = cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, h * hd), 0, dtype),
+        "wk": dense_init(ks[1], (d, kv * hd), 0, dtype),
+        "wv": dense_init(ks[2], (d, kv * hd), 0, dtype),
+        "wo": dense_init(ks[3], (h * hd, d), 0, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((kv * hd,), dtype)
+        p["bv"] = jnp.zeros((kv * hd,), dtype)
+    return p
+
+
+def _project_qkv(cfg: ModelConfig, p, x):
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, cfg.num_heads, hd)
+    k = k.reshape(b, s, cfg.num_kv_heads, hd)
+    v = v.reshape(b, s, cfg.num_kv_heads, hd)
+    return q, k, v
+
+
+def _rotate(cfg: ModelConfig, q, k, positions):
+    if cfg.pos_embedding == "rope":
+        q = apply_rope(cfg, q, positions)
+        k = apply_rope(cfg, k, positions)
+    elif cfg.pos_embedding == "mrope":
+        q = apply_mrope(cfg, q, positions)
+        k = apply_mrope(cfg, k, positions)
+    return q, k
+
+
+def _attend(cfg: ModelConfig, q, k, v, mask):
+    """q: [B,Sq,H,hd]; k,v: [B,Sk,KV,hd]; mask: [B,1,Sq,Sk] bool (True=keep)."""
+    hd = q.shape[-1]
+    groups = cfg.num_heads // cfg.num_kv_heads
+    b, sq, h, _ = q.shape
+    sk = k.shape[1]
+    q = q.reshape(b, sq, cfg.num_kv_heads, groups, hd)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", q, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    if cfg.attn_logit_softcap:
+        c = cfg.attn_logit_softcap
+        scores = jnp.tanh(scores / c) * c
+    scores = jnp.where(mask[:, :, None] if mask.ndim == 4 else mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, v)
+    return out.reshape(b, sq, h * hd)
+
+
+def _attend_chunked(cfg: ModelConfig, q, k, v):
+    """Causal attention in query chunks — O(chunk·Sk) transient scores.
+
+    q: [B,S,H,hd]; k,v: [B,S,KV,hd]. KV is head-repeated up front so every
+    einsum has a single clean head axis (GQA kv_heads rarely divide the
+    'model' mesh axis; q heads shard far better). Each chunk is
+    ``jax.checkpoint``ed: the backward pass recomputes its scores instead of
+    saving [S,S,H] tensors.
+    """
+    b, s, h, hd = q.shape
+    groups = cfg.num_heads // cfg.num_kv_heads
+    k = jnp.repeat(k, groups, axis=2)
+    v = jnp.repeat(v, groups, axis=2)
+    q = constrain(q, "bshd")
+    k = constrain(k, "bshd")
+    v = constrain(v, "bshd")
+
+    chunk = min(Q_CHUNK, s)
+    pad = (-s) % chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nq = q.shape[1] // chunk
+    qc = q.reshape(b, nq, chunk, h, hd)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    kpos = jnp.arange(s)[None, :]
+
+    @jax.checkpoint
+    def one_chunk(qi, ci):
+        qpos = ci * chunk + jnp.arange(chunk)[:, None]
+        m = kpos <= qpos
+        if cfg.sliding_window:
+            m &= kpos > qpos - cfg.sliding_window
+        scores = jnp.einsum("bqhd,bshd->bhqs", qi, k).astype(jnp.float32)
+        scores = scores * scale
+        if cfg.attn_logit_softcap:
+            c = cfg.attn_logit_softcap
+            scores = jnp.tanh(scores / c) * c
+        scores = jnp.where(m[None, None], scores, NEG_INF)
+        w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        out = jnp.einsum("bhqs,bshd->bqhd", w, v)
+        return constrain(out, "bshd")
+
+    def body(_, xs):
+        qi, ci = xs
+        return None, one_chunk(qi, ci)
+
+    _, outs = jax.lax.scan(body, None,
+                           (jnp.moveaxis(qc, 1, 0), jnp.arange(nq)),
+                           unroll=scan_unroll())
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, nq * chunk, h * hd)
+    return out[:, :s]
+
+
+def causal_mask(cfg: ModelConfig, sq: int, sk: int, q_offset=0):
+    """[1,1,Sq,Sk] causal (+sliding window) mask."""
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(sk)[None, :]
+    m = kpos <= qpos
+    if cfg.sliding_window:
+        m &= kpos > qpos - cfg.sliding_window
+    return m[None, None]
+
+
+def attention_train(cfg: ModelConfig, p, x, positions,
+                    segment_ids: Optional[jax.Array] = None):
+    """Full-sequence causal attention. Returns [B,S,D]."""
+    q, k, v = _project_qkv(cfg, p, x)
+    q, k = _rotate(cfg, q, k, positions)
+    s = x.shape[1]
+    if segment_ids is None and s > CHUNKED_THRESHOLD:
+        return _attend_chunked(cfg, q, k, v) @ p["wo"]
+    mask = causal_mask(cfg, s, s)
+    if segment_ids is not None:  # packed sequences
+        seg = segment_ids[:, :, None] == segment_ids[:, None, :]
+        mask = mask & seg[:, None]
+    out = _attend(cfg, q, k, v, mask)
+    return out @ p["wo"]
+
+
+def attention_prefill(cfg: ModelConfig, p, x, positions):
+    """Causal attention that also returns the (k, v) to seed a cache."""
+    q, k, v = _project_qkv(cfg, p, x)
+    q, k = _rotate(cfg, q, k, positions)
+    s = x.shape[1]
+    if s > CHUNKED_THRESHOLD:
+        return _attend_chunked(cfg, q, k, v) @ p["wo"], (k, v)
+    mask = causal_mask(cfg, s, s)
+    out = _attend(cfg, q, k, v, mask)
+    return out @ p["wo"], (k, v)
+
+
+def attention_decode(cfg: ModelConfig, p, x, cache_k, cache_v, positions):
+    """One decode step against a dense KV cache.
+
+    x: [B,1,D]; cache_k/v: [B,Smax,KV,hd]; positions: [B] absolute position
+    of the new token (== number of tokens already processed).
+
+    The cache may be a *ring buffer*: when ``cfg.sliding_window > 0`` and the
+    cache is sized to the window, the write index wraps (`pos % Smax`) and all
+    slots holding the last `min(pos+1, Smax)` tokens are attended. RoPE is
+    applied at write time with the absolute position, so relative offsets stay
+    correct after wraparound. This is what makes ``long_500k`` O(window) for
+    dense architectures.
+
+    Returns (out [B,1,D], new_cache_k, new_cache_v).
+    """
+    b = x.shape[0]
+    q, k, v = _project_qkv(cfg, p, x)          # q,k,v: [B,1,·,hd]
+    pos2d = positions[:, None]                  # [B,1]
+    if cfg.pos_embedding == "mrope":
+        pos_in = jnp.broadcast_to(pos2d[..., None], (b, 1, 3))
+    else:
+        pos_in = pos2d
+    q, k = _rotate(cfg, q, k, pos_in)
+
+    smax = cache_k.shape[1]
+    write_idx = positions % smax                # ring when Smax == window
+    bidx = jnp.arange(b)
+    cache_k = cache_k.at[bidx, write_idx].set(k[:, 0])
+    cache_v = cache_v.at[bidx, write_idx].set(v[:, 0])
+
+    ctx = positions[:, None] + 1                # tokens now in context
+    slot = jnp.arange(smax)[None, :]            # [1,Smax]
+    if cfg.sliding_window and cfg.sliding_window < 0x7FFFFFFF:
+        window = min(cfg.sliding_window, smax)
+    else:
+        window = smax
+    mask = slot < jnp.minimum(ctx, window)      # valid slots
+    out = _attend(cfg, q, cache_k, cache_v, mask[:, None, None, :])
+    return out @ p["wo"], cache_k, cache_v

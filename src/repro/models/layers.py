@@ -1,0 +1,200 @@
+"""Core layers shared by all architecture families.
+
+Functional style: each layer is (init_fn, apply_fn) over plain dict pytrees so
+that parameters can be stacked along a leading layer axis and scanned
+(`jax.lax.scan`) — this keeps the lowered HLO O(1) in depth, which matters for
+the 94-layer dry-run compiles.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.float32):
+    fan_in = shape[in_axis]
+    scale = 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def init_norm(cfg: ModelConfig, dim: int):
+    p = {"scale": jnp.ones((dim,))}
+    if cfg.norm_type == "layernorm":
+        p["bias"] = jnp.zeros((dim,))
+    return p
+
+
+def apply_norm(cfg: ModelConfig, p, x):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    if cfg.norm_type == "rmsnorm":
+        var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+        y = x * jax.lax.rsqrt(var + cfg.norm_eps) * p["scale"]
+    else:
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+        y = (x - mu) * jax.lax.rsqrt(var + cfg.norm_eps) * p["scale"] + p["bias"]
+    return y.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# MLP (dense FFN): SwiGLU / GeGLU / gelu / squared-ReLU
+# ---------------------------------------------------------------------------
+
+
+def _act(name: str, x):
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    if name == "relu2":  # nemotron-4 squared ReLU
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(name)
+
+
+def init_mlp(key, cfg: ModelConfig, dtype=jnp.float32):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_up": dense_init(ks[0], (d, f), 0, dtype),
+        "w_down": dense_init(ks[1], (f, d), 0, dtype),
+    }
+    if cfg.mlp_gated:
+        p["w_gate"] = dense_init(ks[2], (d, f), 0, dtype)
+    if cfg.mlp_bias:
+        p["b_up"] = jnp.zeros((f,), dtype)
+        p["b_down"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def apply_mlp(cfg: ModelConfig, p, x):
+    up = x @ p["w_up"]
+    if cfg.mlp_bias:
+        up = up + p["b_up"]
+    if cfg.mlp_gated:
+        h = _act(cfg.mlp_activation, x @ p["w_gate"]) * up
+    else:
+        h = _act(cfg.mlp_activation, up)
+    y = h @ p["w_down"]
+    if cfg.mlp_bias:
+        y = y + p["b_down"]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# positions: RoPE, M-RoPE (qwen2-vl), sinusoidal (musicgen)
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(cfg: ModelConfig, rot_dim: int):
+    exponent = jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim
+    return 1.0 / (cfg.rope_theta ** exponent)  # [rot_dim//2]
+
+
+def apply_rope(cfg: ModelConfig, x, positions):
+    """x: [B, S, H, hd]; positions: [B, S] int32. Partial rotary supported."""
+    hd = x.shape[-1]
+    rot_dim = int(hd * cfg.rope_pct) // 2 * 2
+    inv = rope_freqs(cfg, rot_dim)
+    ang = positions.astype(jnp.float32)[..., None] * inv  # [B,S,rot/2]
+    sin = jnp.sin(ang)[:, :, None, :]
+    cos = jnp.cos(ang)[:, :, None, :]
+    x_rot, x_pass = x[..., :rot_dim], x[..., rot_dim:]
+    x1, x2 = jnp.split(x_rot, 2, axis=-1)
+    y = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([y, x_pass], axis=-1).astype(x.dtype)
+
+
+def apply_mrope(cfg: ModelConfig, x, positions3):
+    """Qwen2-VL multimodal RoPE.
+
+    positions3: [B, S, 3] — (temporal, height, width) position ids. The
+    head_dim/2 frequency slots are split into three sections; each section
+    uses its own position stream. For pure text all three streams are equal
+    and M-RoPE degenerates to 1-D RoPE.
+    """
+    hd = x.shape[-1]
+    half = hd // 2
+    sec = cfg.mrope_sections
+    total = sum(sec)
+    # scale sections to this head_dim
+    sizes = [s * half // total for s in sec]
+    sizes[-1] = half - sizes[0] - sizes[1]
+    inv = rope_freqs(cfg, hd)  # [half]
+    pos = positions3.astype(jnp.float32)  # [B,S,3]
+    ang_parts = []
+    start = 0
+    for i, sz in enumerate(sizes):
+        ang_parts.append(pos[..., i:i + 1] * inv[start:start + sz])
+        start += sz
+    ang = jnp.concatenate(ang_parts, axis=-1)  # [B,S,half]
+    sin = jnp.sin(ang)[:, :, None, :]
+    cos = jnp.cos(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    y = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return y.astype(x.dtype)
+
+
+def sinusoidal_embedding(positions, dim: int):
+    """[..., ] int positions -> [..., dim] sinusoidal embeddings."""
+    half = dim // 2
+    freq = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def positions_for(cfg: ModelConfig, positions):
+    """Normalize a [B,S] position tensor to what the rope variant needs."""
+    if cfg.pos_embedding == "mrope" and positions.ndim == 2:
+        return jnp.broadcast_to(positions[..., None], positions.shape + (3,))
+    return positions
+
+
+# ---------------------------------------------------------------------------
+# embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(key, cfg: ModelConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 2)
+    p = {"embedding": embed_init(ks[0], (cfg.vocab_size, cfg.d_model), dtype)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(ks[1], (cfg.d_model, cfg.vocab_size), 0, dtype)
+    return p
+
+
+def embed_tokens(cfg: ModelConfig, p, tokens):
+    x = jnp.take(p["embedding"], tokens, axis=0)
+    if cfg.embedding_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def unembed(cfg: ModelConfig, p, x):
+    if cfg.tie_embeddings:
+        logits = x @ p["embedding"].T
+    else:
+        logits = x @ p["lm_head"]
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        logits = jnp.tanh(logits / c) * c
+    return logits

@@ -1,0 +1,239 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) mixer.
+
+Chunked SSD formulation: within-chunk attention-like quadratic term +
+inter-chunk linear recurrence over chunk states. Used by the pure-SSM config
+(mamba2-130m) and the hybrid config (hymba-1.5b, parallel attention+SSM
+heads). Decode is a constant-size state update — this is why ssm/hybrid archs
+run the long_500k shape natively.
+
+A Pallas kernel for the chunked scan lives in `repro.kernels.ssd_scan`; this
+module is the pure-jnp reference implementation used for training and the
+dry-run lowering.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.logical import scan_unroll
+from .config import ModelConfig
+from .layers import dense_init, init_norm, apply_norm
+
+
+# ---------------------------------------------------------------------------
+# core SSD scan (head-broadcast B/C, chunked)
+# ---------------------------------------------------------------------------
+
+
+def _segsum(x):
+    """x: [..., Q] log-decays -> [..., Q, Q] lower-triangular segment sums.
+
+    out[i, j] = sum_{k=j+1..i} x[k]  (i >= j), -inf above the diagonal.
+    """
+    q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a, b, c, chunk: int,
+                initial_state: Optional[jax.Array] = None):
+    """Chunked SSD scan.
+
+    x:  [B, S, H, P]   head inputs
+    dt: [B, S, H]      discretization steps (post-softplus, >0)
+    a:  [H]            negative state decay rates
+    b:  [B, S, H, N]   input projections (already head-broadcast)
+    c:  [B, S, H, N]   output projections (already head-broadcast)
+    initial_state: [B, H, P, N] or None
+
+    Returns (y [B, S, H, P], final_state [B, H, P, N]).
+    """
+    bs, s, h, p = x.shape
+    n = b.shape[-1]
+    q = chunk
+    pad = (-s) % q
+    if pad:
+        zpad = lambda t: jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+        x, dt, b, c = map(zpad, (x, dt, b, c))
+    nc = x.shape[1] // q
+
+    xc = x.reshape(bs, nc, q, h, p)
+    dtc = dt.reshape(bs, nc, q, h)
+    bc = b.reshape(bs, nc, q, h, n)
+    cc = c.reshape(bs, nc, q, h, n)
+
+    da = dtc * a  # [B,nc,Q,H] log-decay per step (a < 0)
+    da_cs = jnp.cumsum(da, axis=2)                        # [B,nc,Q,H]
+
+    # ---- intra-chunk (quadratic, attention-like) ---------------------------
+    lmat = jnp.exp(_segsum(jnp.moveaxis(da, 2, 3)))       # [B,nc,H,Q,Q]
+    cb = jnp.einsum("bzihn,bzjhn->bzhij", cc, bc)         # [B,nc,H,Q,Q]
+    gate = cb * lmat * jnp.moveaxis(dtc, 2, 3)[..., None, :]
+    y_diag = jnp.einsum("bzhij,bzjhp->bzihp", gate.astype(x.dtype), xc)
+
+    # ---- chunk states -------------------------------------------------------
+    decay_to_end = jnp.exp(da_cs[:, :, -1:, :] - da_cs)   # [B,nc,Q,H]
+    states = jnp.einsum("bzqh,bzqhn,bzqhp->bzhpn",
+                        (dtc * decay_to_end).astype(x.dtype), bc, xc)
+
+    # ---- inter-chunk recurrence (scan over chunks) --------------------------
+    chunk_decay = jnp.exp(da_cs[:, :, -1, :])             # [B,nc,H]
+    if initial_state is None:
+        initial_state = jnp.zeros((bs, h, p, n), x.dtype)
+
+    def step(carry, inp):
+        dec, st = inp                                      # [B,H], [B,H,P,N]
+        carry = carry * dec[:, :, None, None].astype(carry.dtype) + st
+        return carry, carry
+
+    _, prev_states = jax.lax.scan(
+        step, initial_state,
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(states, 1, 0)),
+        unroll=scan_unroll())
+    # prev_states[z] = state at END of chunk z; we need state BEFORE chunk z
+    final_state = prev_states[-1]
+    before = jnp.concatenate(
+        [initial_state[None], prev_states[:-1]], axis=0)   # [nc,B,H,P,N]
+    before = jnp.moveaxis(before, 0, 1)                    # [B,nc,H,P,N]
+
+    # ---- inter-chunk output contribution ------------------------------------
+    in_decay = jnp.exp(da_cs)                              # [B,nc,Q,H]
+    y_off = jnp.einsum("bzqhn,bzhpn,bzqh->bzqhp",
+                       cc, before, in_decay.astype(x.dtype))
+
+    y = (y_diag + y_off).reshape(bs, nc * q, h, p)
+    return y[:, :s], final_state
+
+
+def ssd_decode_step(state, x, dt, a, b, c):
+    """Single-token SSD recurrence.
+
+    state: [B, H, P, N]; x: [B, H, P]; dt: [B, H]; a: [H];
+    b, c: [B, H, N]. Returns (y [B,H,P], new_state).
+    """
+    da = jnp.exp(dt * a)                                   # [B,H]
+    upd = jnp.einsum("bh,bhn,bhp->bhpn", dt, b, x)
+    new_state = state * da[:, :, None, None].astype(state.dtype) + upd.astype(state.dtype)
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, c.astype(state.dtype))
+    return y.astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# full Mamba2 mixer block (in_proj -> conv -> SSD -> gated norm -> out_proj)
+# ---------------------------------------------------------------------------
+
+
+def _conv_dim(cfg: ModelConfig) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+
+
+def init_mamba2(key, cfg: ModelConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    di = cfg.d_inner
+    g, n, h = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    proj_out = 2 * di + 2 * g * n + h  # z, x, B, C, dt
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], (d, proj_out), 0, dtype),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv_width, _conv_dim(cfg)), 0, dtype),
+        "conv_b": jnp.zeros((_conv_dim(cfg),), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "d_skip": jnp.ones((h,), dtype),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[2], (h,)) * 2.3 - 4.6))).astype(jnp.float32),
+        "norm": init_norm(cfg, di),
+        "out_proj": dense_init(ks[3], (di, d), 0, dtype),
+    }
+
+
+def _split_proj(cfg: ModelConfig, proj):
+    di, g, n, h = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :di]
+    xbc = proj[..., di:di + _conv_dim(cfg)]
+    dt = proj[..., di + _conv_dim(cfg):]
+    assert dt.shape[-1] == h
+    return z, xbc, dt
+
+
+def _split_xbc(cfg: ModelConfig, xbc):
+    di, g, n = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state
+    x = xbc[..., :di]
+    b = xbc[..., di:di + g * n]
+    c = xbc[..., di + g * n:]
+    return x, b, c
+
+
+def _causal_conv(p, xbc, conv_state=None):
+    """Depthwise causal conv. xbc: [B, S, C]. conv_state: [B, W-1, C] tail."""
+    w = p["conv_w"].shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xbc.shape[0], w - 1, xbc.shape[-1]), xbc.dtype)
+    else:
+        pad = conv_state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)               # [B, S+W-1, C]
+    out = sum(xp[:, i:i + xbc.shape[1]] * p["conv_w"][i] for i in range(w))
+    out = out + p["conv_b"]
+    new_state = xp[:, -(w - 1):] if w > 1 else pad
+    return jax.nn.silu(out), new_state
+
+
+def _head_broadcast(cfg: ModelConfig, bc):
+    """[B, S, G*N] -> [B, S, H, N] broadcasting groups to heads."""
+    bs, s, _ = bc.shape
+    g, n, h = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    bc = bc.reshape(bs, s, g, n)
+    return jnp.repeat(bc, h // g, axis=2)
+
+
+def mamba2_forward(cfg: ModelConfig, p, x_in, initial=None):
+    """x_in: [B, S, D] -> (y [B,S,D], (conv_state, ssd_state))."""
+    bs, s, _ = x_in.shape
+    h, pp = cfg.ssm_heads, cfg.ssm_head_dim
+    proj = x_in @ p["in_proj"]
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+    conv_state_in = initial[0] if initial is not None else None
+    ssd_state_in = initial[1] if initial is not None else None
+    xbc, conv_state = _causal_conv(p, xbc, conv_state_in)
+    xs, b, c = _split_xbc(cfg, xbc)
+    xs = xs.reshape(bs, s, h, pp)
+    bh = _head_broadcast(cfg, b)
+    ch = _head_broadcast(cfg, c)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    y, ssd_state = ssd_chunked(xs, dt, a, bh, ch, cfg.ssm_chunk, ssd_state_in)
+    y = y + xs * p["d_skip"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(bs, s, cfg.d_inner)
+    y = apply_norm(cfg, p["norm"], y * jax.nn.silu(z))
+    return y @ p["out_proj"], (conv_state, ssd_state)
+
+
+def mamba2_decode(cfg: ModelConfig, p, x_in, conv_state, ssd_state):
+    """One-token decode. x_in: [B, 1, D]; conv_state: [B, W-1, C];
+    ssd_state: [B, H, P, N]. Returns (y [B,1,D], conv_state, ssd_state)."""
+    bs = x_in.shape[0]
+    h, pp = cfg.ssm_heads, cfg.ssm_head_dim
+    proj = x_in @ p["in_proj"]                              # [B,1,·]
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+    xbc, conv_state = _causal_conv(p, xbc, conv_state)
+    xs, b, c = _split_xbc(cfg, xbc)
+    xs1 = xs[:, 0].reshape(bs, h, pp)
+    bh = _head_broadcast(cfg, b)[:, 0]                      # [B,H,N]
+    ch = _head_broadcast(cfg, c)[:, 0]
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    y, ssd_state = ssd_decode_step(ssd_state, xs1, dt, a, bh, ch)
+    y = y + xs1 * p["d_skip"][None, :, None].astype(y.dtype)
+    y = y.reshape(bs, 1, cfg.d_inner)
+    y = apply_norm(cfg, p["norm"], y * jax.nn.silu(z))
+    return y @ p["out_proj"], conv_state, ssd_state
+
+
+def init_mamba2_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    conv = jnp.zeros((batch, cfg.ssm_conv_width - 1, _conv_dim(cfg)), dtype)
+    ssd = jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                    dtype)
+    return conv, ssd

@@ -1,0 +1,173 @@
+"""Mixture-of-Experts FFN with capacity-based grouped matmul dispatch.
+
+TPU-native formulation (GShard/Switch lineage, as used by MaxText-style
+frameworks): tokens are routed top-k, sorted by expert id, scattered into a
+dense `[E, C, D]` buffer (capacity C with overflow drop), processed with a
+single batched einsum against `[E, D, F]` expert weights (MXU-friendly), and
+combined back with the router gates. Experts are sharded on the 'model' mesh
+axis (expert parallelism) — the scatter/gather lowers to all-to-all style
+collectives under the SPMD partitioner.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.logical import constrain, moe_dp_chunks
+from .config import ModelConfig
+from .layers import _act, dense_init
+
+
+def init_moe(key, cfg: ModelConfig, dtype=jnp.float32):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": dense_init(ks[0], (d, e), 0, dtype),
+        "w_up": dense_init(ks[1], (e, d, f), 1, dtype),
+        "w_down": dense_init(ks[2], (e, f, d), 1, dtype),
+    }
+    if cfg.mlp_gated:
+        p["w_gate"] = dense_init(ks[3], (e, d, f), 1, dtype)
+    return p
+
+
+def router_probs(cfg: ModelConfig, p, x_flat):
+    """x_flat: [T, D] -> (gates [T,k], expert_ids [T,k], aux_loss scalar)."""
+    logits = (x_flat @ p["router"]).astype(jnp.float32)        # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, expert_ids = jax.lax.top_k(probs, cfg.num_experts_per_tok)
+    if cfg.norm_topk_prob:
+        gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balance auxiliary loss
+    e = cfg.num_experts
+    density = jnp.mean(
+        jax.nn.one_hot(expert_ids[:, 0], e, dtype=jnp.float32), axis=0)
+    density_proxy = jnp.mean(probs, axis=0)
+    aux = jnp.sum(density * density_proxy) * e * cfg.router_aux_coef
+    return gates, expert_ids, aux
+
+
+def _capacity(cfg: ModelConfig, t: int) -> int:
+    c = int(t * cfg.num_experts_per_tok * cfg.moe_capacity_factor
+            / cfg.num_experts)
+    return max(8, -(-c // 8) * 8)  # round up to 8 for tiling
+
+
+def _dispatch(cfg: ModelConfig, x_flat, gates, expert_ids, cap: int):
+    """Sort-based capacity dispatch of [T, D] tokens into [E, C, D].
+
+    Returns (buf, indices) where `indices` carries everything `_combine`
+    needs to route expert outputs back to token order.
+    """
+    t, d = x_flat.shape
+    k = cfg.num_experts_per_tok
+    e = cfg.num_experts
+
+    flat_expert = expert_ids.reshape(t * k)                     # [T*k]
+    flat_token = jnp.repeat(jnp.arange(t), k)                   # [T*k]
+    flat_gate = gates.reshape(t * k)
+
+    order = jnp.argsort(flat_expert, stable=True)
+    sorted_expert = flat_expert[order]
+    # rank within each expert group of the sorted stream
+    idx = jnp.arange(t * k)
+    is_start = jnp.concatenate(
+        [jnp.ones((1,), bool), sorted_expert[1:] != sorted_expert[:-1]])
+    group_start = jax.lax.associative_scan(
+        jnp.maximum, jnp.where(is_start, idx, 0))
+    pos_in_expert = idx - group_start                           # [T*k]
+    keep = pos_in_expert < cap
+
+    src = x_flat[flat_token[order]]                             # [T*k, D]
+    buf = jnp.zeros((e, cap, d), x_flat.dtype)
+    # dropped tokens get an out-of-bounds position -> mode="drop" discards
+    scatter_pos = jnp.where(keep, pos_in_expert, cap)
+    buf = buf.at[sorted_expert, scatter_pos].set(src, mode="drop")
+    indices = (sorted_expert, pos_in_expert, keep, flat_token[order],
+               flat_gate[order])
+    return buf, indices
+
+
+def _combine(out_buf, indices, t: int, dtype):
+    """Route [E, C, D] expert outputs back to [T, D] token order."""
+    sorted_expert, pos_in_expert, keep, token_order, gate_order = indices
+    d = out_buf.shape[-1]
+    gather_pos = jnp.where(keep, pos_in_expert, 0)
+    gathered = out_buf[sorted_expert, gather_pos]               # [T*k, D]
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    contrib = gathered * gate_order[:, None]
+    return jnp.zeros((t, d), dtype).at[token_order].add(
+        contrib.astype(dtype))
+
+
+def _expert_ffn(cfg: ModelConfig, p, buf):
+    """buf: [..., E, C, D] -> [..., E, C, D] through the expert MLPs."""
+    up = jnp.einsum("...ecd,edf->...ecf", buf, p["w_up"])
+    if cfg.mlp_gated:
+        h = _act(cfg.mlp_activation,
+                 jnp.einsum("...ecd,edf->...ecf", buf, p["w_gate"])) * up
+    else:
+        h = _act(cfg.mlp_activation, up)
+    return jnp.einsum("...ecf,efd->...ecd", h, p["w_down"])
+
+
+def apply_moe(cfg: ModelConfig, p, x):
+    """x: [B, S, D] -> (y [B,S,D], aux_loss).
+
+    Two dispatch strategies:
+      * global (baseline): one sort over all T tokens, buffer [E, C, D].
+      * shard-local (perf lever, active when ``moe_dp_chunks() > 1``):
+        tokens regrouped [G, T/G, D] with G = number of data shards; each
+        shard sorts/scatters its own tokens into [G, E, C/G, D]. The sort
+        and scatter become shard-local (no cross-'data' collectives); only
+        the expert einsum communicates, as a clean buffer reshard along
+        'model' — the GShard all-to-all pattern. See EXPERIMENTS.md §Perf.
+    """
+    b, s, d = x.shape
+    t = b * s
+    x_flat = x.reshape(t, d)
+    gates, expert_ids, aux = router_probs(cfg, p, x_flat)      # [T,k]
+
+    g = moe_dp_chunks()
+    if g > 1 and t % g == 0:
+        tl = t // g
+        cap = _capacity(cfg, tl)
+        xg = constrain(x_flat.reshape(g, tl, d), "gtd")
+        gg = gates.reshape(g, tl, -1)
+        ig = expert_ids.reshape(g, tl, -1)
+        buf, indices = jax.vmap(
+            lambda xx, ga, ii: _dispatch(cfg, xx, ga, ii, cap))(xg, gg, ig)
+        buf = constrain(buf, "gecd")                            # [G,E,C,D]
+        out_buf = constrain(_expert_ffn(cfg, p, buf), "gecd")
+        y = jax.vmap(lambda ob, ind: _combine(ob, ind, tl, x.dtype))(
+            out_buf, indices)
+        return constrain(y, "gtd").reshape(b, s, d), aux
+
+    cap = _capacity(cfg, t)
+    buf, indices = _dispatch(cfg, x_flat, gates, expert_ids, cap)
+    buf = constrain(buf, "ecd")
+    out_buf = constrain(_expert_ffn(cfg, p, buf), "ecd")
+    y_flat = _combine(out_buf, indices, t, x.dtype)
+    return y_flat.reshape(b, s, d), aux
+
+
+def apply_moe_dense_eval(cfg: ModelConfig, p, x):
+    """Reference: compute every expert densely, combine with gates.
+
+    O(E × full FFN) — only for small-shape correctness tests of the
+    capacity-dispatch path.
+    """
+    b, s, d = x.shape
+    x_flat = x.reshape(b * s, d)
+    gates, expert_ids, _ = router_probs(cfg, p, x_flat)
+    up = jnp.einsum("td,edf->tef", x_flat, p["w_up"])
+    if cfg.mlp_gated:
+        h = _act(cfg.mlp_activation,
+                 jnp.einsum("td,edf->tef", x_flat, p["w_gate"])) * up
+    else:
+        h = _act(cfg.mlp_activation, up)
+    all_out = jnp.einsum("tef,efd->ted", h, p["w_down"])        # [T, E, D]
+    mask = jax.nn.one_hot(expert_ids, cfg.num_experts, dtype=gates.dtype)
+    weights = jnp.einsum("tk,tke->te", gates, mask)             # [T, E]
+    y = jnp.einsum("te,ted->td", weights, all_out.astype(weights.dtype))
+    return y.reshape(b, s, d).astype(x.dtype)

@@ -1,0 +1,5 @@
+from .engine import BranchHandle, Engine, EngineConfig
+from .sampling import SamplingParams, sample
+
+__all__ = ["BranchHandle", "Engine", "EngineConfig", "SamplingParams",
+           "sample"]

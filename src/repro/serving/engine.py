@@ -1,0 +1,483 @@
+"""Continuous-batching serving engine over the paged KV cache.
+
+The engine is the substrate Algorithm 1 (the SART scheduler) drives:
+
+  * fixed ``max_slots`` decode batch (XLA static shapes) — a slot holds one
+    *branch*; prune/complete frees the slot for the branch queue, which is
+    exactly the paper's branch-granularity continuous batching;
+  * prefill runs once per request; the resulting prefix pages are shared by
+    all N sibling branches (ref-counted, copy-on-write on the trailing
+    partial page);
+  * decode steps are jit'd; host-side page accounting (boundary allocation,
+    CoW) runs between steps, mirroring vLLM's CPU block manager;
+  * the decode step also returns the last hidden state per slot, which feeds
+    the PRM reward head with zero extra forwards (TPU adaptation: the paper
+    runs a separate 7B PRM server).
+
+On CPU the paged attention uses the vectorized jnp reference path; on TPU the
+same call dispatches to the Pallas flash-decode kernel.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels.paged_attention.ops import paged_attention
+from ..kv import BranchBlocks, OutOfPagesError, PageAllocator
+from ..models.attention import _project_qkv, _rotate
+from ..models.config import ModelConfig
+from ..models.layers import (apply_mlp, apply_norm, embed_tokens,
+                             sinusoidal_embedding, unembed)
+from ..models.mamba2 import init_mamba2_state, mamba2_decode
+from ..models.model import Model
+from ..models.moe import apply_moe
+from .sampling import SamplingParams, sample
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    page_size: int = 16
+    num_pages: int = 512
+    max_slots: int = 16              # decode batch size B
+    max_pages_per_branch: int = 64   # static block-table width
+    max_branch_tokens: int = 512     # hard length cap per branch
+    eos_id: int = 1
+    sampling: SamplingParams = SamplingParams(temperature=1.0, top_p=0.95)
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class BranchHandle:
+    branch_id: int
+    request_id: int
+    slot: int
+    blocks: BranchBlocks
+    tokens: List[int]                # generated tokens (after the prompt)
+    prompt_len: int
+    done: bool = False
+    last_reward: float = 0.0
+    saved_ssm: object = None          # host snapshot while suspended
+
+
+class Engine:
+    def __init__(self, model: Model, params, cfg: EngineConfig,
+                 prm_params: Optional[dict] = None):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        mc = model.cfg
+        if mc.uses_attention:
+            assert not mc.sliding_window, \
+                "paged engine serves full-attention configs; sliding-window" \
+                " long-context is exercised via the dense dry-run path"
+        self.allocator = PageAllocator(cfg.num_pages, cfg.page_size)
+        self._rng = jax.random.PRNGKey(cfg.seed)
+        self._next_branch_id = 0
+
+        B, L = cfg.max_slots, mc.num_layers
+        kv, hd = mc.num_kv_heads, mc.resolved_head_dim
+        self.state: Dict[str, jax.Array] = {}
+        if mc.uses_attention:
+            shape = (L, kv, cfg.num_pages, cfg.page_size, hd)
+            self.state["k_pages"] = jnp.zeros(shape, model.dtype)
+            self.state["v_pages"] = jnp.zeros(shape, model.dtype)
+        if mc.uses_ssm:
+            conv, ssd = init_mamba2_state(mc, B, model.dtype)
+            self.state["conv"] = jnp.zeros((L,) + conv.shape, model.dtype)
+            self.state["ssd"] = jnp.zeros((L,) + ssd.shape, model.dtype)
+
+        # host-side per-slot bookkeeping
+        self.slots: List[Optional[BranchHandle]] = [None] * B
+        self._tokens = np.zeros((B,), np.int32)
+        self._positions = np.zeros((B,), np.int32)
+        self._block_tables = np.full((B, cfg.max_pages_per_branch),
+                                     cfg.num_pages, np.int32)  # OOB sentinel
+        self._lengths = np.zeros((B,), np.int32)
+        self._active = np.zeros((B,), bool)
+        self._last_hidden = jnp.zeros((B, mc.d_model), jnp.float32)
+        self.prm_params = prm_params
+
+        self._decode_jit = jax.jit(self._decode_step_fn)
+        self._prefill_cache: Dict[int, callable] = {}
+        self.decode_steps_executed = 0
+
+    # ------------------------------------------------------------------ util
+    @property
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    @property
+    def num_active(self) -> int:
+        return int(self._active.sum())
+
+    def live_tokens(self) -> int:
+        """Total tokens currently resident in the KV pool (paper Fig. 3)."""
+        return sum(s.blocks.length for s in self.slots if s is not None)
+
+    def _next_rng(self):
+        self._rng, k = jax.random.split(self._rng)
+        return k
+
+    # --------------------------------------------------------------- prefill
+    def prefill(self, prompt: List[int]):
+        """Run prefill for one request. Returns (prefix_blocks, last_logits,
+        ssm_state or None). The prefix pages are NOT yet shared — call
+        ``spawn_branch`` N times to fork branches off them.
+
+        Prefill runs at the EXACT prompt length (one compile per distinct
+        length): right-padding would be masked out by attention but would
+        pollute the SSM recurrence state of ssm/hybrid models.
+        """
+        cfg, mc = self.cfg, self.model.cfg
+        s = len(prompt)
+        if s not in self._prefill_cache:
+            self._prefill_cache[s] = self._make_prefill(s)
+        run = self._prefill_cache[s]
+
+        logits, cache = run(self.params,
+                            jnp.asarray(np.asarray(prompt, np.int32))[None],
+                            s)
+
+        blocks = self.allocator.alloc_prefix(s)
+        ssm_state = None
+        if mc.uses_attention:
+            self._write_prefix_pages(cache, blocks)
+        if mc.uses_ssm:
+            ssm_state = (cache["conv"], cache["ssd"])  # [L,1,...]
+        return blocks, logits, ssm_state
+
+    def _make_prefill(self, s_pad: int):
+        model = self.model
+
+        @jax.jit
+        def run(params, tokens, true_len):
+            positions = jnp.arange(s_pad)[None]
+            # mask padding by clamping positions (outputs past true_len unused)
+            logits_all, cache = _prefill_all(model, params, tokens, positions)
+            logits = logits_all[0, true_len - 1]
+            return logits, cache
+
+        return run
+
+    def _write_prefix_pages(self, cache, blocks: BranchBlocks):
+        """Scatter dense prefill K/V into the allocated pages (the dense
+        tensors are padded up to the page boundary; the pad region is never
+        attended because block lengths mask it)."""
+        ps = self.cfg.page_size
+        n_pages = len(blocks.pages)
+        page_ids = jnp.asarray(blocks.pages, jnp.int32)
+        k = cache["k"][:, 0]                  # [L, s, kv, hd]
+        v = cache["v"][:, 0]
+        pad = n_pages * ps - k.shape[1]
+        if pad > 0:
+            k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        self.state["k_pages"], self.state["v_pages"] = _scatter_pages(
+            self.state["k_pages"], self.state["v_pages"], k, v, page_ids,
+            page_size=ps)
+
+    # --------------------------------------------------------------- branches
+    def spawn_branch(self, request_id: int, prefix_blocks: BranchBlocks,
+                     last_logits, ssm_state, prompt_len: int,
+                     first_fork: bool = False) -> Optional[BranchHandle]:
+        """Fork one branch off a prefilled prefix and seat it in a free slot.
+
+        Samples the branch's own first token from the prefill logits (the
+        stochastic divergence point between siblings). Returns None if no
+        slot is free (caller queues the branch).
+        """
+        free = self.free_slots
+        if not free:
+            return None
+        slot = free[0]
+        blocks = self.allocator.fork(prefix_blocks)
+        first = int(sample(self._next_rng(), last_logits,
+                           self.cfg.sampling))
+        handle = BranchHandle(
+            branch_id=self._next_branch_id, request_id=request_id, slot=slot,
+            blocks=blocks, tokens=[first], prompt_len=prompt_len)
+        self._next_branch_id += 1
+        self.slots[slot] = handle
+
+        if self.model.cfg.uses_ssm and ssm_state is not None:
+            conv, ssd = ssm_state
+            self.state["conv"] = self.state["conv"].at[:, slot].set(conv[:, 0])
+            self.state["ssd"] = self.state["ssd"].at[:, slot].set(ssd[:, 0])
+
+        self._seat(handle)
+        return handle
+
+    def _seat(self, h: BranchHandle):
+        """Load a branch's host-side decode state into its slot row."""
+        slot = h.slot
+        self._tokens[slot] = h.tokens[-1]
+        self._positions[slot] = h.blocks.length  # next write position
+        self._refresh_block_table(h)
+        self._lengths[slot] = h.blocks.length
+        self._active[slot] = True
+
+    def _refresh_block_table(self, h: BranchHandle):
+        row = np.full((self.cfg.max_pages_per_branch,), self.cfg.num_pages,
+                      np.int32)
+        assert len(h.blocks.pages) <= self.cfg.max_pages_per_branch, \
+            "branch exceeded max_pages_per_branch"
+        row[:len(h.blocks.pages)] = h.blocks.pages
+        self._block_tables[h.slot] = row
+
+    def fork_branch(self, parent: BranchHandle) -> Optional[BranchHandle]:
+        """Mid-generation fork (Rebase tree expansion): the child shares all
+        of the parent's pages (CoW on next append) and copies its SSM state.
+        Divergence comes from per-slot sampling rngs on the next step."""
+        free = self.free_slots
+        if not free:
+            return None
+        slot = free[0]
+        blocks = self.allocator.fork(parent.blocks)
+        handle = BranchHandle(
+            branch_id=self._next_branch_id, request_id=parent.request_id,
+            slot=slot, blocks=blocks, tokens=list(parent.tokens),
+            prompt_len=parent.prompt_len)
+        self._next_branch_id += 1
+        self.slots[slot] = handle
+        if self.model.cfg.uses_ssm:
+            for key in ("conv", "ssd"):
+                self.state[key] = self.state[key].at[:, slot].set(
+                    self.state[key][:, parent.slot])
+        self._seat(handle)
+        return handle
+
+    def suspend_branch(self, h: BranchHandle) -> None:
+        """Beyond-paper (the paper lists preemptible scheduling as future
+        work): vacate a branch's slot while KEEPING its pages/state, so it
+        can be reseated later via ``resume_branch``. SSM state is snapshot
+        to host (slot rows get reused by the next occupant)."""
+        assert self.slots[h.slot] is h
+        if self.model.cfg.uses_ssm:
+            h_saved = (np.asarray(self.state["conv"][:, h.slot]),
+                       np.asarray(self.state["ssd"][:, h.slot]))
+            h.saved_ssm = h_saved
+        slot = h.slot
+        self.slots[slot] = None
+        self._active[slot] = False
+        self._block_tables[slot] = self.cfg.num_pages
+        self._lengths[slot] = 0
+        h.slot = -1
+
+    def resume_branch(self, h: BranchHandle) -> bool:
+        """Reseat a suspended branch. Returns False when no slot is free."""
+        free = self.free_slots
+        if not free:
+            return False
+        slot = free[0]
+        h.slot = slot
+        self.slots[slot] = h
+        if self.model.cfg.uses_ssm and getattr(h, "saved_ssm", None):
+            conv, ssd = h.saved_ssm
+            self.state["conv"] = self.state["conv"].at[:, slot].set(
+                jnp.asarray(conv))
+            self.state["ssd"] = self.state["ssd"].at[:, slot].set(
+                jnp.asarray(ssd))
+            h.saved_ssm = None
+        self._seat(h)
+        return True
+
+    def pages_needed_for_step(self) -> int:
+        """Pages the next decode step will allocate (boundary + CoW)."""
+        ps = self.cfg.page_size
+        need = 0
+        for h in self.slots:
+            if h is None:
+                continue
+            b = h.blocks
+            if self.allocator.needs_cow(b):
+                need += 1
+            if b.length % ps == 0 and b.length // ps == len(b.pages):
+                need += 1
+        return need
+
+    def free_branch(self, h: BranchHandle):
+        """Release a branch's slot and eagerly free its pages."""
+        self.allocator.release(h.blocks)
+        slot = h.slot
+        if slot >= 0:                 # suspended branches hold no slot
+            self.slots[slot] = None
+            self._active[slot] = False
+            self._block_tables[slot] = self.cfg.num_pages
+            self._lengths[slot] = 0
+        h.done = True
+
+    def release_prefix(self, prefix_blocks: BranchBlocks):
+        """Drop the scheduler's own reference to a request's prefix."""
+        self.allocator.release(prefix_blocks)
+
+    # ----------------------------------------------------------------- decode
+    def _decode_step_fn(self, params, state, tokens, positions, block_tables,
+                        lengths, rng):
+        model, mc, cfg = self.model, self.model.cfg, self.cfg
+        B = cfg.max_slots
+        x = embed_tokens(mc, params["embed"], tokens[:, None])
+        if mc.pos_embedding == "sinusoidal":
+            x = x + sinusoidal_embedding(positions, mc.d_model)[:, None].astype(x.dtype)
+
+        page_of = block_tables[jnp.arange(B), positions // cfg.page_size]
+        slot_in_page = positions % cfg.page_size
+
+        def layer(carry, scanned):
+            x = carry
+            layer_p = scanned["p"]
+            h = apply_norm(mc, layer_p["norm1"], x)
+            mix = jnp.zeros_like(x)
+            outs = {}
+            if mc.uses_attention:
+                kp, vp = scanned["k_pages"], scanned["v_pages"]
+                q, k, v = _project_qkv(mc, layer_p["attn"], h)
+                pos_in = positions[:, None]
+                if mc.pos_embedding == "mrope":
+                    pos_in = jnp.broadcast_to(pos_in[..., None], (B, 1, 3))
+                q, k = _rotate(mc, q, k, pos_in)
+                # write new token's k/v into pages ([kv, page, slot, hd])
+                kp = kp.at[:, page_of, slot_in_page].set(
+                    jnp.moveaxis(k[:, 0], 1, 0), mode="drop")
+                vp = vp.at[:, page_of, slot_in_page].set(
+                    jnp.moveaxis(v[:, 0], 1, 0), mode="drop")
+                att = paged_attention(
+                    q[:, 0], kp, vp, block_tables, lengths + 1,
+                    use_kernel=jax.default_backend() == "tpu")
+                y = att.reshape(B, 1, -1) @ layer_p["attn"]["wo"]
+                mix = mix + y
+                outs["k_pages"], outs["v_pages"] = kp, vp
+            if mc.uses_ssm:
+                y, conv, ssd = mamba2_decode(mc, layer_p["mamba"], h,
+                                             scanned["conv"], scanned["ssd"])
+                mix = mix + y
+                outs["conv"] = conv.astype(scanned["conv"].dtype)
+                outs["ssd"] = ssd.astype(scanned["ssd"].dtype)
+            if mc.arch_type == "hybrid":
+                mix = mix * 0.5
+            x = x + mix
+            if mc.d_ff:
+                h2 = apply_norm(mc, layer_p["norm2"], x)
+                if mc.uses_moe:
+                    y, _ = apply_moe(mc, layer_p["moe"], h2)
+                else:
+                    y = apply_mlp(mc, layer_p["mlp"], h2)
+                x = x + y
+            return x, outs
+
+        scanned_in = {"p": params["layers"]}
+        for key in ("k_pages", "v_pages", "conv", "ssd"):
+            if key in state:
+                scanned_in[key] = state[key]
+        x, new_state = jax.lax.scan(layer, x, scanned_in)
+        x = apply_norm(mc, params["final_norm"], x)
+        hidden = x[:, 0]
+        logits = unembed(mc, params["embed"], hidden)
+        keys = jax.random.split(rng, B)
+        next_tokens = jax.vmap(lambda r, l: sample(r, l, cfg.sampling))(
+            keys, logits)
+        return next_tokens, hidden.astype(jnp.float32), new_state
+
+    def decode_step(self) -> Dict[int, int]:
+        """One decode step for all active slots.
+
+        Handles host-side page accounting (boundary alloc + CoW) *before* the
+        jit'd step, then appends the sampled token to each active branch.
+        Returns {slot: new_token}.
+        """
+        cfg, mc = self.cfg, self.model.cfg
+        if not self._active.any():
+            return {}
+        # page accounting for the token about to be written
+        if mc.uses_attention:
+            if self.pages_needed_for_step() > self.allocator.free_pages:
+                raise OutOfPagesError(
+                    "decode step needs more pages than are free")
+            cows = []
+            for h in self.slots:
+                if h is None:
+                    continue
+                cow = self.allocator.append_token(h.blocks)
+                if cow is not None:
+                    cows.append(cow)
+                self._refresh_block_table(h)
+            if cows:
+                old = jnp.asarray([c[0] for c in cows], jnp.int32)
+                new = jnp.asarray([c[1] for c in cows], jnp.int32)
+                self.state["k_pages"] = self.state["k_pages"].at[
+                    :, :, new].set(self.state["k_pages"][:, :, old])
+                self.state["v_pages"] = self.state["v_pages"].at[
+                    :, :, new].set(self.state["v_pages"][:, :, old])
+        else:
+            for h in self.slots:
+                if h is not None:
+                    h.blocks.length += 1
+
+        next_tokens, hidden, new_state = self._decode_jit(
+            self.params, self.state, jnp.asarray(self._tokens),
+            jnp.asarray(self._positions), jnp.asarray(self._block_tables),
+            jnp.asarray(self._lengths), self._next_rng())
+        self.state.update(new_state)
+        self._last_hidden = hidden
+        self.decode_steps_executed += 1
+
+        out: Dict[int, int] = {}
+        toks = np.asarray(next_tokens)
+        for slot, h in enumerate(self.slots):
+            if h is None:
+                continue
+            tok = int(toks[slot])
+            h.tokens.append(tok)
+            out[slot] = tok
+            self._tokens[slot] = tok
+            self._positions[slot] += 1
+            self._lengths[slot] += 1
+        return out
+
+    # --------------------------------------------------------------- scoring
+    def score_slots(self) -> np.ndarray:
+        """PRM reward per slot from the cached last hidden state."""
+        if self.prm_params is None:
+            raise RuntimeError("engine has no PRM head")
+        from ..core.prm import reward_from_hidden
+        r = reward_from_hidden(self.prm_params, self._last_hidden)
+        return np.asarray(r)
+
+
+# --------------------------------------------------------------------- helpers
+
+
+def _prefill_all(model: Model, params, tokens, positions):
+    """Model.prefill but returning logits for all positions (for true-length
+    indexing under padding)."""
+    mc = model.cfg
+    x = model._embed_inputs(params, tokens, None)
+    b, s, _ = x.shape
+    if mc.pos_embedding == "mrope" and positions.ndim == 2:
+        positions = jnp.broadcast_to(positions[..., None], (b, s, 3))
+    cache = model.init_cache(b, s)
+
+    def body(x, scanned):
+        layer_p, layer_cache = scanned
+        return model._layer_prefill(layer_p, layer_cache, x, positions, s)
+
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+    x = apply_norm(mc, params["final_norm"], x)
+    logits = unembed(mc, params["embed"], x)
+    return logits, new_cache
+
+
+@functools.partial(jax.jit, static_argnames=("page_size",))
+def _scatter_pages(k_pages, v_pages, k, v, page_ids, page_size):
+    """k, v: [L, n_pages*ps, kv, hd] -> scatter into [L, kv, P, ps, hd]."""
+    l, s, kvh, hd = k.shape
+    n = s // page_size
+    kk = k.reshape(l, n, page_size, kvh, hd).transpose(0, 3, 1, 2, 4)
+    vv = v.reshape(l, n, page_size, kvh, hd).transpose(0, 3, 1, 2, 4)
+    k_pages = k_pages.at[:, :, page_ids].set(kk.astype(k_pages.dtype))
+    v_pages = v_pages.at[:, :, page_ids].set(vv.astype(v_pages.dtype))
+    return k_pages, v_pages

@@ -1,0 +1,48 @@
+"""Token sampling: temperature / top-k / top-p, vmappable per slot."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    temperature: float = 1.0
+    top_k: int = 0          # 0 -> disabled
+    top_p: float = 1.0      # 1.0 -> disabled
+
+
+def apply_top_k(logits, k: int):
+    if k <= 0 or k >= logits.shape[-1]:
+        return logits
+    kth = jnp.sort(logits, axis=-1)[..., -k][..., None]
+    return jnp.where(logits < kth, NEG_INF, logits)
+
+
+def apply_top_p(logits, p: float):
+    if p >= 1.0:
+        return logits
+    sorted_logits = jnp.sort(logits, axis=-1)[..., ::-1]
+    probs = jax.nn.softmax(sorted_logits, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    # keep tokens while cumulative prob (exclusive) < p; always keep top-1
+    keep_sorted = jnp.concatenate(
+        [jnp.ones_like(cum[..., :1], bool), cum[..., :-1] < p], axis=-1)
+    # threshold = smallest kept logit
+    thresh = jnp.min(
+        jnp.where(keep_sorted, sorted_logits, jnp.inf), axis=-1, keepdims=True)
+    return jnp.where(logits < thresh, NEG_INF, logits)
+
+
+def sample(rng, logits, params: SamplingParams):
+    """logits [..., V] -> token ids [...]. Greedy when temperature == 0."""
+    if params.temperature == 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits.astype(jnp.float32) / params.temperature
+    logits = apply_top_k(logits, params.top_k)
+    logits = apply_top_p(logits, params.top_p)
+    return jax.random.categorical(rng, logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,261 @@
+"""Trace-driven serving simulator for paper-scale experiments.
+
+The CPU container can only run tiny live models, but the paper's end-to-end
+claims (Fig. 5/6/7) are about *scheduling* at realistic response lengths
+(thousands of tokens) and arrival rates. ``SimEngine`` implements the exact
+host-side interface of ``repro.serving.Engine`` — including the real
+``PageAllocator`` for KV memory accounting — but branches play back sampled
+length/quality traces instead of running a model. The unmodified
+``repro.core.Scheduler`` (Algorithm 1 and every baseline policy) drives it,
+so the scheduling logic under test is byte-identical to the live engine's.
+
+Length model: mixture of a lognormal body and an over-thinking tail
+(paper §3 Obs. 1: lengths vary substantially per request; correctness is
+weakly related to length). Reward model: the PRM's discriminability is
+parameterized — rewards drift toward 1 (right-thinking) or 0 (wrong) as the
+branch progresses, with noise.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from ..data import tokenizer as tk
+from ..kv import BranchBlocks, OutOfPagesError, PageAllocator
+from .engine import BranchHandle
+
+
+@dataclasses.dataclass(frozen=True)
+class SimWorkload:
+    """Distribution of branch behaviour for one experiment."""
+    mean_len: float = 2000.0          # lognormal body, tokens
+    sigma_len: float = 0.6
+    overthink_p: float = 0.12         # probability of the long-tail mode
+    overthink_mult: float = 4.0       # tail length multiplier
+    correct_p: float = 0.55           # P(branch reaches a correct answer)
+    prm_drift: float = 3.0            # reward drift magnitude (discriminability)
+    prm_noise: float = 0.12
+    prompt_len: int = 64
+    # NOTE: correctness is sampled independently of length (paper Obs. 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class SimEngineConfig:
+    max_slots: int = 64               # decode batch B
+    page_size: int = 16
+    num_pages: int = 65536            # models HBM KV capacity
+    eos_id: int = tk.EOS
+
+
+@dataclasses.dataclass
+class _BranchSpec:
+    length: int                       # tokens this branch will generate
+    correct: bool
+    quality: float                    # asymptotic PRM reward
+
+
+@dataclasses.dataclass
+class SimTask:
+    answer: int = 7                   # the request's true answer digit
+
+
+class SimEngine:
+    """Drop-in Engine substitute: plays back sampled branch traces."""
+
+    def __init__(self, cfg: SimEngineConfig, workload: SimWorkload,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.workload = workload
+        self.rng = np.random.default_rng(seed)
+        self.allocator = PageAllocator(cfg.num_pages, cfg.page_size)
+        self.slots: List[Optional[BranchHandle]] = [None] * cfg.max_slots
+        self._specs: Dict[int, _BranchSpec] = {}
+        self.tasks: Dict[int, SimTask] = {}   # request_id -> SimTask
+        self._next_branch_id = 0
+        self.decode_steps_executed = 0
+
+    # ----------------------------------------------------- engine interface
+    @property
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    @property
+    def num_active(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    def live_tokens(self) -> int:
+        return sum(s.blocks.length for s in self.slots if s is not None)
+
+    def prefill(self, prompt: List[int]):
+        blocks = self.allocator.alloc_prefix(len(prompt))
+        return blocks, None, None
+
+    def _sample_spec(self) -> _BranchSpec:
+        w = self.workload
+        ln = self.rng.lognormal(math.log(w.mean_len), w.sigma_len)
+        if self.rng.random() < w.overthink_p:
+            ln *= w.overthink_mult    # over-thinking dilemma tail
+        correct = bool(self.rng.random() < w.correct_p)
+        quality = 0.85 if correct else 0.25
+        return _BranchSpec(length=max(int(ln), 4), correct=correct,
+                           quality=quality)
+
+    def spawn_branch(self, request_id: int, prefix_blocks: BranchBlocks,
+                     last_logits, ssm_state, prompt_len: int
+                     ) -> Optional[BranchHandle]:
+        free = self.free_slots
+        if not free:
+            return None
+        slot = free[0]
+        blocks = self.allocator.fork(prefix_blocks)
+        h = BranchHandle(branch_id=self._next_branch_id,
+                         request_id=request_id, slot=slot, blocks=blocks,
+                         tokens=[tk.STEP], prompt_len=prompt_len)
+        self._next_branch_id += 1
+        self._specs[h.branch_id] = self._sample_spec()
+        self.slots[slot] = h
+        return h
+
+    def fork_branch(self, parent: BranchHandle) -> Optional[BranchHandle]:
+        free = self.free_slots
+        if not free:
+            return None
+        slot = free[0]
+        blocks = self.allocator.fork(parent.blocks)
+        h = BranchHandle(branch_id=self._next_branch_id,
+                         request_id=parent.request_id, slot=slot,
+                         blocks=blocks, tokens=list(parent.tokens),
+                         prompt_len=parent.prompt_len)
+        self._next_branch_id += 1
+        # child inherits progress; resamples its remaining destiny
+        self._specs[h.branch_id] = self._sample_spec()
+        self.slots[slot] = h
+        return h
+
+    def pages_needed_for_step(self) -> int:
+        ps = self.cfg.page_size
+        need = 0
+        for h in self.slots:
+            if h is None:
+                continue
+            b = h.blocks
+            if self.allocator.needs_cow(b):
+                need += 1
+            if b.length % ps == 0 and b.length // ps == len(b.pages):
+                need += 1
+        return need
+
+    def decode_step(self) -> Dict[int, int]:
+        if self.num_active == 0:
+            return {}
+        if self.pages_needed_for_step() > self.allocator.free_pages:
+            raise OutOfPagesError("sim KV pool exhausted")
+        out = {}
+        for slot, h in enumerate(self.slots):
+            if h is None:
+                continue
+            self.allocator.append_token(h.blocks)
+            spec = self._specs[h.branch_id]
+            gen = len(h.tokens)
+            if gen >= spec.length:
+                # emit the answer tail then EOS
+                task = self.tasks.get(h.request_id, SimTask())
+                ans = task.answer if spec.correct else (task.answer + 1) % 10
+                if h.tokens[-1] != tk.ANSWER and not tk.is_digit(h.tokens[-1]):
+                    tok = tk.ANSWER
+                elif h.tokens[-1] == tk.ANSWER:
+                    tok = tk.digit(ans)
+                else:
+                    tok = tk.EOS
+            else:
+                tok = tk.STEP
+            h.tokens.append(tok)
+            out[slot] = tok
+        self.decode_steps_executed += 1
+        return out
+
+    def suspend_branch(self, h: BranchHandle) -> None:
+        assert self.slots[h.slot] is h
+        self.slots[h.slot] = None
+        h.slot = -1
+
+    def resume_branch(self, h: BranchHandle) -> bool:
+        free = self.free_slots
+        if not free:
+            return False
+        h.slot = free[0]
+        self.slots[h.slot] = h
+        return True
+
+    def free_branch(self, h: BranchHandle):
+        self.allocator.release(h.blocks)
+        if h.slot >= 0:
+            self.slots[h.slot] = None
+        self._specs.pop(h.branch_id, None)
+        h.done = True
+
+    def release_prefix(self, prefix_blocks: BranchBlocks):
+        self.allocator.release(prefix_blocks)
+
+    # ------------------------------------------------------------ PRM model
+    def reward_of(self, h: BranchHandle) -> float:
+        spec = self._specs.get(h.branch_id)
+        if spec is None:
+            return 0.5
+        w = self.workload
+        progress = min(len(h.tokens) / spec.length, 1.0)
+        # reward drifts from neutral 0.5 toward the branch's quality as the
+        # PRM sees more of the trajectory (discriminability = prm_drift)
+        logit = math.log(spec.quality / (1 - spec.quality)) \
+            * progress * w.prm_drift / 2
+        r = 1 / (1 + math.exp(-logit)) + self.rng.normal(0, w.prm_noise)
+        return float(np.clip(r, 0.0, 1.0))
+
+
+class SimPRM:
+    """PRM protocol over SimEngine's reward model."""
+
+    def __init__(self, engine: SimEngine):
+        self.engine = engine
+
+    def score(self, request, handles) -> List[float]:
+        return [self.engine.reward_of(h) for h in handles]
+
+
+def run_sim_experiment(policy: str, n: int, *, num_requests: int = 40,
+                       arrival_gap: int = 0, workload: SimWorkload = None,
+                       engine_cfg: SimEngineConfig = None, window: int = 400,
+                       max_tokens: int = 1 << 30, seed: int = 0,
+                       m: int = 0, alpha: float = 0.5, beta: int = 0):
+    """One simulated serving run; returns (metrics, accuracy).
+
+    ``arrival_gap`` is the decode-step gap between request arrivals (the
+    decode-step analogue of the paper's 1 vs 4 requests/second rates).
+    """
+    from ..core import OraclePRM, Scheduler, SchedulerConfig
+    from ..data.tasks import extract_answer
+
+    workload = workload or SimWorkload()
+    engine_cfg = engine_cfg or SimEngineConfig()
+    engine = SimEngine(engine_cfg, workload, seed=seed)
+    prm = SimPRM(engine)
+    cfg = SchedulerConfig(policy=policy, n=n, m=m, alpha=alpha, beta=beta,
+                          window=window, max_tokens=max_tokens)
+    sch = Scheduler(engine, prm, cfg, answer_fn=extract_answer)
+    rng = np.random.default_rng(seed + 1)
+    for i in range(num_requests):
+        task = SimTask(answer=int(rng.integers(0, 10)))
+        prompt = [tk.BOS] + [tk.digit(0)] * (workload.prompt_len - 2) \
+            + [tk.EQUALS]
+        req = sch.submit(prompt, payload=task, arrival=i * arrival_gap)
+        engine.tasks[req.request_id] = task
+    metrics = sch.run(max_steps=200_000_000)
+    correct = sum(
+        1 for r in metrics["requests"]
+        if r["answer"] is not None
+        and r["answer"] == engine.tasks[r["request_id"]].answer)
+    accuracy = correct / max(len(metrics["requests"]), 1)
+    return metrics, accuracy

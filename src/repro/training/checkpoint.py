@@ -1,0 +1,63 @@
+"""Checkpointing: pytree <-> flat .npz with path-keyed arrays."""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree, prefix="") -> Dict[str, np.ndarray]:
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix.rstrip("/")] = np.asarray(tree)
+    return out
+
+
+def save_checkpoint(path: str, tree: Any) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, **_flatten(tree))
+
+
+def load_checkpoint(path: str, like: Any = None) -> Any:
+    """Load. With ``like`` given, restores that pytree's exact structure."""
+    data = dict(np.load(path))
+    if like is None:
+        # rebuild nested dicts from slash paths
+        root: Dict[str, Any] = {}
+        for key, arr in data.items():
+            parts = key.split("/")
+            node = root
+            for p in parts[:-1]:
+                node = node.setdefault(p, {})
+            node[parts[-1]] = jnp.asarray(arr)
+        return root
+    flat_like = _flatten(like)
+    assert set(flat_like) == set(data), (
+        "checkpoint keys mismatch: "
+        f"missing={set(flat_like) - set(data)} "
+        f"extra={set(data) - set(flat_like)}")
+    leaves, treedef = jax.tree.flatten(like)
+    keys = list(_flatten_keys(like))
+    assert len(keys) == len(leaves)
+    restored = [jnp.asarray(data[k]) for k in keys]
+    return treedef.unflatten(restored)
+
+
+def _flatten_keys(tree, prefix=""):
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            yield from _flatten_keys(tree[k], f"{prefix}{k}/")
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            yield from _flatten_keys(v, f"{prefix}{i}/")
+    else:
+        yield prefix.rstrip("/")

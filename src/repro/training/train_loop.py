@@ -1,0 +1,122 @@
+"""Training loop: LM training for the reasoner + PRM-head training.
+
+``make_train_step`` builds the jit'd (loss, grads, AdamW) step used both by
+the CPU examples (tiny reasoner) and by the multi-pod dry-run (where it is
+pjit-sharded by ``repro.launch``).
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.prm import init_prm_head, prm_head_loss
+from ..models import Model, cross_entropy_loss
+from .optimizer import AdamWConfig, adamw_update, init_opt_state
+
+
+def lm_loss_fn(model: Model, params, batch) -> Tuple[jax.Array, Dict]:
+    labels, mask = batch["labels"], batch["mask"]
+    logits, aux = model.forward(params, tokens=batch.get("tokens"),
+                                embeds=batch.get("embeds"))
+    loss = cross_entropy_loss(logits, labels, mask)
+    total = loss + aux
+    return total, {"loss": loss, "aux_loss": aux}
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig,
+                    loss_fn: Optional[Callable] = None):
+    loss_fn = loss_fn or lm_loss_fn
+
+    def train_step(params, opt_state, batch):
+        (_, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(model, p, batch), has_aux=True)(params)
+        params, opt_state, gnorm = adamw_update(opt_cfg, params, grads,
+                                                opt_state)
+        metrics["grad_norm"] = gnorm
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def train_lm(model: Model, data_iter, steps: int,
+             opt_cfg: Optional[AdamWConfig] = None, seed: int = 0,
+             log_every: int = 50, params=None,
+             logger: Optional[Callable] = None):
+    """Train the reasoner LM. Returns (params, history)."""
+    opt_cfg = opt_cfg or AdamWConfig(total_steps=steps)
+    if params is None:
+        params = model.init_params(jax.random.PRNGKey(seed))
+    opt_state = init_opt_state(params)
+    step_fn = jax.jit(make_train_step(model, opt_cfg))
+    history = []
+    for i in range(steps):
+        toks, labels, mask = next(data_iter)
+        batch = {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labels),
+                 "mask": jnp.asarray(mask)}
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if i % log_every == 0 or i == steps - 1:
+            rec = {k: float(v) for k, v in metrics.items()}
+            rec["step"] = i
+            history.append(rec)
+            if logger:
+                logger(rec)
+    return params, history
+
+
+# ------------------------------------------------------------- PRM head
+
+
+def hidden_states(model: Model, params, tokens) -> jax.Array:
+    """Final-norm hidden states [B, S, D] (the decode path's PRM input)."""
+    from ..models.layers import apply_norm
+    mc = model.cfg
+    x = model._embed_inputs(params, tokens, None)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    if mc.pos_embedding == "mrope":
+        positions = jnp.broadcast_to(positions[..., None], (b, s, 3))
+
+    def body(x, layer_p):
+        x, _ = model._layer_train(layer_p, x, positions)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    return apply_norm(mc, params["final_norm"], x)
+
+
+def train_prm_head(model: Model, lm_params, data_iter, steps: int,
+                   lr: float = 1e-2, seed: int = 0,
+                   logger: Optional[Callable] = None):
+    """Fit the reward head on frozen LM hidden states (BCE)."""
+    from ..core.prm import reward_logit
+    head = init_prm_head(jax.random.PRNGKey(seed), model.cfg.d_model)
+
+    @jax.jit
+    def step(head, tokens, labels, mask):
+        h = hidden_states(model, lm_params, tokens)
+
+        def loss(hp):
+            logit = reward_logit(hp, h.astype(jnp.float32))
+            bce = (jnp.maximum(logit, 0) - logit * labels
+                   + jnp.log1p(jnp.exp(-jnp.abs(logit))))
+            return jnp.sum(bce * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+        l, g = jax.value_and_grad(loss)(head)
+        head = jax.tree.map(lambda p, gg: p - lr * gg, head, g)
+        return head, l
+
+    history = []
+    for i in range(steps):
+        toks, labels, mask = next(data_iter)
+        head, l = step(head, jnp.asarray(toks), jnp.asarray(labels),
+                       jnp.asarray(mask))
+        if i % 50 == 0 or i == steps - 1:
+            rec = {"step": i, "prm_loss": float(l)}
+            history.append(rec)
+            if logger:
+                logger(rec)
+    return head, history

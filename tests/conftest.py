@@ -1,0 +1,49 @@
+import jax
+import numpy as np
+import pytest
+
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see the
+# single real CPU device; only launch/dryrun.py requests 512 placeholders.
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def tiny_config(**kw):
+    from repro.models import ModelConfig
+    base = dict(name="tiny", arch_type="dense", num_layers=2, d_model=64,
+                vocab_size=97, num_heads=4, num_kv_heads=2, d_ff=128)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+@pytest.fixture
+def dense_cfg():
+    return tiny_config()
+
+
+FAMILY_CONFIGS = {
+    "dense": dict(),
+    "dense_bias": dict(qkv_bias=True),
+    "swa": dict(sliding_window=8, num_kv_heads=4),
+    "moe": dict(arch_type="moe", d_ff=96, num_experts=4,
+                num_experts_per_tok=2),
+    "ssm": dict(arch_type="ssm", d_ff=0, ssm_state=16, ssm_head_dim=32,
+                ssm_chunk=8),
+    "hybrid": dict(arch_type="hybrid", ssm_state=16, ssm_head_dim=32,
+                   ssm_chunk=8),
+    "vlm": dict(arch_type="vlm", pos_embedding="mrope"),
+    "audio": dict(arch_type="audio", pos_embedding="sinusoidal",
+                  norm_type="layernorm", mlp_gated=False,
+                  mlp_activation="gelu", num_kv_heads=4),
+    "gemma_like": dict(mlp_activation="gelu", embedding_scale=True,
+                       tie_embeddings=True, head_dim=16),
+    "nemotron_like": dict(mlp_activation="relu2", mlp_gated=False,
+                          norm_type="layernorm", rope_pct=0.5),
+    "stablelm_like": dict(num_kv_heads=4, rope_pct=0.25,
+                          norm_type="layernorm"),
+}

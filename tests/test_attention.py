@@ -1,0 +1,116 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import (_attend, _attend_chunked, _project_qkv,
+                                    attention_decode, attention_prefill,
+                                    attention_train, causal_mask,
+                                    init_attention)
+
+from conftest import tiny_config
+
+
+def _qkv(cfg, b=2, s=16, seed=0):
+    p = init_attention(jax.random.PRNGKey(seed), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (b, s, cfg.d_model))
+    q, k, v = _project_qkv(cfg, p, x)
+    return p, x, q, k, v
+
+
+@pytest.mark.parametrize("kv_heads", [1, 2, 4])
+def test_chunked_matches_full(kv_heads):
+    cfg = tiny_config(num_kv_heads=kv_heads)
+    p, x, q, k, v = _qkv(cfg, s=32)
+    full = _attend(cfg, q, k, v, causal_mask(cfg, 32, 32))
+    import repro.models.attention as A
+    old = A.Q_CHUNK
+    A.Q_CHUNK = 8
+    try:
+        chunked = _attend_chunked(cfg, q, k, v)
+    finally:
+        A.Q_CHUNK = old
+    np.testing.assert_allclose(chunked, full, atol=2e-5)
+
+
+def test_chunked_matches_full_sliding_window():
+    cfg = tiny_config(sliding_window=6, num_kv_heads=4)
+    p, x, q, k, v = _qkv(cfg, s=32)
+    full = _attend(cfg, q, k, v, causal_mask(cfg, 32, 32))
+    import repro.models.attention as A
+    old = A.Q_CHUNK
+    A.Q_CHUNK = 8
+    try:
+        chunked = _attend_chunked(cfg, q, k, v)
+    finally:
+        A.Q_CHUNK = old
+    np.testing.assert_allclose(chunked, full, atol=2e-5)
+
+
+def test_chunked_nondivisible_seq():
+    cfg = tiny_config(num_kv_heads=4)
+    p, x, q, k, v = _qkv(cfg, s=19)
+    full = _attend(cfg, q, k, v, causal_mask(cfg, 19, 19))
+    import repro.models.attention as A
+    old = A.Q_CHUNK
+    A.Q_CHUNK = 8
+    try:
+        chunked = _attend_chunked(cfg, q, k, v)
+    finally:
+        A.Q_CHUNK = old
+    np.testing.assert_allclose(chunked, full, atol=2e-5)
+
+
+def test_sliding_window_masks_distant_keys():
+    """An input far outside the window cannot influence the output."""
+    cfg = tiny_config(sliding_window=4, num_kv_heads=4)
+    p = init_attention(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 16, cfg.d_model))
+    pos = jnp.arange(16)[None]
+    base = attention_train(cfg, p, x, pos)
+    x2 = x.at[0, 0].set(x[0, 0] + 100.0)
+    pert = attention_train(cfg, p, x2, pos)
+    # last position (15) is > window away from position 0
+    np.testing.assert_allclose(base[0, -1], pert[0, -1], atol=1e-4)
+    assert not np.allclose(base[0, 1], pert[0, 1], atol=1e-4)
+
+
+def test_decode_ring_buffer_equals_windowed_train():
+    """Ring-buffer decode == full recompute with sliding-window attention."""
+    cfg = tiny_config(sliding_window=8, num_kv_heads=4)
+    p = init_attention(jax.random.PRNGKey(0), cfg)
+    s = 24
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, s, cfg.d_model))
+    pos = jnp.arange(s)[None]
+    ref = attention_train(cfg, p, x, pos)
+    # decode token-by-token against a ring cache of exactly window size
+    ck = jnp.zeros((1, 8, cfg.num_kv_heads, cfg.resolved_head_dim))
+    cv = jnp.zeros_like(ck)
+    outs = []
+    for t in range(s):
+        o, ck, cv = attention_decode(cfg, p, x[:, t:t + 1], ck, cv,
+                                     jnp.array([t]))
+        outs.append(o[:, 0])
+    got = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(got, ref, atol=2e-4)
+
+
+def test_segment_ids_block_cross_attention():
+    cfg = tiny_config(num_kv_heads=4)
+    p = init_attention(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, cfg.d_model))
+    pos = jnp.arange(8)[None]
+    seg = jnp.array([[0, 0, 0, 0, 1, 1, 1, 1]])
+    base = attention_train(cfg, p, x, pos, segment_ids=seg)
+    # perturbing segment 0 must not affect segment 1 outputs
+    x2 = x.at[0, 1].add(50.0)
+    pert = attention_train(cfg, p, x2, pos, segment_ids=seg)
+    np.testing.assert_allclose(base[0, 4:], pert[0, 4:], atol=1e-4)
+
+
+def test_softcap_applied():
+    cfg = tiny_config(attn_logit_softcap=1.0, num_kv_heads=4)
+    p = init_attention(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, cfg.d_model)) * 10
+    y = attention_train(cfg, p, x, jnp.arange(8)[None])
+    assert jnp.isfinite(y).all()

@@ -1,0 +1,166 @@
+"""SART core: order statistics (Lemma 1), two-phase pruning, ensembling."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (OraclePRM, PruningConfig, TwoPhasePruner, best_of_n,
+                        empirical_mth_completion, majority_vote,
+                        order_statistic_cdf, order_statistic_expectation,
+                        weighted_vote)
+
+
+# ------------------------------------------------------------- Lemma 1
+
+
+def test_order_statistic_cdf_is_cdf():
+    f = np.linspace(0, 1, 101)
+    for m, n in [(1, 1), (2, 4), (4, 8), (8, 8)]:
+        g = order_statistic_cdf(f, m, n)
+        assert g[0] == pytest.approx(0.0)
+        assert g[-1] == pytest.approx(1.0)
+        assert (np.diff(g) >= -1e-12).all()
+
+
+def test_lemma1_monotone_in_n():
+    """F_{X_(M)}(x; N) increases with N  =>  M-th completion gets faster."""
+    f = np.linspace(0.01, 0.99, 99)
+    prev = order_statistic_cdf(f, 4, 4)
+    for n in (5, 6, 8, 12, 16):
+        cur = order_statistic_cdf(f, 4, n)
+        assert (cur >= prev - 1e-12).all()
+        prev = cur
+
+
+def test_lemma1_analytic_matches_monte_carlo(rng):
+    lengths = rng.lognormal(7.0, 0.8, size=4000)
+    m, n = 4, 8
+    analytic = order_statistic_expectation(lengths, m, n)
+    mc = empirical_mth_completion(lengths, m, n, trials=4000).mean()
+    assert abs(analytic - mc) / mc < 0.05
+
+
+def test_redundant_sampling_speedup_positive(rng):
+    lengths = rng.lognormal(7.0, 0.8, size=2000)
+    from repro.core import expected_speedup
+    s = expected_speedup(lengths, m=4, n=8)
+    assert s > 1.2   # heavy-tailed lengths -> real win
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 10), st.integers(0, 8))
+def test_order_stat_bounds(m, extra):
+    n = m + extra
+    f = np.linspace(0, 1, 31)
+    g = order_statistic_cdf(f, m, n)
+    # m-th of n is stochastically smaller than the max of n
+    gmax = order_statistic_cdf(f, n, n)
+    assert (g >= gmax - 1e-12).all()
+
+
+# ------------------------------------------------------- two-phase pruning
+
+
+def _pruner(alpha=0.5, beta=2):
+    return TwoPhasePruner(PruningConfig(alpha=alpha, beta=beta))
+
+
+def test_phase1_threshold_and_cap():
+    pr = _pruner(alpha=0.5, beta=2)
+    meta = pr.new_meta(n=8, m=4)
+    assert meta.phase == "explore" and meta.threshold == 0.5
+    rewards = {i: 0.1 * i for i in range(8)}    # 0.0 .. 0.7
+    victims = pr.select_prunes(meta, rewards)
+    assert victims == [0, 1]                     # cap β=2, lowest first
+    assert meta.num_pruned == 2
+    assert pr.select_prunes(meta, rewards) == []  # cap exhausted
+
+
+def test_phase2_raises_threshold_and_lifts_cap():
+    pr = _pruner(alpha=0.5, beta=2)
+    meta = pr.new_meta(n=8, m=4)
+    pr.on_completion(meta, reward=0.8)
+    assert meta.phase == "exploit"
+    assert meta.threshold == 0.8
+    assert meta.max_num_pruned == 7
+    rewards = {i: 0.1 * i for i in range(8)}     # all < 0.8
+    victims = pr.select_prunes(meta, rewards)
+    assert len(victims) == 7                     # n-1 cap binds
+    assert meta.num_pruned == 7
+
+
+def test_second_completion_keeps_phase2_threshold():
+    pr = _pruner()
+    meta = pr.new_meta(8, 4)
+    pr.on_completion(meta, 0.9)
+    pr.on_completion(meta, 0.2)                  # later, worse completion
+    assert meta.threshold == 0.9                 # α' fixed by the FIRST
+    assert meta.num_completed == 2
+
+
+def test_terminal_conditions():
+    pr = _pruner()
+    meta = pr.new_meta(n=4, m=2)
+    assert not meta.terminal
+    pr.on_completion(meta, 0.5)
+    pr.on_completion(meta, 0.5)
+    assert meta.terminal                         # early stop at m
+    meta2 = pr.new_meta(n=4, m=4)
+    meta2.num_completed, meta2.num_pruned = 1, 3
+    assert meta2.terminal                        # nothing left running
+
+
+def test_disabled_pruner_never_prunes():
+    pr = TwoPhasePruner(PruningConfig(enabled=False))
+    meta = pr.new_meta(8, 4)
+    assert pr.select_prunes(meta, {0: -1.0}) == []
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(2, 16), st.integers(1, 8),
+       st.lists(st.floats(0, 1), min_size=1, max_size=16),
+       st.floats(0, 1))
+def test_prune_counts_never_exceed_caps(n, beta, rewards, alpha):
+    pr = TwoPhasePruner(PruningConfig(alpha=alpha, beta=beta))
+    meta = pr.new_meta(n, max(n // 2, 1))
+    rd = {i: r for i, r in enumerate(rewards)}
+    v1 = pr.select_prunes(meta, rd)
+    assert len(v1) <= min(beta, n - 1)
+    pr.on_completion(meta, 0.6)
+    v2 = pr.select_prunes(meta, rd)
+    assert meta.num_pruned <= n - 1
+    assert set(v1).issubset(set(rd)) and set(v2).issubset(set(rd))
+
+
+# ------------------------------------------------------------- ensembling
+
+
+def _answers(pairs):
+    # encode answer in tokens via a passthrough answer_fn
+    return [(ans, r) for ans, r in pairs], (lambda tokens: tokens)
+
+
+def test_best_of_n_picks_highest_reward():
+    completed, fn = _answers([(1, 0.2), (2, 0.9), (3, 0.5)])
+    assert best_of_n(completed, fn) == 2
+
+
+def test_majority_vote_counts():
+    completed, fn = _answers([(1, 0.1), (1, 0.2), (2, 0.99)])
+    assert majority_vote(completed, fn) == 1
+
+
+def test_majority_tie_breaks_by_reward():
+    completed, fn = _answers([(1, 0.1), (2, 0.9)])
+    assert majority_vote(completed, fn) == 2
+
+
+def test_weighted_vote():
+    completed, fn = _answers([(1, 0.3), (1, 0.3), (2, 0.9)])
+    assert weighted_vote(completed, fn) == 2
+
+
+def test_none_answers_skipped():
+    completed = [([1], 0.9), ([2], 0.5)]
+    fn = lambda tokens: None if tokens == [1] else 42
+    assert best_of_n(completed, fn) == 42
+    assert majority_vote(completed, fn) == 42

@@ -1,0 +1,160 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles
+(interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.paged_attention.ops import paged_attention
+from repro.kernels.paged_attention.ref import paged_attention_decode_ref
+from repro.kernels.ssd_scan.ops import ssd
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+from repro.models.mamba2 import ssd_chunked
+
+
+@pytest.mark.parametrize("b,qh,kvh,hd,ps,pps", [
+    (2, 4, 2, 64, 8, 4),
+    (3, 8, 8, 128, 16, 3),
+    (1, 8, 1, 256, 8, 5),
+    (4, 2, 2, 32, 4, 8),
+])
+def test_paged_attention_shapes(rng, b, qh, kvh, hd, ps, pps):
+    npages = b * pps + 2
+    q = jnp.asarray(rng.normal(size=(b, qh, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(kvh, npages, ps, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(kvh, npages, ps, hd)), jnp.float32)
+    bt = jnp.asarray(rng.integers(0, npages, size=(b, pps)), jnp.int32)
+    lens = jnp.asarray(rng.integers(1, pps * ps + 1, size=(b,)), jnp.int32)
+    out = paged_attention(q, k, v, bt, lens)
+    ref = paged_attention_decode_ref(q, k, v, bt, lens)
+    np.testing.assert_allclose(out, ref, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype,atol", [(jnp.float32, 2e-4),
+                                        (jnp.bfloat16, 5e-2)])
+def test_paged_attention_dtypes(rng, dtype, atol):
+    b, qh, kvh, hd, ps, pps = 2, 4, 2, 64, 8, 4
+    npages = 16
+    q = jnp.asarray(rng.normal(size=(b, qh, hd))).astype(dtype)
+    k = jnp.asarray(rng.normal(size=(kvh, npages, ps, hd))).astype(dtype)
+    v = jnp.asarray(rng.normal(size=(kvh, npages, ps, hd))).astype(dtype)
+    bt = jnp.asarray(rng.integers(0, npages, size=(b, pps)), jnp.int32)
+    lens = jnp.asarray(rng.integers(1, pps * ps, size=(b,)), jnp.int32)
+    out = paged_attention(q, k, v, bt, lens)
+    ref = paged_attention_decode_ref(q, k, v, bt, lens)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=atol)
+
+
+def test_paged_attention_shared_prefix(rng):
+    """Two sequences whose block tables share prefix pages: identical
+    prefix + identical query => identical output."""
+    kvh, hd, ps, pps = 2, 64, 8, 4
+    npages = 12
+    k = jnp.asarray(rng.normal(size=(kvh, npages, ps, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(kvh, npages, ps, hd)), jnp.float32)
+    qrow = jnp.asarray(rng.normal(size=(4, hd)), jnp.float32)
+    q = jnp.stack([qrow, qrow])
+    shared = [3, 7]
+    bt = jnp.asarray([shared + [1, 2], shared + [5, 6]], jnp.int32)
+    lens = jnp.asarray([2 * ps, 2 * ps], jnp.int32)  # only shared pages live
+    out = paged_attention(q, k, v, bt, lens)
+    np.testing.assert_allclose(out[0], out[1], atol=1e-6)
+
+
+def test_paged_attention_length_masking(rng):
+    """Tokens beyond `lengths` must not affect the result."""
+    b, qh, kvh, hd, ps, pps = 1, 2, 1, 32, 4, 3
+    npages = 6
+    q = jnp.asarray(rng.normal(size=(b, qh, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(kvh, npages, ps, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(kvh, npages, ps, hd)), jnp.float32)
+    bt = jnp.asarray([[0, 1, 2]], jnp.int32)
+    lens = jnp.asarray([5], jnp.int32)
+    base = paged_attention(q, k, v, bt, lens)
+    k2 = k.at[:, 1, 3].set(99.0)  # token index 7 > length 5
+    v2 = v.at[:, 1, 3].set(99.0)
+    pert = paged_attention(q, k2, v2, bt, lens)
+    np.testing.assert_allclose(base, pert, atol=1e-6)
+
+
+@pytest.mark.parametrize("b,s,h,p,n,q", [
+    (2, 32, 3, 16, 8, 8),
+    (1, 64, 2, 32, 16, 16),
+    (2, 40, 4, 8, 4, 16),
+    (1, 16, 1, 64, 32, 4),
+])
+def test_ssd_kernel_shapes(rng, b, s, h, p, n, q):
+    x = jnp.asarray(rng.normal(size=(b, s, h, p)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, size=(b, s, h)), jnp.float32)
+    a = -jnp.asarray(rng.uniform(0.5, 2, size=(h,)), jnp.float32)
+    bb = jnp.asarray(rng.normal(size=(b, s, h, n)), jnp.float32)
+    cc = jnp.asarray(rng.normal(size=(b, s, h, n)), jnp.float32)
+    ref = ssd_scan_ref(x, dt, a, bb, cc)
+    ker = ssd(x, dt, a, bb, cc, chunk=q)
+    chk, _ = ssd_chunked(x, dt, a, bb, cc, chunk=q)
+    np.testing.assert_allclose(ker, ref, atol=2e-4)
+    np.testing.assert_allclose(chk, ref, atol=2e-4)
+
+
+def test_ssd_kernel_nondivisible_padding(rng):
+    x = jnp.asarray(rng.normal(size=(1, 13, 2, 8)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, size=(1, 13, 2)), jnp.float32)
+    a = -jnp.ones((2,), jnp.float32)
+    bb = jnp.asarray(rng.normal(size=(1, 13, 2, 4)), jnp.float32)
+    cc = jnp.asarray(rng.normal(size=(1, 13, 2, 4)), jnp.float32)
+    ref = ssd_scan_ref(x, dt, a, bb, cc)
+    ker = ssd(x, dt, a, bb, cc, chunk=8)
+    np.testing.assert_allclose(ker, ref, atol=2e-4)
+
+
+def test_ssd_kernel_bf16(rng):
+    x = jnp.asarray(rng.normal(size=(1, 16, 2, 8))).astype(jnp.bfloat16)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, size=(1, 16, 2))).astype(jnp.bfloat16)
+    a = -jnp.ones((2,), jnp.float32)
+    bb = jnp.asarray(rng.normal(size=(1, 16, 2, 4))).astype(jnp.bfloat16)
+    cc = jnp.asarray(rng.normal(size=(1, 16, 2, 4))).astype(jnp.bfloat16)
+    ker = ssd(x, dt, a, bb, cc, chunk=8)
+    ref = ssd_scan_ref(x.astype(jnp.float32), dt.astype(jnp.float32), a,
+                       bb.astype(jnp.float32), cc.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(ker, np.float32), ref, atol=0.15)
+
+
+@pytest.mark.parametrize("b,s,h,hd,bq,bk", [
+    (2, 64, 4, 64, 16, 16),
+    (1, 128, 2, 128, 32, 64),
+    (2, 48, 3, 32, 16, 16),
+    (1, 100, 2, 64, 32, 32),   # non-divisible: causal padding path
+])
+def test_flash_prefill_shapes(rng, b, s, h, hd, bq, bk):
+    from repro.kernels.flash_prefill.ops import flash_attention
+    from repro.kernels.flash_prefill.ref import flash_prefill_ref
+    q = jnp.asarray(rng.normal(size=(b, s, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, h, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, h, hd)), jnp.float32)
+    out = flash_attention(q, k, v, block_q=bq, block_k=bk)
+    ref = flash_prefill_ref(q, k, v)
+    np.testing.assert_allclose(out, ref, atol=2e-4)
+
+
+def test_flash_prefill_bf16(rng):
+    from repro.kernels.flash_prefill.ops import flash_attention
+    from repro.kernels.flash_prefill.ref import flash_prefill_ref
+    q = jnp.asarray(rng.normal(size=(1, 64, 2, 64))).astype(jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(1, 64, 2, 64))).astype(jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(1, 64, 2, 64))).astype(jnp.bfloat16)
+    out = flash_attention(q, k, v, block_q=16, block_k=16)
+    ref = flash_prefill_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                            v.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(out, np.float32), ref, atol=5e-2)
+
+
+def test_flash_prefill_noncausal(rng):
+    from repro.kernels.flash_prefill.ops import flash_attention
+    from repro.kernels.flash_prefill.ref import flash_prefill_ref
+    q = jnp.asarray(rng.normal(size=(1, 32, 2, 32)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 32, 2, 32)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 32, 2, 32)), jnp.float32)
+    out = flash_attention(q, k, v, causal=False, block_q=16, block_k=16)
+    ref = flash_prefill_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(out, ref, atol=2e-4)

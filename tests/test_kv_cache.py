@@ -1,0 +1,109 @@
+"""PageAllocator: unit tests + hypothesis property tests of the refcount
+invariants under arbitrary fork/append/release interleavings."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kv import BranchBlocks, OutOfPagesError, PageAllocator
+
+
+def test_alloc_free_roundtrip():
+    a = PageAllocator(8, 4)
+    pids = [a.alloc() for _ in range(8)]
+    assert a.free_pages == 0
+    with pytest.raises(OutOfPagesError):
+        a.alloc()
+    for p in pids:
+        a.decref(p)
+    assert a.free_pages == 8
+    a.check_invariants()
+
+
+def test_prefix_fork_shares_pages():
+    a = PageAllocator(16, 4)
+    prefix = a.alloc_prefix(10)          # 3 pages
+    assert len(prefix.pages) == 3
+    b1 = a.fork(prefix)
+    b2 = a.fork(prefix)
+    assert b1.pages == prefix.pages == b2.pages
+    assert all(a.refcount(p) == 3 for p in prefix.pages)
+    assert a.used_pages == 3             # sharing, not copying
+
+
+def test_cow_on_shared_partial_page():
+    a = PageAllocator(16, 4)
+    prefix = a.alloc_prefix(10)          # page 2 holds 2 tokens
+    b1 = a.fork(prefix)
+    assert a.needs_cow(b1)
+    cow = a.append_token(b1)
+    assert cow is not None
+    old, new = cow
+    assert old == prefix.pages[-1] and new == b1.pages[-1] != old
+    assert a.refcount(old) == 1          # only the prefix holds it now
+    assert b1.length == 11
+
+
+def test_no_cow_on_page_boundary():
+    a = PageAllocator(16, 4)
+    prefix = a.alloc_prefix(8)           # exactly 2 full pages
+    b1 = a.fork(prefix)
+    assert not a.needs_cow(b1)
+    cow = a.append_token(b1)
+    assert cow is None
+    assert len(b1.pages) == 3            # fresh page allocated
+    assert b1.pages[:2] == prefix.pages
+
+
+def test_eager_release_returns_shared_last():
+    a = PageAllocator(16, 4)
+    prefix = a.alloc_prefix(8)
+    b1, b2 = a.fork(prefix), a.fork(prefix)
+    a.release(b1)
+    assert a.used_pages == 2             # still shared with b2 + prefix
+    a.release(b2)
+    a.release(prefix)
+    assert a.used_pages == 0
+    a.check_invariants()
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(st.sampled_from(["fork", "append", "release"]),
+                min_size=1, max_size=120),
+       st.integers(1, 12))
+def test_invariants_under_interleaving(ops, prompt_len):
+    a = PageAllocator(64, 4)
+    prefix = a.alloc_prefix(prompt_len)
+    branches = []
+    for op in ops:
+        try:
+            if op == "fork":
+                if len(branches) < 8:
+                    branches.append(a.fork(prefix))
+            elif op == "append" and branches:
+                a.append_token(branches[0])
+            elif op == "release" and branches:
+                a.release(branches.pop())
+        except OutOfPagesError:
+            pass
+        a.check_invariants()
+    for b in branches:
+        a.release(b)
+    a.release(prefix)
+    assert a.used_pages == 0
+    a.check_invariants()
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(1, 40), st.integers(1, 6), st.integers(0, 30))
+def test_fork_append_release_exact_counts(prompt_len, n_forks, n_appends):
+    """After releasing everything, zero pages are used — no leaks ever."""
+    a = PageAllocator(256, 4)
+    prefix = a.alloc_prefix(prompt_len)
+    forks = [a.fork(prefix) for _ in range(n_forks)]
+    for b in forks:
+        for _ in range(n_appends):
+            a.append_token(b)
+        assert b.length == prompt_len + n_appends
+    for b in forks:
+        a.release(b)
+    a.release(prefix)
+    assert a.used_pages == 0

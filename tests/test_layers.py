@@ -1,0 +1,124 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import ModelConfig
+from repro.models.layers import (apply_mlp, apply_norm, apply_rope,
+                                 apply_mrope, embed_tokens, init_embedding,
+                                 init_mlp, init_norm, sinusoidal_embedding,
+                                 unembed)
+
+from conftest import tiny_config
+
+
+def test_rmsnorm_unit_scale():
+    cfg = tiny_config()
+    p = init_norm(cfg, 64)
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 64)) * 5
+    y = apply_norm(cfg, p, x)
+    rms = jnp.sqrt(jnp.mean(jnp.square(y), axis=-1))
+    np.testing.assert_allclose(rms, 1.0, atol=1e-3)
+
+
+def test_layernorm_zero_mean():
+    cfg = tiny_config(norm_type="layernorm")
+    p = init_norm(cfg, 64)
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 64)) + 3.0
+    y = apply_norm(cfg, p, x)
+    np.testing.assert_allclose(jnp.mean(y, -1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(jnp.std(y, -1), 1.0, atol=1e-3)
+
+
+@pytest.mark.parametrize("act,gated", [("silu", True), ("gelu", True),
+                                       ("gelu", False), ("relu2", False)])
+def test_mlp_variants(act, gated):
+    cfg = tiny_config(mlp_activation=act, mlp_gated=gated)
+    p = init_mlp(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 64))
+    y = apply_mlp(cfg, p, x)
+    assert y.shape == x.shape
+    assert jnp.isfinite(y).all()
+
+
+def test_relu2_is_squared_relu():
+    cfg = tiny_config(mlp_activation="relu2", mlp_gated=False, d_ff=64)
+    p = init_mlp(jax.random.PRNGKey(0), cfg)
+    x = jnp.ones((1, 1, 64))
+    up = x @ p["w_up"]
+    expect = jnp.maximum(up, 0) ** 2 @ p["w_down"]
+    np.testing.assert_allclose(apply_mlp(cfg, p, x), expect, rtol=1e-6)
+
+
+def test_rope_relative_property():
+    """RoPE dot products depend only on relative offsets."""
+    cfg = tiny_config()
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 1, 1, 64))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, 64))
+    def dot_at(pq, pk):
+        qa = apply_rope(cfg, q, jnp.array([[pq]]))
+        ka = apply_rope(cfg, k, jnp.array([[pk]]))
+        return float(jnp.sum(qa * ka))
+    assert abs(dot_at(5, 3) - dot_at(105, 103)) < 1e-3
+    assert abs(dot_at(5, 3) - dot_at(6, 3)) > 1e-4  # actually differs
+
+
+def test_partial_rope_preserves_tail():
+    cfg = tiny_config(rope_pct=0.25)
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 4, 2, 64))
+    y = apply_rope(cfg, x, jnp.arange(4)[None])
+    rot = int(64 * 0.25) // 2 * 2
+    np.testing.assert_allclose(y[..., rot:], x[..., rot:], atol=1e-6)
+    assert not np.allclose(y[..., :rot], x[..., :rot])
+
+
+def test_mrope_degenerates_to_rope_for_text():
+    """Equal position streams == 1-D RoPE with remapped frequencies."""
+    cfg = tiny_config(pos_embedding="mrope")
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 6, 2, 64))
+    pos = jnp.arange(6)[None]
+    pos3 = jnp.broadcast_to(pos[..., None], (1, 6, 3))
+    y3 = apply_mrope(cfg, x, pos3)
+    # relative property: dot(q_i, k_j) depends only on i - j
+    q = y3[:, 3:4]
+    k = y3[:, 1:2]
+    pos3b = pos3 + 7
+    y3b = apply_mrope(cfg, x, pos3b)
+    np.testing.assert_allclose(
+        jnp.einsum("bshd,bthd->", q, k),
+        jnp.einsum("bshd,bthd->", y3b[:, 3:4], y3b[:, 1:2]), rtol=1e-4)
+
+
+def test_mrope_distinct_streams_differ():
+    cfg = tiny_config(pos_embedding="mrope")
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 4, 2, 64))
+    same = jnp.broadcast_to(jnp.arange(4)[None, :, None], (1, 4, 3))
+    spatial = same.at[..., 1].add(5)
+    assert not np.allclose(apply_mrope(cfg, x, same),
+                           apply_mrope(cfg, x, spatial))
+
+
+def test_sinusoidal_shapes():
+    e = sinusoidal_embedding(jnp.arange(10), 64)
+    assert e.shape == (10, 64)
+    assert jnp.isfinite(e).all()
+
+
+def test_embedding_scale_and_tie():
+    cfg = tiny_config(embedding_scale=True, tie_embeddings=True)
+    p = init_embedding(jax.random.PRNGKey(0), cfg)
+    assert "lm_head" not in p
+    toks = jnp.array([[1, 2, 3]])
+    x = embed_tokens(cfg, p, toks)
+    raw = p["embedding"][jnp.array([1, 2, 3])]
+    np.testing.assert_allclose(x[0], raw * np.sqrt(cfg.d_model), rtol=1e-6)
+    logits = unembed(cfg, p, x)
+    assert logits.shape == (1, 3, cfg.vocab_size)
+
+
+def test_logit_softcap_bounds():
+    cfg = tiny_config(logit_softcap=5.0, tie_embeddings=True)
+    p = init_embedding(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 2, 64)) * 100
+    logits = unembed(cfg, p, x)
+    assert float(jnp.max(jnp.abs(logits))) <= 5.0 + 1e-4

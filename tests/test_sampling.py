@@ -1,0 +1,69 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.serving.sampling import (SamplingParams, apply_top_k, apply_top_p,
+                                    sample)
+
+
+def test_greedy_temperature_zero():
+    logits = jnp.array([1.0, 5.0, 2.0])
+    tok = sample(jax.random.PRNGKey(0), logits,
+                 SamplingParams(temperature=0.0))
+    assert int(tok) == 1
+
+
+def test_top_k_keeps_exactly_k():
+    logits = jnp.arange(10.0)
+    out = apply_top_k(logits, 3)
+    assert int(jnp.sum(out > -1e29)) == 3
+    assert (out[-3:] == logits[-3:]).all()
+
+
+def test_top_p_always_keeps_argmax():
+    logits = jnp.array([10.0, 0.0, 0.0])
+    out = apply_top_p(logits, 0.01)
+    assert out[0] == 10.0
+    assert int(jnp.sum(out > -1e29)) == 1
+
+
+def test_top_p_one_is_identity():
+    logits = jax.random.normal(jax.random.PRNGKey(0), (32,))
+    np.testing.assert_array_equal(apply_top_p(logits, 1.0), logits)
+
+
+def test_sample_respects_top_k_support():
+    logits = jnp.arange(16.0)
+    keys = jax.random.split(jax.random.PRNGKey(0), 200)
+    toks = jax.vmap(lambda k: sample(k, logits, SamplingParams(
+        temperature=1.0, top_k=4)))(keys)
+    assert set(np.asarray(toks).tolist()) <= {12, 13, 14, 15}
+
+
+def test_sample_distribution_roughly_softmax():
+    logits = jnp.array([0.0, jnp.log(3.0)])   # probs 0.25 / 0.75
+    keys = jax.random.split(jax.random.PRNGKey(1), 2000)
+    toks = jax.vmap(lambda k: sample(k, logits, SamplingParams()))(keys)
+    frac1 = float(jnp.mean(toks == 1))
+    assert 0.70 < frac1 < 0.80
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(0.1, 0.99), st.integers(2, 64))
+def test_top_p_support_nonempty_and_sound(p, v):
+    logits = jax.random.normal(jax.random.PRNGKey(42), (v,))
+    out = apply_top_p(logits, p)
+    kept = np.asarray(out > -1e29)
+    assert kept.sum() >= 1
+    # kept mass >= p (smallest set property)
+    probs = np.asarray(jax.nn.softmax(logits))
+    assert probs[kept].sum() >= p - 1e-3
+
+
+def test_batched_sampling_shape():
+    logits = jax.random.normal(jax.random.PRNGKey(0), (8, 32))
+    toks = sample(jax.random.PRNGKey(1), logits, SamplingParams())
+    assert toks.shape == (8,)
+    assert ((toks >= 0) & (toks < 32)).all()

@@ -1,0 +1,175 @@
+"""Algorithm 1 scheduler: policies, early stopping, pruning, no leaks."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import OraclePRM, Scheduler, SchedulerConfig
+from repro.core.scheduler import percentile_latency
+from repro.data import tasks
+from repro.data import tokenizer as tk
+from repro.models import Model
+from repro.serving import Engine, EngineConfig, SamplingParams
+
+from conftest import tiny_config
+
+
+def _setup(policy, n=4, slots=8, window=8, max_tokens=48, seed=1,
+           num_requests=4, arrival_gap=5):
+    cfg = tiny_config(vocab_size=tk.VOCAB_SIZE)
+    model = Model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    eng = Engine(model, params, EngineConfig(
+        page_size=8, num_pages=256, max_slots=slots,
+        max_pages_per_branch=16, eos_id=tk.EOS,
+        sampling=SamplingParams(temperature=1.0, top_p=0.95), seed=seed))
+    prm = OraclePRM(tasks.oracle_grader, noise=0.05, seed=seed + 1)
+    sch = Scheduler(eng, prm, SchedulerConfig(
+        policy=policy, n=n, window=window, max_tokens=max_tokens),
+        answer_fn=tasks.extract_answer)
+    rng = np.random.default_rng(seed + 2)
+    probs = [tasks.gen_problem(rng) for _ in range(num_requests)]
+    for i, p in enumerate(probs):
+        sch.submit(p.prompt_tokens(), payload=p, arrival=i * arrival_gap)
+    return eng, sch, probs
+
+
+@pytest.mark.parametrize("policy", ["vanilla", "sc", "sart", "sart_noprune",
+                                    "rebase"])
+def test_policy_completes_all_requests(policy):
+    eng, sch, probs = _setup(policy)
+    m = sch.run(max_steps=20000)
+    assert len(m["requests"]) == len(probs)
+    assert all(r["finish"] >= r["arrival"] for r in m["requests"])
+    eng.allocator.check_invariants()
+    assert eng.allocator.used_pages == 0, f"{policy}: page leak"
+    assert all(s is None for s in eng.slots), f"{policy}: slot leak"
+
+
+def test_vanilla_single_branch():
+    eng, sch, _ = _setup("vanilla")
+    m = sch.run(max_steps=20000)
+    for r in m["requests"]:
+        assert r["num_completed"] == 1
+        assert r["num_pruned"] == 0
+        assert len(r["response_lengths"]) == 1
+
+
+def test_sc_waits_for_all_n():
+    eng, sch, _ = _setup("sc", n=4)
+    m = sch.run(max_steps=20000)
+    for r in m["requests"]:
+        assert r["num_completed"] == 4
+
+
+def test_sart_early_stops_at_m():
+    eng, sch, _ = _setup("sart", n=4)      # m defaults to n//2 = 2
+    m = sch.run(max_steps=20000)
+    for r in m["requests"]:
+        assert r["num_completed"] + r["num_pruned"] <= 4
+        assert r["num_completed"] >= 1
+        # early stop: never more than m completions + the window slack
+        assert r["num_completed"] <= 2
+
+
+def test_sart_noprune_never_prunes():
+    eng, sch, _ = _setup("sart_noprune", n=4)
+    m = sch.run(max_steps=20000)
+    assert all(r["num_pruned"] == 0 for r in m["requests"])
+
+
+def test_pruning_occurs_with_hostile_prm():
+    """A PRM that hates everything prunes aggressively in phase 1."""
+    eng, sch, probs = _setup("sart", n=4, num_requests=2)
+    sch.prm = OraclePRM(lambda req, toks: 0.0, noise=0.0)
+    m = sch.run(max_steps=20000)
+    assert any(r["num_pruned"] > 0 for r in m["requests"])
+    assert eng.allocator.used_pages == 0
+
+
+def test_metrics_structure():
+    eng, sch, _ = _setup("sart", num_requests=3)
+    m = sch.run(max_steps=20000)
+    r = m["requests"][0]
+    for key in ("e2e", "queue", "inference", "arrival", "finish"):
+        assert key in r
+    assert r["e2e"] == r["queue"] + r["inference"] + \
+        (r["first_service"] - r["first_service"])  # identity check
+    assert np.isfinite(percentile_latency(m, 97))
+    t = m["timeline"]
+    assert len(t.steps) == len(t.live_branches) == len(t.live_tokens)
+
+
+def test_fcfs_first_service_ordering():
+    eng, sch, _ = _setup("sart", num_requests=4, arrival_gap=30)
+    m = sch.run(max_steps=20000)
+    fs = [r["first_service"] for r in
+          sorted(m["requests"], key=lambda r: r["arrival"])]
+    assert fs == sorted(fs)
+
+
+def test_queue_latency_grows_under_load():
+    """Tiny slot budget + many branches => later requests queue (the
+    phenomenon SART's pruning attacks)."""
+    eng, sch, _ = _setup("sc", n=4, slots=4, num_requests=4, arrival_gap=0)
+    m = sch.run(max_steps=40000)
+    qs = [r["queue"] for r in m["requests"]]
+    assert max(qs) > 0
+
+
+def test_preemptive_scheduling():
+    """Beyond-paper: preemption suspends the weakest branch to admit a
+    waiting request, cutting its queuing delay; everything still completes
+    with no slot or page leaks."""
+    eng, sch, probs = _setup("sart", n=4, slots=4, num_requests=4,
+                             arrival_gap=0)
+    sch.cfg = sch.cfg.__class__(**{**sch.cfg.__dict__, "preempt": True})
+    m = sch.run(max_steps=40000)
+    assert len(m["requests"]) == 4
+    eng.allocator.check_invariants()
+    assert eng.allocator.used_pages == 0
+    assert all(s is None for s in eng.slots)
+    # with preemption under full contention, later requests get service
+    # earlier than the non-preemptive run
+    eng2, sch2, _ = _setup("sart", n=4, slots=4, num_requests=4,
+                           arrival_gap=0)
+    m2 = sch2.run(max_steps=40000)
+    q_pre = sorted(r["queue"] for r in m["requests"])
+    q_base = sorted(r["queue"] for r in m2["requests"])
+    assert q_pre[-1] <= q_base[-1]
+
+
+def test_suspend_resume_preserves_generation():
+    """A suspended+resumed branch continues exactly where it left off."""
+    import jax
+    from repro.models import Model
+    from repro.serving import Engine, EngineConfig, SamplingParams
+    from conftest import tiny_config
+
+    cfg = tiny_config()
+    model = Model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+
+    def run(with_suspend):
+        eng = Engine(model, params, EngineConfig(
+            page_size=4, num_pages=64, max_slots=2, max_pages_per_branch=16,
+            eos_id=1, sampling=SamplingParams(temperature=0.0), seed=0))
+        blocks, lg, ssm = eng.prefill([2, 5, 9, 13])
+        h = eng.spawn_branch(0, blocks, lg, ssm, 4)
+        for _ in range(4):
+            eng.decode_step()
+        if with_suspend:
+            eng.suspend_branch(h)
+            # another branch occupies the slot meanwhile
+            other = eng.spawn_branch(1, blocks, lg, ssm, 4)
+            eng.decode_step()
+            eng.free_branch(other)
+            assert eng.resume_branch(h)
+        for _ in range(4):
+            eng.decode_step()
+        toks = list(h.tokens)
+        eng.free_branch(h)
+        eng.release_prefix(blocks)
+        assert eng.allocator.used_pages == 0
+        return toks
+
+    assert run(False) == run(True)

@@ -1,0 +1,125 @@
+"""Sharding rules: coverage over every arch's param tree + sanitizer."""
+import types
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ASSIGNED, get_config
+from repro.distributed.sharding import (param_pspecs, param_spec,
+                                        sanitize_pspecs)
+from repro.models import Model, smoke_variant
+
+
+def fake_mesh(**axes):
+    return types.SimpleNamespace(
+        axis_names=tuple(axes),
+        devices=types.SimpleNamespace(
+            shape=tuple(axes.values()),
+            size=int(jnp.prod(jnp.asarray(list(axes.values()))))))
+
+
+@pytest.mark.parametrize("arch", sorted(ASSIGNED))
+def test_param_rules_cover_every_leaf(arch):
+    """Every parameter of every architecture matches a sharding rule."""
+    cfg = smoke_variant(get_config(arch))
+    model = Model(cfg)
+    pshape = jax.eval_shape(lambda: model.init_params(jax.random.PRNGKey(0)))
+    specs = param_pspecs(pshape)   # raises KeyError on uncovered paths
+    leaves = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(leaves) == len(jax.tree.leaves(pshape))
+    for spec, leaf in zip(leaves, jax.tree.leaves(pshape)):
+        assert len(spec) <= leaf.ndim
+
+
+def test_param_spec_examples():
+    assert param_spec("layers/attn/wq", 3) == P(None, "data", "model")
+    assert param_spec("layers/attn/wo", 3) == P(None, "model", "data")
+    assert param_spec("layers/moe/w_up", 4) == P(None, "model", "data", None)
+    assert param_spec("embed/embedding", 2) == P("model", None)
+    assert param_spec("final_norm/scale", 1) == P(None)
+    with pytest.raises(KeyError):
+        param_spec("layers/unknown/w", 2)
+
+
+def test_sanitize_drops_nondivisible():
+    mesh = fake_mesh(data=16, model=16)
+    shapes = {
+        "ok": jax.ShapeDtypeStruct((32, 64), jnp.float32),
+        "bad_dim0": jax.ShapeDtypeStruct((50280, 64), jnp.float32),
+        "bad_dim1": jax.ShapeDtypeStruct((32, 2), jnp.float32),
+    }
+    specs = {
+        "ok": P("data", "model"),
+        "bad_dim0": P("model", None),
+        "bad_dim1": P(None, "model"),
+    }
+    out = sanitize_pspecs(specs, shapes, mesh)
+    assert out["ok"] == P("data", "model")
+    assert out["bad_dim0"] == P(None, None)
+    assert out["bad_dim1"] == P(None, None)
+
+
+def test_sanitize_handles_tuple_axes():
+    mesh = fake_mesh(pod=2, data=16, model=16)
+    shapes = {"x": jax.ShapeDtypeStruct((64, 8), jnp.float32)}
+    specs = {"x": P(("pod", "data"), None)}
+    out = sanitize_pspecs(specs, shapes, mesh)
+    assert out["x"] == P(("pod", "data"), None)      # 64 % 32 == 0
+    shapes2 = {"x": jax.ShapeDtypeStruct((40, 8), jnp.float32)}
+    out2 = sanitize_pspecs(specs, shapes2, mesh)
+    assert out2["x"] == P(None, None)                # 40 % 32 != 0
+
+
+def test_cache_specs_shape_aware():
+    from repro.distributed.sharding import cache_pspecs
+    kshape = {"k": jax.ShapeDtypeStruct((24, 128, 32768, 2, 64),
+                                        jnp.bfloat16),
+              "v": jax.ShapeDtypeStruct((24, 128, 32768, 2, 64),
+                                        jnp.bfloat16)}
+    specs = cache_pspecs(kshape, ("data",), tp_size=16)
+    # kv=2 not divisible -> model axis lands on sequence
+    assert specs["k"] == P(None, ("data",), "model", None, None)
+    kshape32 = {"k": jax.ShapeDtypeStruct((24, 128, 32768, 32, 64),
+                                          jnp.bfloat16)}
+    specs32 = cache_pspecs(kshape32, ("data",), tp_size=16)
+    assert specs32["k"] == P(None, ("data",), None, "model", None)
+
+
+def test_drop_fsdp_removes_data_axis_only():
+    from repro.distributed.sharding import drop_fsdp
+    specs = {
+        "w": P("data", "model"),
+        "o": P("model", "data"),
+        "tup": P(("pod", "data"), None),
+        "norm": P(None),
+    }
+    out = drop_fsdp(specs)
+    assert out["w"] == P(None, "model")
+    assert out["o"] == P("model", None)
+    assert out["tup"] == P(("pod",), None)
+    assert out["norm"] == P(None)
+
+
+def test_constrain_is_identity_outside_context():
+    import jax.numpy as jnp
+    from repro.distributed.logical import constrain
+    x = jnp.ones((4, 4))
+    assert constrain(x, "btd") is x
+
+
+def test_moe_dp_chunks_reads_context():
+    from repro.distributed.logical import activation_rules, moe_dp_chunks
+    assert moe_dp_chunks() == 0
+    with activation_rules(None, {"_moe_dp": 16}):
+        assert moe_dp_chunks() == 16
+    assert moe_dp_chunks() == 0
+
+
+def test_analysis_mode_togglable():
+    from repro.distributed.logical import analysis_mode, scan_unroll
+    assert scan_unroll() is False
+    with analysis_mode():
+        assert scan_unroll() is True
+    assert scan_unroll() is False

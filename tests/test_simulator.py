@@ -1,0 +1,97 @@
+"""Trace-driven simulator: same Scheduler, simulated engine."""
+import numpy as np
+import pytest
+
+from repro.core.scheduler import percentile_latency
+from repro.serving.simulator import (SimEngine, SimEngineConfig, SimWorkload,
+                                     run_sim_experiment)
+
+
+def _fast_workload(**kw):
+    base = dict(mean_len=120, sigma_len=0.5, overthink_p=0.15,
+                overthink_mult=4.0, prompt_len=16)
+    base.update(kw)
+    return SimWorkload(**base)
+
+
+def _cfg(**kw):
+    base = dict(max_slots=16, page_size=8, num_pages=4096)
+    base.update(kw)
+    return SimEngineConfig(**base)
+
+
+@pytest.mark.parametrize("policy,n", [("vanilla", 1), ("sc", 4),
+                                      ("sart", 8), ("sart_noprune", 8),
+                                      ("rebase", 4)])
+def test_sim_policies_complete(policy, n):
+    m, acc = run_sim_experiment(policy, n, num_requests=10, arrival_gap=20,
+                                workload=_fast_workload(),
+                                engine_cfg=_cfg(), window=25, seed=0)
+    assert len(m["requests"]) == 10
+    assert 0.0 <= acc <= 1.0
+
+
+def test_sart_beats_sc_latency_at_same_n():
+    w = _fast_workload()
+    m_sc, _ = run_sim_experiment("sc", 4, num_requests=20, arrival_gap=15,
+                                 workload=w, engine_cfg=_cfg(), window=25,
+                                 seed=1)
+    m_sart, _ = run_sim_experiment("sart", 8, num_requests=20,
+                                   arrival_gap=15, workload=w,
+                                   engine_cfg=_cfg(), window=25, seed=1)
+    assert percentile_latency(m_sart, 50) < percentile_latency(m_sc, 50)
+
+
+def test_early_stopping_shortens_tail():
+    """Paper Fig. 7: tail latency improves with redundant sampling."""
+    w = _fast_workload(overthink_p=0.3)
+    m1, _ = run_sim_experiment("vanilla", 1, num_requests=30,
+                               arrival_gap=30, workload=w,
+                               engine_cfg=_cfg(max_slots=32), window=25,
+                               seed=2)
+    m8, _ = run_sim_experiment("sart", 8, num_requests=30, arrival_gap=30,
+                               workload=w, engine_cfg=_cfg(max_slots=32),
+                               window=25, seed=2)
+    assert percentile_latency(m8, 97, "inference") < \
+        percentile_latency(m1, 97, "inference")
+
+
+def test_pruning_reduces_queue_vs_noprune():
+    """Paper Fig. 6: pruning shrinks queuing time under load."""
+    w = _fast_workload()
+    kw = dict(num_requests=24, arrival_gap=5, workload=w,
+              engine_cfg=_cfg(max_slots=8), window=25, seed=3)
+    m_np, _ = run_sim_experiment("sart_noprune", 8, **kw)
+    m_p, _ = run_sim_experiment("sart", 8, **kw)
+    assert percentile_latency(m_p, 90, "queue") <= \
+        percentile_latency(m_np, 90, "queue")
+
+
+def test_prm_discriminates_quality():
+    eng = SimEngine(_cfg(), _fast_workload(prm_noise=0.0, prm_drift=6.0),
+                    seed=0)
+    blocks, lg, ssm = eng.prefill([0] * 16)
+    goods, bads = [], []
+    for _ in range(40):
+        h = eng.spawn_branch(0, blocks, lg, ssm, 16)
+        spec = eng._specs[h.branch_id]
+        h.tokens = [0] * max(spec.length - 1, 1)
+        (goods if spec.correct else bads).append(eng.reward_of(h))
+        eng.free_branch(h)
+    eng.release_prefix(blocks)
+    if goods and bads:
+        assert np.mean(goods) > np.mean(bads)
+
+
+def test_sim_engine_memory_accounting():
+    eng = SimEngine(_cfg(num_pages=64, max_slots=4), _fast_workload(),
+                    seed=0)
+    blocks, lg, ssm = eng.prefill([0] * 16)
+    hs = [eng.spawn_branch(0, blocks, lg, ssm, 16) for _ in range(3)]
+    for _ in range(5):
+        eng.decode_step()
+    assert eng.live_tokens() == 3 * (16 + 5)
+    for h in hs:
+        eng.free_branch(h)
+    eng.release_prefix(blocks)
+    assert eng.allocator.used_pages == 0

@@ -1,0 +1,118 @@
+"""Synthetic task correctness + data pipeline."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data import DataConfig, padded_batches, prm_batches, tasks
+from repro.data import tokenizer as tk
+
+
+def test_problem_running_values():
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        p = tasks.gen_problem(rng)
+        v = p.terms[0] % 10
+        for op, t in zip(p.ops, p.terms[1:]):
+            v = {"+": v + t, "-": v - t, "*": v * t}[op] % 10
+        assert p.answer == v == p.running[-1]
+
+
+def test_trace_roundtrip_correct():
+    rng = np.random.default_rng(1)
+    for _ in range(50):
+        p = tasks.gen_problem(rng)
+        trace = tasks.render_trace(p, rng)
+        plen = len(p.prompt_tokens())
+        assert trace[:plen] == p.prompt_tokens()
+        assert trace[-1] == tk.EOS
+        assert tasks.extract_answer(trace) == p.answer
+        c, t = tasks.grade_steps(p, trace[plen:])
+        assert c == t > 0                      # clean trace fully correct
+
+
+def test_corrupted_trace_graded_below_one():
+    rng = np.random.default_rng(2)
+    found_bad = False
+    for _ in range(50):
+        p = tasks.gen_problem(rng)
+        trace = tasks.render_trace(p, rng, error_p=0.8)
+        plen = len(p.prompt_tokens())
+        c, t = tasks.grade_steps(p, trace[plen:])
+        if c < t:
+            found_bad = True
+    assert found_bad
+
+
+def test_overthinking_produces_long_tail():
+    rng = np.random.default_rng(3)
+    lengths = []
+    for _ in range(400):
+        p = tasks.gen_problem(rng)
+        lengths.append(len(tasks.render_trace(p, rng, overthink_p=0.3)))
+    lengths = np.asarray(lengths)
+    assert lengths.max() > 2.0 * np.median(lengths)  # heavy tail exists
+
+
+def test_length_correctness_independence():
+    """Paper Obs. 1: by construction, rechecks change length, not truth."""
+    rng = np.random.default_rng(4)
+    p = tasks.gen_problem(rng)
+    short = tasks.render_trace(p, rng, recheck_p=0.0, overthink_p=0.0)
+    long_ = tasks.render_trace(p, rng, recheck_p=1.0, overthink_p=1.0,
+                               overthink_geo=0.5)
+    assert len(long_) > len(short)
+    assert tasks.extract_answer(short) == tasks.extract_answer(long_) \
+        == p.answer
+
+
+def test_partial_grading_monotone_prefix():
+    rng = np.random.default_rng(5)
+    p = tasks.gen_problem(rng)
+    trace = tasks.render_trace(p, rng)
+    plen = len(p.prompt_tokens())
+    gen = trace[plen:]
+    # any prefix of a correct trace grades fully correct
+    for cut in range(0, len(gen), 3):
+        c, t = tasks.grade_steps(p, gen[:cut])
+        assert c == t
+
+
+def test_oracle_grader_protocol():
+    rng = np.random.default_rng(6)
+    p = tasks.gen_problem(rng)
+
+    class Req:
+        payload = p
+
+    trace = tasks.render_trace(p, rng)
+    plen = len(p.prompt_tokens())
+    assert tasks.oracle_grader(Req(), trace[plen:]) == 1.0
+    assert tasks.oracle_grader(Req(), []) == 0.5
+    wrong = [tk.STEP, tk.digit((p.running[0] + 1) % 10), tk.SEP]
+    assert tasks.oracle_grader(Req(), wrong) == 0.0
+
+
+def test_padded_batches_shapes_and_mask():
+    cfg = DataConfig(batch_size=4, seq_len=96)
+    toks, labels, mask = next(padded_batches(cfg))
+    assert toks.shape == labels.shape == mask.shape == (4, 96)
+    assert (toks[mask.astype(bool)] != tk.PAD).all()
+    # labels are next-token shifted
+    np.testing.assert_array_equal(labels[:, :-1], toks[:, 1:])
+
+
+def test_prm_batches_labels_binary():
+    cfg = DataConfig(batch_size=4, seq_len=96)
+    toks, labels, mask = next(prm_batches(cfg))
+    assert set(np.unique(labels)) <= {0.0, 1.0}
+    assert mask.sum() > 0
+    assert ((mask == 0) | ((labels == 0) | (labels == 1))).all()
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_extract_answer_never_crashes(seed):
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(0, tk.VOCAB_SIZE, size=rng.integers(0, 40)).tolist()
+    ans = tasks.extract_answer(toks)
+    assert ans is None or 0 <= ans <= 9

@@ -1,0 +1,111 @@
+"""Training substrate: AdamW, LM convergence, PRM head, checkpoints."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import DataConfig, padded_batches, prm_batches
+from repro.data import tokenizer as tk
+from repro.models import Model
+from repro.training import (AdamWConfig, adamw_update, init_opt_state,
+                            load_checkpoint, save_checkpoint, train_lm,
+                            train_prm_head)
+from repro.training.optimizer import schedule
+
+from conftest import tiny_config
+
+
+def test_adamw_reduces_quadratic():
+    cfg = AdamWConfig(lr=0.1, warmup_steps=0, total_steps=100,
+                      weight_decay=0.0)
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = init_opt_state(params)
+    for _ in range(60):
+        grads = {"w": 2 * params["w"]}
+        params, state, gn = adamw_update(cfg, params, grads, state)
+    assert float(jnp.abs(params["w"]).max()) < 0.5
+
+
+def test_schedule_warmup_and_decay():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100)
+    lr0 = float(schedule(cfg, jnp.array(0.0)))
+    lr10 = float(schedule(cfg, jnp.array(10.0)))
+    lr100 = float(schedule(cfg, jnp.array(100.0)))
+    assert lr0 < lr10
+    assert lr10 == pytest.approx(1.0, rel=1e-3)
+    assert lr100 == pytest.approx(cfg.min_lr_ratio, rel=1e-2)
+
+
+def test_grad_clip_caps_update_norm():
+    cfg = AdamWConfig(lr=1.0, grad_clip=1e-9, warmup_steps=0,
+                      weight_decay=0.0)
+    params = {"w": jnp.ones((4,))}
+    state = init_opt_state(params)
+    p2, _, gn = adamw_update(cfg, params, {"w": jnp.full((4,), 1e6)}, state)
+    assert float(gn) > 1e5                  # raw norm reported
+    # update magnitude bounded by lr since mhat/sqrt(vhat) <= 1/sqrt(1)
+    assert float(jnp.abs(p2["w"] - params["w"]).max()) <= 1.1
+
+
+def test_lm_loss_decreases():
+    cfg = tiny_config(vocab_size=tk.VOCAB_SIZE, d_model=96, d_ff=256)
+    model = Model(cfg)
+    data = padded_batches(DataConfig(batch_size=16, seq_len=96, seed=0))
+    params, hist = train_lm(model, data, steps=60,
+                            opt_cfg=AdamWConfig(lr=2e-3, warmup_steps=10,
+                                                total_steps=60),
+                            log_every=59)
+    assert hist[-1]["loss"] < hist[0]["loss"] * 0.8, hist
+
+
+def test_prm_head_loss_decreases():
+    """Full-batch GD on one fixed batch must reduce the BCE (per-batch
+    stochastic loss is too noisy for an untrained backbone)."""
+    from repro.core.prm import init_prm_head, prm_head_loss
+    from repro.training.train_loop import hidden_states
+
+    cfg = tiny_config(vocab_size=tk.VOCAB_SIZE)
+    model = Model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    toks, labels, mask = next(prm_batches(DataConfig(batch_size=8,
+                                                     seq_len=96, seed=0)))
+    h = hidden_states(model, params, jnp.asarray(toks))
+    labels_j = jnp.asarray(labels)
+    mask_j = jnp.asarray(mask)
+
+    def loss(hp):
+        from repro.core.prm import reward_logit
+        lg = reward_logit(hp, h.astype(jnp.float32))
+        bce = (jnp.maximum(lg, 0) - lg * labels_j
+               + jnp.log1p(jnp.exp(-jnp.abs(lg))))
+        return jnp.sum(bce * mask_j) / jnp.maximum(mask_j.sum(), 1.0)
+
+    head = init_prm_head(jax.random.PRNGKey(1), cfg.d_model)
+    l0 = float(loss(head))
+    step = jax.jit(lambda hp: jax.tree.map(
+        lambda p, g: p - 0.05 * g, hp, jax.grad(loss)(hp)))
+    for _ in range(40):
+        head = step(head)
+    assert float(loss(head)) < l0
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = tiny_config()
+    model = Model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    path = os.path.join(tmp_path, "ckpt.npz")
+    save_checkpoint(path, params)
+    restored = load_checkpoint(path, like=params)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_structural_load(tmp_path):
+    tree = {"a": {"b": jnp.arange(3)}, "c": jnp.ones((2, 2))}
+    path = os.path.join(tmp_path, "t.npz")
+    save_checkpoint(path, tree)
+    r = load_checkpoint(path)
+    np.testing.assert_array_equal(np.asarray(r["a"]["b"]), np.arange(3))
+    np.testing.assert_array_equal(np.asarray(r["c"]), np.ones((2, 2)))
