@@ -34,6 +34,9 @@ def run(quick: bool = False, seed: int = 0):
                     "accuracy": acc,
                     "p50": percentile_latency(m, 50),
                     "p97": percentile_latency(m, 97),
+                    # time-to-first-branch: admission-to-seated delay, the
+                    # quantity chunked prefill piggybacking attacks
+                    "ttfb50": percentile_latency(m, 50, "ttfb"),
                 })
     return rows
 
@@ -43,7 +46,8 @@ def main(quick: bool = False):
     # headline: speedup of SART over SC at equal N (paper: up to 28.2x)
     for r in rows:
         print(f"fig5_{r['rate']}_{r['policy']}_n{r['n']},{r['p50']:.0f},"
-              f"p97={r['p97']:.0f};acc={r['accuracy']:.2f}")
+              f"p97={r['p97']:.0f};acc={r['accuracy']:.2f};"
+              f"ttfb50={r['ttfb50']:.0f}")
     by = {(r["rate"], r["policy"], r["n"]): r for r in rows}
     for rate in ("slow", "fast"):
         sc = by.get((rate, "sc", 8))

@@ -98,9 +98,47 @@ def bench_engine_decode_step(quick=False):
     return [("engine_decode_step_b8", us, "tokens_per_step=8")]
 
 
+def bench_chunked_prefill(quick=False):
+    """Admission cost across ragged prompt lengths: the chunked-bucketed
+    path compiles O(num_buckets) shapes where the exact-length path compiles
+    one program per distinct length — the dominant admission latency when
+    prompt lengths are diverse."""
+    from repro.data import tokenizer as tk
+    from repro.models import Model, ModelConfig
+    from repro.serving import Engine, EngineConfig
+
+    cfg = ModelConfig(name="b", arch_type="dense", num_layers=2, d_model=128,
+                      vocab_size=tk.VOCAB_SIZE, num_heads=4, num_kv_heads=2,
+                      d_ff=512)
+    model = Model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    n_prompts = 6 if quick else 16
+    lengths = rng.permutation(np.arange(5, 5 + n_prompts))
+    prompts = [[int(t) for t in rng.integers(2, 16, size=int(s))]
+               for s in lengths]
+
+    rows = []
+    for mode in ("chunked", "exact"):
+        eng = Engine(model, params, EngineConfig(
+            page_size=8, num_pages=512, max_slots=8,
+            max_pages_per_branch=16, eos_id=tk.EOS, prefill_chunk=8))
+        t0 = time.perf_counter()
+        for p in prompts:
+            blocks, _, _ = eng.prefill(p, exact=(mode == "exact"))
+            eng.release_prefix(blocks)
+        us = (time.perf_counter() - t0) / len(prompts) * 1e6
+        compiles = (eng.prefill_compile_count if mode == "chunked"
+                    else len(eng._prefill_cache))
+        rows.append((f"prefill_{mode}_ragged{len(prompts)}", us,
+                     f"compiles={compiles}"))
+    return rows
+
+
 def main(quick: bool = False):
     for rows in (bench_paged_attention(quick), bench_ssd(quick),
-                 bench_engine_decode_step(quick)):
+                 bench_engine_decode_step(quick),
+                 bench_chunked_prefill(quick)):
         for name, us, derived in rows:
             print(f"{name},{us:.1f},{derived}")
 

@@ -68,6 +68,7 @@ class Request:
     payload: object = None        # task object (answer key, oracle grader)
     # runtime state
     meta: Optional[RequestMeta] = None
+    prefill_state: object = None  # ChunkedPrefillState while chunks pend
     prefix_blocks: object = None
     last_logits: object = None
     ssm_state: object = None
@@ -75,6 +76,7 @@ class Request:
     pending: int = 0              # branches awaiting a slot
     completed: List = dataclasses.field(default_factory=list)
     first_service: int = -1
+    first_branch: int = -1        # clock when the first branch was seated
     finish: int = -1
     final_answer: object = None
 
@@ -109,6 +111,7 @@ class Scheduler:
             enabled=self.cfg.policy == "sart"))
         self.request_queue: deque = deque()
         self.branch_queue: deque = deque()   # requests with pending spawns
+        self.prefilling: List[Request] = []  # admitted, chunks still pending
         self.suspended: deque = deque()      # preempted branches to resume
         self.requests: Dict[int, Request] = {}
         self.clock = 0
@@ -129,7 +132,7 @@ class Scheduler:
         """Drive everything submitted so far to completion."""
         while self.clock < max_steps and not self._all_done():
             self._fill_batch()
-            if self.engine.num_active == 0:
+            if self.engine.num_active == 0 and not self.prefilling:
                 self.clock += 1            # idle: waiting for arrivals
                 continue
             self._decode_window()
@@ -168,25 +171,40 @@ class Scheduler:
                 if req.pending <= 0:
                     self.branch_queue.popleft()
             else:
+                if self.prefilling:
+                    # one async prefill in flight at a time: the engine
+                    # serves chunks FIFO anyway, and admitting a burst would
+                    # reserve every prompt's pages long before any chunk
+                    # runs, starving live decode branches into eviction
+                    break
                 req = self._arrived()
                 if req is None:
                     break
                 try:
-                    self._prefill(req)
+                    self._admit(req)
                 except OutOfPagesError:
                     self.request_queue.appendleft(req)
                     break
+        # admission consumes no slot (chunks ride the decode step), so a
+        # saturated batch doesn't block it — keep one prefill in flight
+        if not self.engine.free_slots and not self.prefilling:
+            req = self._arrived()
+            if req is not None:
+                try:
+                    self._admit(req)
+                except OutOfPagesError:
+                    self.request_queue.appendleft(req)
         if self.cfg.preempt and not self.engine.free_slots:
             self._maybe_preempt()
 
     def _maybe_preempt(self):
-        """Suspend the weakest running branch so a waiting request can be
-        admitted (it gets prefilled and its branches queued; the victim
-        resumes as soon as a slot frees)."""
-        waiting = (self.branch_queue
-                   or (self.request_queue
-                       and self.request_queue[0].arrival <= self.clock))
-        if not waiting:
+        """Make progress for waiting work when every slot is taken.
+
+        Admission consumes no slot (prefill chunks ride the decode step)
+        and is handled by ``_fill_batch`` even when the batch is full, so
+        only a waiting *branch* spawn justifies suspending the weakest
+        running branch — the victim resumes as soon as a slot frees."""
+        if not self.branch_queue:
             return
         victims = [h for h in self.engine.slots
                    if h is not None
@@ -196,22 +214,33 @@ class Scheduler:
         victim = min(victims, key=lambda h: h.last_reward)
         self.engine.suspend_branch(victim)
         self.suspended.append(victim)
-        # admit: either seat a queued branch or prefill the next request
-        if self.branch_queue:
-            req = self.branch_queue[0]
-            if not req.done and req.pending > 0:
-                self._spawn_one(req)
-        else:
-            req = self._arrived()
-            if req is not None:
-                try:
-                    self._prefill(req)
-                except OutOfPagesError:
-                    self.request_queue.appendleft(req)
+        req = self.branch_queue[0]
+        if not req.done and req.pending > 0:
+            self._spawn_one(req)
 
-    def _prefill(self, req: Request):
-        """Algorithm 1 PREFILL: one prefill, N branch descriptors."""
-        blocks, logits, ssm_state = self.engine.prefill(req.prompt)
+    def _admit(self, req: Request):
+        """Algorithm 1 PREFILL, now asynchronous: admission allocates the
+        prompt's pages and enqueues its chunks; they piggyback on decode
+        steps (engine mixed step) instead of stalling the batch. Engines
+        without chunked support return an already-done state and keep the
+        seed's one-tick synchronous accounting."""
+        req.prefill_state = self.engine.begin_prefill(req.prompt)
+        if req.prefill_state.done:
+            req.first_service = self.clock    # seed-exact sync accounting
+            self.clock += 1               # legacy synchronous prefill tick
+            self._harvest_prefill(req)
+        else:
+            self.prefilling.append(req)
+
+    def _harvest_prefill(self, req: Request):
+        """Prefill finished: collect its outputs, queue N branch spawns.
+        Async requests get first_service stamped here — once their chunks
+        have actually been served — so queueing delay keeps its meaning."""
+        if req.first_service < 0:
+            req.first_service = self.clock
+        blocks, logits, ssm_state = self.engine.finish_prefill(
+            req.prefill_state)
+        req.prefill_state = None
         req.prefix_blocks = blocks
         req.last_logits = logits
         req.ssm_state = ssm_state
@@ -219,9 +248,15 @@ class Scheduler:
         init_branches = (self._rebase_initial_width()
                          if self.cfg.policy == "rebase" else self.cfg.n)
         req.pending = init_branches
-        req.first_service = self.clock
-        self.clock += 1                   # prefill tick
         self.branch_queue.append(req)
+
+    def _poll_prefills(self) -> bool:
+        harvested = False
+        for req in [r for r in self.prefilling if r.prefill_state.done]:
+            self.prefilling.remove(req)
+            self._harvest_prefill(req)
+            harvested = True
+        return harvested
 
     def _rebase_initial_width(self) -> int:
         return max(self.cfg.n // 2, 1)
@@ -232,14 +267,18 @@ class Scheduler:
             req.ssm_state, len(req.prompt))
         if h is None:
             return
+        if req.first_branch < 0:
+            req.first_branch = self.clock   # time-to-first-branch anchor
         req.live[h.branch_id] = h
         req.pending -= 1
 
     # -------------------------------------------------------------- decoding
     def _decode_window(self):
-        """Up to T decode steps; completions release slots eagerly."""
+        """Up to T decode steps; completions release slots eagerly. Each
+        step also advances one chunk of any pending prefill (mixed step);
+        chunk-only steps keep ticking while the decode batch is empty."""
         for _ in range(self.cfg.window):
-            if self.engine.num_active == 0:
+            if self.engine.num_active == 0 and not self.prefilling:
                 break
             try:
                 self.engine.decode_step()
@@ -247,6 +286,10 @@ class Scheduler:
                 self._evict_longest()
                 continue
             self.clock += 1
+            if self._poll_prefills():
+                # seed parity: branches spawned the moment prefill finished;
+                # refill mid-window instead of waiting out the window
+                self._fill_batch()
             self._check_completions()
             self.timeline.record(self.clock, self.engine.num_active,
                                  self.engine.live_tokens())
@@ -371,6 +414,8 @@ class Scheduler:
                 "e2e": req.finish - req.arrival,
                 "queue": (req.first_service - req.arrival
                           if req.first_service >= 0 else None),
+                "ttfb": (req.first_branch - req.arrival
+                         if req.first_branch >= 0 else None),
                 "inference": (req.finish - req.first_service
                               if req.first_service >= 0 else None),
                 "num_completed": req.meta.num_completed if req.meta else 0,

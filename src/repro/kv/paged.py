@@ -79,11 +79,30 @@ class PageAllocator:
 
     def alloc_prefix(self, num_tokens: int) -> BranchBlocks:
         """Allocate pages for a freshly prefilled prompt."""
-        n = self.pages_for(max(num_tokens, 1))
+        b = BranchBlocks(pages=[], num_shared=0, length=0)
+        self.extend(b, max(num_tokens, 1))
+        b.length = num_tokens
+        return b
+
+    def extend(self, b: BranchBlocks, new_length: int) -> List[int]:
+        """Grow a branch's page list to cover ``new_length`` tokens,
+        appending fresh (refcount-1) pages only. ``alloc_prefix`` is built
+        on this; chunked prefill reserves a prompt's pages in one extend at
+        admission (fail-fast, so an OutOfPagesError leaves nothing to roll
+        back). All-or-nothing: raises OutOfPagesError without allocating
+        anything if the pool cannot cover the growth; returns the new page
+        ids. Like ``append_token``, it does NOT CoW a shared trailing
+        partial page — callers writing into one must ``cow_last_page``
+        first.
+        """
+        assert new_length >= b.length, "extend cannot shrink a branch"
+        n = self.pages_for(new_length) - len(b.pages)
         if n > self.free_pages:
             raise OutOfPagesError(f"need {n} pages, {self.free_pages} free")
-        pages = [self.alloc() for _ in range(n)]
-        return BranchBlocks(pages=pages, num_shared=0, length=num_tokens)
+        new = [self.alloc() for _ in range(max(n, 0))]
+        b.pages.extend(new)
+        b.length = new_length
+        return new
 
     def fork(self, parent: BranchBlocks) -> BranchBlocks:
         """Fork a branch off `parent`, sharing all its pages.

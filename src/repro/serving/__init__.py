@@ -1,5 +1,6 @@
-from .engine import BranchHandle, Engine, EngineConfig
+from .engine import (BranchHandle, ChunkedPrefillState, Engine,
+                     EngineConfig)
 from .sampling import SamplingParams, sample
 
-__all__ = ["BranchHandle", "Engine", "EngineConfig", "SamplingParams",
-           "sample"]
+__all__ = ["BranchHandle", "ChunkedPrefillState", "Engine", "EngineConfig",
+           "SamplingParams", "sample"]

@@ -49,6 +49,33 @@ class EngineConfig:
     eos_id: int = 1
     sampling: SamplingParams = SamplingParams(temperature=1.0, top_p=0.95)
     seed: int = 0
+    # Chunked prefill (attention-only configs): prompts are split into
+    # ``prefill_chunk``-token chunks, each padded up to one of
+    # ``prefill_buckets`` and run as extra rows of the decode step, so
+    # admission piggybacks on decode instead of stalling it and the number
+    # of compiled prefill shapes is O(len(buckets)), not O(distinct prompt
+    # lengths). () derives buckets as (chunk // 2, chunk).
+    chunked_prefill: bool = True
+    prefill_chunk: int = 64
+    prefill_buckets: tuple = ()
+
+
+@dataclasses.dataclass
+class ChunkedPrefillState:
+    """A partially-prefilled request: pages fill chunk-by-chunk while the
+    decode batch keeps stepping. ``done`` flips once the final chunk has
+    been written and the last-position logits are available for
+    ``spawn_branch``."""
+    prompt: List[int]
+    blocks: BranchBlocks
+    next_pos: int = 0                # prompt tokens written so far
+    last_logits: object = None
+    ssm_state: object = None         # only set by the legacy exact path
+    done: bool = False
+
+    @property
+    def remaining(self) -> int:
+        return len(self.prompt) - self.next_pos
 
 
 @dataclasses.dataclass
@@ -102,9 +129,23 @@ class Engine:
         self._last_hidden = jnp.zeros((B, mc.d_model), jnp.float32)
         self.prm_params = prm_params
 
-        self._decode_jit = jax.jit(self._decode_step_fn)
+        self._step_jit = jax.jit(self._step_fn)
         self._prefill_cache: Dict[int, callable] = {}
         self.decode_steps_executed = 0
+        self.prefill_chunk_steps = 0
+
+        # chunked prefill: supported for attention-only configs (padding a
+        # chunk would pollute the SSM recurrence of ssm/hybrid models, which
+        # keep the exact-length path)
+        self._chunked_ok = (cfg.chunked_prefill and mc.uses_attention
+                            and not mc.uses_ssm)
+        buckets = tuple(sorted(set(cfg.prefill_buckets))) or tuple(sorted(
+            {max(cfg.prefill_chunk // 2, 1), cfg.prefill_chunk}))
+        assert buckets[-1] >= cfg.prefill_chunk, \
+            "largest prefill bucket must cover a full chunk"
+        self._buckets = buckets
+        self._buckets_used: set = set()
+        self._pending_prefills: List[ChunkedPrefillState] = []
 
     # ------------------------------------------------------------------ util
     @property
@@ -124,15 +165,28 @@ class Engine:
         return k
 
     # --------------------------------------------------------------- prefill
-    def prefill(self, prompt: List[int]):
-        """Run prefill for one request. Returns (prefix_blocks, last_logits,
-        ssm_state or None). The prefix pages are NOT yet shared — call
-        ``spawn_branch`` N times to fork branches off them.
+    def prefill(self, prompt: List[int], exact: Optional[bool] = None):
+        """Run prefill for one request to completion (synchronous
+        convenience API). Returns (prefix_blocks, last_logits, ssm_state or
+        None). The prefix pages are NOT yet shared — call ``spawn_branch``
+        N times to fork branches off them.
 
-        Prefill runs at the EXACT prompt length (one compile per distinct
-        length): right-padding would be masked out by attention but would
-        pollute the SSM recurrence state of ssm/hybrid models.
+        Attention-only configs default to the chunked-bucketed path (same
+        compiled shapes as the serving mixed step); ``exact=True`` forces the
+        legacy exact-length program, which ssm/hybrid configs always use
+        (right-padding would be masked out by attention but would pollute the
+        SSM recurrence state).
         """
+        if not self._chunked_ok:
+            exact = True     # ssm/hybrid state rows only exist for the
+                             # decode slots; chunk rows can't carry them
+        if not exact:
+            st = ChunkedPrefillState(
+                prompt=list(prompt),
+                blocks=self._alloc_prompt_pages(len(prompt)))
+            while not st.done:
+                self._advance_chunk(st, piggyback=False)
+            return st.blocks, st.last_logits, None
         cfg, mc = self.cfg, self.model.cfg
         s = len(prompt)
         if s not in self._prefill_cache:
@@ -143,13 +197,122 @@ class Engine:
                             jnp.asarray(np.asarray(prompt, np.int32))[None],
                             s)
 
-        blocks = self.allocator.alloc_prefix(s)
+        blocks = self._alloc_prompt_pages(s)
         ssm_state = None
         if mc.uses_attention:
             self._write_prefix_pages(cache, blocks)
         if mc.uses_ssm:
             ssm_state = (cache["conv"], cache["ssd"])  # [L,1,...]
         return blocks, logits, ssm_state
+
+    def _alloc_prompt_pages(self, s: int) -> BranchBlocks:
+        assert self.allocator.pages_for(max(s, 1)) <= \
+            self.cfg.max_pages_per_branch, "prompt exceeds block-table width"
+        return self.allocator.alloc_prefix(s)
+
+    # ------------------------------------------------- chunked prefill (new)
+    def begin_prefill(self, prompt: List[int]) -> ChunkedPrefillState:
+        """Admit a request without stalling decode. For attention-only
+        configs the returned state is queued and its prompt chunks piggyback
+        on subsequent ``decode_step`` calls (one chunk per step); poll
+        ``state.done`` and harvest with ``finish_prefill``. Configs without
+        chunked support prefill synchronously and return an already-done
+        state. Raises OutOfPagesError (allocating nothing) when the KV pool
+        cannot hold the prompt."""
+        if not self._chunked_ok:
+            blocks, logits, ssm = self.prefill(prompt, exact=True)
+            return ChunkedPrefillState(
+                prompt=list(prompt), blocks=blocks, next_pos=len(prompt),
+                last_logits=logits, ssm_state=ssm, done=True)
+        st = ChunkedPrefillState(
+            prompt=list(prompt),
+            blocks=self._alloc_prompt_pages(len(prompt)))
+        self._pending_prefills.append(st)
+        return st
+
+    def finish_prefill(self, st: ChunkedPrefillState):
+        """Harvest a completed prefill: (prefix_blocks, last_logits, ssm)."""
+        assert st.done, "prefill still has pending chunks"
+        return st.blocks, st.last_logits, st.ssm_state
+
+    def abort_prefill(self, st: ChunkedPrefillState) -> None:
+        """Drop a queued prefill and release its pages."""
+        if st in self._pending_prefills:
+            self._pending_prefills.remove(st)
+        self.allocator.release(st.blocks)
+        st.done = True
+
+    @property
+    def has_pending_prefill(self) -> bool:
+        return bool(self._pending_prefills)
+
+    @property
+    def prefill_compile_count(self) -> int:
+        """Distinct chunk shapes traced so far — O(num_buckets) by
+        construction, vs O(distinct prompt lengths) for the exact path."""
+        return len(self._buckets_used)
+
+    def _bucket_for(self, n: int) -> int:
+        for b in self._buckets:
+            if b >= n:
+                return b
+        return self._buckets[-1]
+
+    def _chunk_inputs(self, st: ChunkedPrefillState):
+        """Build the extra step rows for the next chunk of ``st``.
+
+        Rows past the chunk's true length shadow the last valid row (same
+        token/position), so their page writes are idempotent duplicates and
+        never touch unwritten slots — no masking needed inside the jit'd
+        step."""
+        cfg = self.cfg
+        s = len(st.prompt)
+        chunk_len = min(cfg.prefill_chunk, s - st.next_pos)
+        bucket = self._bucket_for(chunk_len)
+        idx = np.minimum(st.next_pos + np.arange(bucket), s - 1)
+        tokens = np.asarray(st.prompt, np.int32)[idx]
+        row = np.full((cfg.max_pages_per_branch,), cfg.num_pages, np.int32)
+        row[:len(st.blocks.pages)] = st.blocks.pages
+        block_tables = np.broadcast_to(row, (bucket, row.shape[0]))
+        # the step attends over lengths+1 tokens: row i covers positions
+        # 0..next_pos+i inclusive, i.e. prefix + causal within the chunk
+        return (tokens, idx.astype(np.int32), block_tables,
+                idx.astype(np.int32), chunk_len, bucket)
+
+    def _advance_chunk(self, st: ChunkedPrefillState, piggyback: bool):
+        """Run one chunk of ``st`` through the step program. With
+        ``piggyback`` the caller (``decode_step``) supplies the live decode
+        rows; standalone draining pads with inert rows (sentinel block
+        tables drop their writes) so active branches are never advanced."""
+        cfg = self.cfg
+        B = cfg.max_slots
+        ct, cp, cbt, cl, chunk_len, bucket = self._chunk_inputs(st)
+        if piggyback:
+            d_tokens, d_positions = self._tokens, self._positions
+            d_bt, d_lengths = self._block_tables, self._lengths
+        else:
+            d_tokens = np.zeros((B,), np.int32)
+            d_positions = np.zeros((B,), np.int32)
+            d_bt = np.full((B, cfg.max_pages_per_branch), cfg.num_pages,
+                           np.int32)
+            d_lengths = np.zeros((B,), np.int32)
+        self._buckets_used.add(bucket)
+        next_tokens, hidden, logits, new_state = self._step_jit(
+            self.params, self.state,
+            jnp.asarray(np.concatenate([d_tokens, ct])),
+            jnp.asarray(np.concatenate([d_positions, cp])),
+            jnp.asarray(np.concatenate([d_bt, cbt])),
+            jnp.asarray(np.concatenate([d_lengths, cl])),
+            self._next_rng())
+        self.state.update(new_state)
+        self.prefill_chunk_steps += 1
+        st.next_pos += chunk_len
+        if st.next_pos >= len(st.prompt):
+            st.done = True
+            st.last_logits = logits[B + chunk_len - 1]
+            if st in self._pending_prefills:
+                self._pending_prefills.remove(st)
+        return next_tokens, hidden
 
     def _make_prefill(self, s_pad: int):
         model = self.model
@@ -316,10 +479,20 @@ class Engine:
         self.allocator.release(prefix_blocks)
 
     # ----------------------------------------------------------------- decode
-    def _decode_step_fn(self, params, state, tokens, positions, block_tables,
-                        lengths, rng):
+    def _step_fn(self, params, state, tokens, positions, block_tables,
+                 lengths, rng):
+        """One batched token step, generic in row count.
+
+        Rows 0..max_slots-1 are the decode slots; any extra rows are one
+        prefill chunk's tokens (same math: embed one token, write its K/V at
+        ``positions`` via the row's block table, attend over ``lengths``+1
+        tokens). Causality inside a chunk falls out of the length mask: all
+        rows scatter K/V before attention, and row i's length covers only
+        positions <= its own. One compile per distinct row count: the pure
+        decode shape plus one mixed shape per prefill bucket.
+        """
         model, mc, cfg = self.model, self.model.cfg, self.cfg
-        B = cfg.max_slots
+        B = tokens.shape[0]
         x = embed_tokens(mc, params["embed"], tokens[:, None])
         if mc.pos_embedding == "sinusoidal":
             x = x + sinusoidal_embedding(positions, mc.d_model)[:, None].astype(x.dtype)
@@ -380,20 +553,31 @@ class Engine:
         keys = jax.random.split(rng, B)
         next_tokens = jax.vmap(lambda r, l: sample(r, l, cfg.sampling))(
             keys, logits)
-        return next_tokens, hidden.astype(jnp.float32), new_state
+        return next_tokens, hidden.astype(jnp.float32), logits, new_state
 
     def decode_step(self) -> Dict[int, int]:
-        """One decode step for all active slots.
+        """One decode step for all active slots, piggybacking one prompt
+        chunk of the oldest pending prefill (mixed step) when one is queued.
 
         Handles host-side page accounting (boundary alloc + CoW) *before* the
         jit'd step, then appends the sampled token to each active branch.
         Returns {slot: new_token}.
         """
         cfg, mc = self.cfg, self.model.cfg
-        if not self._active.any():
+        pending = self._pending_prefills[0] if self._pending_prefills else None
+        if not self._active.any() and pending is None:
             return {}
         # page accounting for the token about to be written
         if mc.uses_attention:
+            cap = cfg.max_pages_per_branch * cfg.page_size
+            for h in self.slots:
+                if h is not None and h.blocks.length + 1 > cap:
+                    # static block table full: surface as memory pressure so
+                    # the scheduler's evict-longest path force-completes the
+                    # branch instead of the table-refresh assert tripping
+                    raise OutOfPagesError(
+                        "branch at block-table capacity "
+                        f"({cap} tokens)")
             if self.pages_needed_for_step() > self.allocator.free_pages:
                 raise OutOfPagesError(
                     "decode step needs more pages than are free")
@@ -417,12 +601,15 @@ class Engine:
                 if h is not None:
                     h.blocks.length += 1
 
-        next_tokens, hidden, new_state = self._decode_jit(
-            self.params, self.state, jnp.asarray(self._tokens),
-            jnp.asarray(self._positions), jnp.asarray(self._block_tables),
-            jnp.asarray(self._lengths), self._next_rng())
-        self.state.update(new_state)
-        self._last_hidden = hidden
+        if pending is not None:
+            next_tokens, hidden = self._advance_chunk(pending, piggyback=True)
+        else:
+            next_tokens, hidden, _, new_state = self._step_jit(
+                self.params, self.state, jnp.asarray(self._tokens),
+                jnp.asarray(self._positions), jnp.asarray(self._block_tables),
+                jnp.asarray(self._lengths), self._next_rng())
+            self.state.update(new_state)
+        self._last_hidden = hidden[:cfg.max_slots]
         self.decode_steps_executed += 1
 
         out: Dict[int, int] = {}

@@ -25,7 +25,7 @@ import numpy as np
 
 from ..data import tokenizer as tk
 from ..kv import BranchBlocks, OutOfPagesError, PageAllocator
-from .engine import BranchHandle
+from .engine import BranchHandle, ChunkedPrefillState
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,6 +48,8 @@ class SimEngineConfig:
     page_size: int = 16
     num_pages: int = 65536            # models HBM KV capacity
     eos_id: int = tk.EOS
+    prefill_chunk: int = 64           # prompt tokens prefilled per step
+    chunked_prefill: bool = True      # piggyback chunks on decode steps
 
 
 @dataclasses.dataclass
@@ -69,13 +71,20 @@ class SimEngine:
                  seed: int = 0):
         self.cfg = cfg
         self.workload = workload
+        # branch destinies and PRM noise draw from SEPARATE streams: spec
+        # draws then depend only on spawn order, so scheduling/timing changes
+        # (or policy choice, at equal seed) never re-roll the workload —
+        # tail-latency comparisons stay paired instead of re-sampled
         self.rng = np.random.default_rng(seed)
+        self.noise_rng = np.random.default_rng(seed + 0x5AB7)
         self.allocator = PageAllocator(cfg.num_pages, cfg.page_size)
         self.slots: List[Optional[BranchHandle]] = [None] * cfg.max_slots
         self._specs: Dict[int, _BranchSpec] = {}
         self.tasks: Dict[int, SimTask] = {}   # request_id -> SimTask
         self._next_branch_id = 0
         self.decode_steps_executed = 0
+        self.prefill_chunk_steps = 0
+        self._pending_prefills: List[ChunkedPrefillState] = []
 
     # ----------------------------------------------------- engine interface
     @property
@@ -92,6 +101,46 @@ class SimEngine:
     def prefill(self, prompt: List[int]):
         blocks = self.allocator.alloc_prefix(len(prompt))
         return blocks, None, None
+
+    # ------------------------------------------- chunked admission interface
+    def begin_prefill(self, prompt: List[int]) -> ChunkedPrefillState:
+        """Mirror of Engine.begin_prefill: allocate the prompt's pages up
+        front, then account one ``prefill_chunk``-token chunk per decode
+        step. With chunking disabled the state completes immediately (the
+        scheduler then charges the legacy synchronous prefill tick)."""
+        blocks = self.allocator.alloc_prefix(len(prompt))
+        st = ChunkedPrefillState(prompt=list(prompt), blocks=blocks)
+        if not self.cfg.chunked_prefill:
+            st.next_pos = len(prompt)
+            st.done = True
+            return st
+        self._pending_prefills.append(st)
+        return st
+
+    def finish_prefill(self, st: ChunkedPrefillState):
+        assert st.done, "prefill still has pending chunks"
+        return st.blocks, st.last_logits, st.ssm_state
+
+    def abort_prefill(self, st: ChunkedPrefillState) -> None:
+        if st in self._pending_prefills:
+            self._pending_prefills.remove(st)
+        self.allocator.release(st.blocks)
+        st.done = True
+
+    @property
+    def has_pending_prefill(self) -> bool:
+        return bool(self._pending_prefills)
+
+    def _advance_pending_prefill(self) -> None:
+        if not self._pending_prefills:
+            return
+        st = self._pending_prefills[0]
+        st.next_pos = min(st.next_pos + self.cfg.prefill_chunk,
+                          len(st.prompt))
+        self.prefill_chunk_steps += 1
+        if st.next_pos >= len(st.prompt):
+            st.done = True
+            self._pending_prefills.pop(0)
 
     def _sample_spec(self) -> _BranchSpec:
         w = self.workload
@@ -149,10 +198,11 @@ class SimEngine:
         return need
 
     def decode_step(self) -> Dict[int, int]:
-        if self.num_active == 0:
+        if self.num_active == 0 and not self._pending_prefills:
             return {}
         if self.pages_needed_for_step() > self.allocator.free_pages:
             raise OutOfPagesError("sim KV pool exhausted")
+        self._advance_pending_prefill()   # chunk piggybacks on this step
         out = {}
         for slot, h in enumerate(self.slots):
             if h is None:
@@ -211,7 +261,7 @@ class SimEngine:
         # PRM sees more of the trajectory (discriminability = prm_drift)
         logit = math.log(spec.quality / (1 - spec.quality)) \
             * progress * w.prm_drift / 2
-        r = 1 / (1 + math.exp(-logit)) + self.rng.normal(0, w.prm_noise)
+        r = 1 / (1 + math.exp(-logit)) + self.noise_rng.normal(0, w.prm_noise)
         return float(np.clip(r, 0.0, 1.0))
 
 

@@ -1,0 +1,118 @@
+"""Property-test backbone: hypothesis when installed, else a pure-random
+fallback generator.
+
+Test modules import ``given, settings, st`` from here instead of from
+``hypothesis`` directly (the tier-1 seed failed to collect when hypothesis
+was missing from the container). With hypothesis installed
+(``pip install -r requirements-dev.txt``) the real shrinking engine runs;
+without it, ``given`` degrades to drawing ``max_examples`` pseudo-random
+samples from a fixed-seed PRNG — no shrinking, but the invariants still get
+fuzzed on every CI lane. ``HAVE_HYPOTHESIS`` lets a test
+``pytest.importorskip``-style gate anything that genuinely needs the real
+library (e.g. ``assume``/stateful testing).
+"""
+from __future__ import annotations
+
+import functools
+import random
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                      # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+    _DEFAULT_EXAMPLES = 25
+
+    class _Strategy:
+        def example(self, rng: random.Random):
+            raise NotImplementedError
+
+    class _Integers(_Strategy):
+        def __init__(self, lo, hi):
+            self.lo, self.hi = lo, hi
+
+        def example(self, rng):
+            return rng.randint(self.lo, self.hi)
+
+    class _Floats(_Strategy):
+        def __init__(self, lo, hi):
+            self.lo, self.hi = lo, hi
+
+        def example(self, rng):
+            # hit the boundaries occasionally, like hypothesis does
+            r = rng.random()
+            if r < 0.05:
+                return self.lo
+            if r < 0.10:
+                return self.hi
+            return rng.uniform(self.lo, self.hi)
+
+    class _Booleans(_Strategy):
+        def example(self, rng):
+            return rng.random() < 0.5
+
+    class _SampledFrom(_Strategy):
+        def __init__(self, elements):
+            self.elements = list(elements)
+
+        def example(self, rng):
+            return rng.choice(self.elements)
+
+    class _Lists(_Strategy):
+        def __init__(self, elements, min_size=0, max_size=10):
+            self.elements = elements
+            self.min_size, self.max_size = min_size, max_size
+
+        def example(self, rng):
+            n = rng.randint(self.min_size, self.max_size)
+            return [self.elements.example(rng) for _ in range(n)]
+
+    class _St:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Integers(min_value, max_value)
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Floats(min_value, max_value)
+
+        @staticmethod
+        def booleans():
+            return _Booleans()
+
+        @staticmethod
+        def sampled_from(elements):
+            return _SampledFrom(elements)
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            return _Lists(elements, min_size=min_size, max_size=max_size)
+
+    st = _St()
+
+    def settings(max_examples=_DEFAULT_EXAMPLES, deadline=None, **_kw):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            def wrapper(*args, **kwargs):
+                rng = random.Random(f"prop:{fn.__module__}.{fn.__name__}")
+                n = getattr(wrapper, "_max_examples",
+                            getattr(fn, "_max_examples", _DEFAULT_EXAMPLES))
+                for _ in range(n):
+                    drawn = [s.example(rng) for s in strategies]
+                    fn(*args, *drawn, **kwargs)
+            # NOT functools.wraps: pytest must see the zero-arg signature,
+            # not the inner function's drawn parameters (they'd look like
+            # fixtures)
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            wrapper._max_examples = getattr(fn, "_max_examples",
+                                            _DEFAULT_EXAMPLES)
+            return wrapper
+        return deco

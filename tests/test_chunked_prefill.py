@@ -1,0 +1,180 @@
+"""Chunked-bucketed prefill: equivalence with the exact-length path, O(1)
+compile count in prompt-length diversity, and decode-step piggybacking that
+never perturbs running branches."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import Model
+from repro.serving import Engine, EngineConfig, SamplingParams
+
+from conftest import tiny_config
+
+
+def _engine(cfg, temperature=0.0, slots=4, seed=0, **eng_kw):
+    model = Model(cfg)
+    params = model.init_params(jax.random.PRNGKey(seed))
+    base = dict(page_size=4, num_pages=128, max_slots=slots,
+                max_pages_per_branch=24, eos_id=1,
+                sampling=SamplingParams(temperature=temperature), seed=seed,
+                prefill_chunk=8)
+    base.update(eng_kw)
+    return model, params, Engine(model, params, EngineConfig(**base))
+
+
+def _gather_prefix(eng, blocks, s):
+    """Dense [L, s, kv, hd] view of the first s tokens of a branch's pages."""
+    ps = eng.cfg.page_size
+    k = np.asarray(eng.state["k_pages"])[:, :, blocks.pages]  # [L,kv,n,ps,hd]
+    v = np.asarray(eng.state["v_pages"])[:, :, blocks.pages]
+    k = np.moveaxis(k, 1, 3).reshape(k.shape[0], -1, k.shape[1], k.shape[-1])
+    v = np.moveaxis(v, 1, 3).reshape(v.shape[0], -1, v.shape[1], v.shape[-1])
+    return k[:, :s], v[:, :s]
+
+
+# ragged lengths crossing page (ps=4), chunk (8) and bucket (4/8) boundaries
+RAGGED = [1, 3, 4, 5, 7, 8, 9, 12, 13, 17, 23]
+
+
+@pytest.mark.parametrize("s", RAGGED)
+def test_chunked_matches_exact_prefill(s):
+    """Same params, same prompt: the chunked-bucketed path must reproduce
+    the exact-length program's last logits AND the K/V page contents."""
+    cfg = tiny_config()
+    rng = np.random.default_rng(s)
+    prompt = [int(t) for t in rng.integers(2, cfg.vocab_size, size=s)]
+
+    _, _, e_exact = _engine(cfg)
+    _, _, e_chunk = _engine(cfg)
+    b_e, lg_e, _ = e_exact.prefill(prompt, exact=True)
+    b_c, lg_c, _ = e_chunk.prefill(prompt)          # chunked by default
+
+    np.testing.assert_allclose(np.asarray(lg_e), np.asarray(lg_c),
+                               rtol=1e-4, atol=1e-4)
+    ke, ve = _gather_prefix(e_exact, b_e, s)
+    kc, vc = _gather_prefix(e_chunk, b_c, s)
+    np.testing.assert_allclose(ke, kc, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(ve, vc, rtol=1e-4, atol=1e-5)
+
+    e_exact.release_prefix(b_e)
+    e_chunk.release_prefix(b_c)
+    assert e_chunk.allocator.used_pages == 0
+
+
+def test_chunked_then_decode_matches_exact_then_decode():
+    """Greedy generation after a chunked prefill equals generation after an
+    exact prefill — the pages it left behind are a faithful cache."""
+    cfg = tiny_config()
+    prompt = [2, 5, 9, 13, 7, 3, 11, 4, 8, 6, 10]   # 11 tokens: 2 chunks
+
+    def gen(exact):
+        _, _, eng = _engine(cfg, temperature=0.0)
+        blocks, lg, ssm = eng.prefill(prompt, exact=exact)
+        h = eng.spawn_branch(0, blocks, lg, ssm, len(prompt))
+        for _ in range(8):
+            eng.decode_step()
+        toks = list(h.tokens)
+        eng.free_branch(h)
+        eng.release_prefix(blocks)
+        assert eng.allocator.used_pages == 0
+        return toks
+
+    assert gen(exact=True) == gen(exact=False)
+
+
+def test_compile_count_is_o_num_buckets():
+    """Acceptance: 16 prompts of distinct ragged lengths trace at most 4
+    prefill/mixed-step shapes (the seed's exact path traced 16)."""
+    cfg = tiny_config()
+    _, _, eng = _engine(cfg, slots=2, num_pages=256,
+                        max_pages_per_branch=32)
+    lengths = list(range(3, 3 + 16))                # 16 distinct lengths
+    rng = np.random.default_rng(0)
+    for s in lengths:
+        prompt = [int(t) for t in rng.integers(2, cfg.vocab_size, size=s)]
+        blocks, lg, ssm = eng.prefill(prompt)
+        eng.release_prefix(blocks)
+    assert eng.prefill_compile_count <= 4
+    assert len(eng._prefill_cache) == 0             # exact path never used
+    assert eng.allocator.used_pages == 0
+
+
+def test_piggybacked_prefill_leaves_decode_untouched():
+    """A prompt admitted mid-generation rides the decode step as extra rows;
+    the running branch's greedy continuation must be bit-identical to a run
+    with no concurrent prefill, and the admitted prompt must produce the
+    same logits as a standalone prefill."""
+    cfg = tiny_config()
+    prompt_a = [2, 5, 9, 13, 7]
+    prompt_b = [3, 8, 11, 6, 12, 4, 10, 9, 2, 7, 5, 13, 3]   # 13 tokens
+
+    def run(piggyback):
+        _, _, eng = _engine(cfg, temperature=0.0)
+        blocks, lg, ssm = eng.prefill(prompt_a)
+        h = eng.spawn_branch(0, blocks, lg, ssm, len(prompt_a))
+        for _ in range(3):
+            eng.decode_step()
+        st = eng.begin_prefill(prompt_b) if piggyback else None
+        for _ in range(6):                          # covers the 2 chunks
+            eng.decode_step()
+        lg_b = None
+        if piggyback:
+            assert st.done
+            b_b, lg_b, _ = eng.finish_prefill(st)
+            eng.release_prefix(b_b)
+        toks = list(h.tokens)
+        eng.free_branch(h)
+        eng.release_prefix(blocks)
+        assert eng.allocator.used_pages == 0
+        return toks, lg_b
+
+    toks_plain, _ = run(piggyback=False)
+    toks_mixed, lg_b = run(piggyback=True)
+    assert toks_plain == toks_mixed
+
+    _, _, ref = _engine(cfg)
+    b_ref, lg_ref, _ = ref.prefill(prompt_b)
+    np.testing.assert_allclose(np.asarray(lg_ref), np.asarray(lg_b),
+                               rtol=1e-4, atol=1e-4)
+    ref.release_prefix(b_ref)
+
+
+def test_pending_prefills_complete_fifo():
+    """Several admitted prompts drain one chunk per step, oldest first."""
+    cfg = tiny_config()
+    _, _, eng = _engine(cfg, slots=2)
+    sts = [eng.begin_prefill([2 + i] * (6 + 3 * i)) for i in range(3)]
+    done_order = []
+    for _ in range(12):
+        eng.decode_step()
+        for i, st in enumerate(sts):
+            if st.done and i not in done_order:
+                done_order.append(i)
+    assert done_order == [0, 1, 2]
+    for st in sts:
+        eng.release_prefix(st.blocks)
+    assert eng.allocator.used_pages == 0
+
+
+def test_abort_prefill_releases_pages():
+    cfg = tiny_config()
+    _, _, eng = _engine(cfg)
+    st = eng.begin_prefill([2, 5, 9, 13, 7, 3, 11, 4, 8])
+    eng.decode_step()                               # first chunk in flight
+    eng.abort_prefill(st)
+    assert eng.allocator.used_pages == 0
+    assert not eng.has_pending_prefill
+
+
+def test_ssm_configs_fall_back_to_exact():
+    """ssm/hybrid models must keep the exact-length path (padding would
+    pollute the recurrence) and begin_prefill must complete synchronously."""
+    cfg = tiny_config(arch_type="hybrid", ssm_state=16, ssm_head_dim=32,
+                      ssm_chunk=8)
+    _, _, eng = _engine(cfg)
+    st = eng.begin_prefill([2, 5, 9, 13, 7])
+    assert st.done and st.ssm_state is not None
+    assert not eng.has_pending_prefill
+    eng.release_prefix(st.blocks)
+    assert eng.allocator.used_pages == 0

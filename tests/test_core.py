@@ -1,7 +1,7 @@
 """SART core: order statistics (Lemma 1), two-phase pruning, ensembling."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from prop import given, settings, st
 
 from repro.core import (OraclePRM, PruningConfig, TwoPhasePruner, best_of_n,
                         empirical_mth_completion, majority_vote,

@@ -1,7 +1,7 @@
 """PageAllocator: unit tests + hypothesis property tests of the refcount
 invariants under arbitrary fork/append/release interleavings."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from prop import given, settings, st
 
 from repro.kv import BranchBlocks, OutOfPagesError, PageAllocator
 

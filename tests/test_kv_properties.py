@@ -1,0 +1,99 @@
+"""Property tests for the paged KV allocator: random interleavings of
+alloc_prefix / extend / fork / append_token / release never leak pages or
+double-free, and refcounts always equal the number of block tables holding
+each page (refcount conservation). Runs under hypothesis when installed,
+else under prop.py's pure-random fallback generator."""
+import pytest
+
+from prop import given, settings, st
+from repro.kv import OutOfPagesError, PageAllocator
+
+
+def _refcount_conservation(alloc: PageAllocator, live_blocks):
+    """Every page's refcount must equal the number of live BranchBlocks that
+    list it (a block lists a page at most once)."""
+    held = {}
+    for b in live_blocks:
+        for pid in b.pages:
+            held[pid] = held.get(pid, 0) + 1
+    for pid, n in held.items():
+        assert alloc.refcount(pid) == n, f"page {pid}: refs != holders"
+    assert alloc.used_pages == len(held)
+
+
+# each op is (action_selector, operand); the operand picks a target branch
+# and sizes new allocations, so a fixed op list replays deterministically
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 8),                       # page_size
+       st.integers(4, 64),                      # num_pages
+       st.lists(st.integers(0, 10_000), min_size=1, max_size=100))
+def test_random_interleavings_conserve_refcounts(page_size, num_pages, ops):
+    alloc = PageAllocator(num_pages, page_size)
+    live = []
+    for op in ops:
+        action = op % 5
+        pick = (op // 5) % max(len(live), 1)
+        size = op % (3 * page_size) + 1
+        try:
+            if action == 0:                     # admit a new prompt
+                live.append(alloc.alloc_prefix(size))
+            elif action == 1 and live:          # fork (prefix sharing)
+                live.append(alloc.fork(live[pick]))
+            elif action == 2 and live:          # decode one token
+                alloc.append_token(live[pick])
+            elif action == 3 and live:          # chunked-prefill growth
+                b = live[pick]
+                alloc.extend(b, b.length + size)
+            elif action == 4 and live:          # branch terminates
+                alloc.release(live.pop(pick))
+        except OutOfPagesError:
+            pass                                # pool pressure is legal
+        alloc.check_invariants()
+        _refcount_conservation(alloc, live)
+    for b in live:
+        alloc.release(b)
+    alloc.check_invariants()
+    assert alloc.used_pages == 0, "page leak after releasing every branch"
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 6), st.integers(1, 30), st.integers(0, 40))
+def test_extend_matches_incremental_appends(page_size, start_tokens, extra):
+    """extend(b, L) must land on exactly the same page count as appending
+    token-by-token, and must be all-or-nothing under pool exhaustion."""
+    a1 = PageAllocator(1024, page_size)
+    a2 = PageAllocator(1024, page_size)
+    b1 = a1.alloc_prefix(start_tokens)
+    b2 = a2.alloc_prefix(start_tokens)
+    a1.extend(b1, start_tokens + extra)
+    for _ in range(extra):
+        a2.append_token(b2)
+    assert len(b1.pages) == len(b2.pages)
+    assert b1.length == b2.length == start_tokens + extra
+
+    tight = PageAllocator(a1.pages_for(max(start_tokens, 1)), page_size)
+    tb = tight.alloc_prefix(start_tokens)
+    before = (list(tb.pages), tb.length, tight.free_pages)
+    huge = start_tokens + tight.num_pages * page_size + 1
+    with pytest.raises(OutOfPagesError):
+        tight.extend(tb, huge)
+    assert (list(tb.pages), tb.length, tight.free_pages) == before
+    tight.check_invariants()
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 6), st.integers(1, 20), st.integers(1, 6))
+def test_fork_release_any_order_frees_everything(page_size, tokens, forks):
+    """Whatever order siblings (and the parent prefix) release in, the pool
+    drains to zero — eager per-branch release with shared-prefix refcounts."""
+    alloc = PageAllocator(256, page_size)
+    prefix = alloc.alloc_prefix(tokens)
+    branches = [alloc.fork(prefix) for _ in range(forks)]
+    for i, b in enumerate(branches):
+        for _ in range(i):                      # ragged private tails
+            alloc.append_token(b)
+    order = branches[1::2] + [prefix] + branches[0::2]
+    for b in order:
+        alloc.release(b)
+        alloc.check_invariants()
+    assert alloc.used_pages == 0

@@ -2,7 +2,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from prop import given, settings, st
 
 from repro.serving.sampling import (SamplingParams, apply_top_k, apply_top_p,
                                     sample)

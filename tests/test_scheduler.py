@@ -78,8 +78,10 @@ def test_sart_noprune_never_prunes():
 
 
 def test_pruning_occurs_with_hostile_prm():
-    """A PRM that hates everything prunes aggressively in phase 1."""
-    eng, sch, probs = _setup("sart", n=4, num_requests=2)
+    """A PRM that hates everything prunes aggressively in phase 1. A short
+    window makes the first pruning round run before random-EOS completions
+    can flip the pruner into exploit phase (threshold 0.0 prunes nothing)."""
+    eng, sch, probs = _setup("sart", n=4, num_requests=2, window=2)
     sch.prm = OraclePRM(lambda req, toks: 0.0, noise=0.0)
     m = sch.run(max_steps=20000)
     assert any(r["num_pruned"] > 0 for r in m["requests"])

@@ -1,0 +1,142 @@
+"""Scheduler/engine invariants from Algorithm 1: early stop at exactly M,
+phase-1 pruning capped at beta per round, and suspend/resume round-tripping
+SSM state bit-exactly."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import OraclePRM, Scheduler, SchedulerConfig
+from repro.core.pruning import TwoPhasePruner
+from repro.data import tokenizer as tk
+from repro.data.tasks import extract_answer
+from repro.models import Model
+from repro.serving import Engine, EngineConfig, SamplingParams
+from repro.serving.simulator import (SimEngine, SimEngineConfig, SimPRM,
+                                     SimTask, SimWorkload)
+
+from conftest import tiny_config
+
+
+def _sim_sched(policy="sart", n=8, m=4, beta=2, num_requests=12, seed=0,
+               window=10, prm_drift=6.0):
+    workload = SimWorkload(mean_len=80, sigma_len=0.4, overthink_p=0.1,
+                           prompt_len=16, prm_drift=prm_drift, prm_noise=0.05)
+    engine = SimEngine(SimEngineConfig(max_slots=32, page_size=8,
+                                       num_pages=8192, prefill_chunk=8),
+                       workload, seed=seed)
+    cfg = SchedulerConfig(policy=policy, n=n, m=m, beta=beta, window=window,
+                          max_tokens=1 << 20)
+    sch = Scheduler(engine, SimPRM(engine), cfg, answer_fn=extract_answer)
+    rng = np.random.default_rng(seed + 1)
+    for i in range(num_requests):
+        task = SimTask(answer=int(rng.integers(0, 10)))
+        prompt = [tk.BOS] + [tk.digit(0)] * 14 + [tk.EQUALS]
+        req = sch.submit(prompt, payload=task, arrival=i * 5)
+        engine.tasks[req.request_id] = task
+    return engine, sch
+
+
+def test_sart_stops_at_exactly_m_completions():
+    """Early stop fires at the M-th completion: no request ever records more
+    than M, and requests that aren't starved by pruning record exactly M."""
+    n, m = 8, 4
+    engine, sch = _sim_sched(n=n, m=m)
+    metrics = sch.run(max_steps=500_000)
+    assert len(metrics["requests"]) == 12
+    for r in metrics["requests"]:
+        assert r["num_completed"] <= m, "ran past the early-stop point"
+        if r["num_completed"] + r["num_pruned"] < n:
+            # branches were still live when the request finalized, so the
+            # only way to finish is hitting M exactly
+            assert r["num_completed"] == m
+    assert any(r["num_completed"] == m for r in metrics["requests"])
+    assert engine.allocator.used_pages == 0
+
+
+class _RecordingPruner(TwoPhasePruner):
+    def __init__(self, inner: TwoPhasePruner):
+        super().__init__(inner.cfg)
+        self.rounds = []            # (phase_at_call, num_pruned_this_round)
+
+    def select_prunes(self, meta, rewards):
+        phase = meta.phase
+        victims = super().select_prunes(meta, rewards)
+        self.rounds.append((phase, len(victims)))
+        return victims
+
+
+def test_phase1_never_prunes_more_than_beta_per_round():
+    beta = 2
+    engine, sch = _sim_sched(n=8, m=4, beta=beta, prm_drift=0.5)
+    sch.pruner = _RecordingPruner(sch.pruner)
+    sch.run(max_steps=500_000)
+    explore_rounds = [k for p, k in sch.pruner.rounds if p == "explore"]
+    assert explore_rounds, "no explore-phase pruning round ever ran"
+    assert all(k <= beta for k in explore_rounds), \
+        "phase-1 round exceeded the beta cap"
+    assert engine.allocator.used_pages == 0
+
+
+def test_branch_at_block_table_capacity_is_evicted_not_crashed():
+    """A branch whose prompt + generation outgrows the static block table
+    must be force-completed via the memory-pressure path (latent in the
+    seed: the table-refresh assert crashed the engine instead)."""
+    from repro.data import tasks
+
+    cfg = tiny_config(vocab_size=tk.VOCAB_SIZE)
+    model = Model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    # capacity 12 pages * 4 = 48 tokens < prompt (~15) + max_tokens (64)
+    eng = Engine(model, params, EngineConfig(
+        page_size=4, num_pages=64, max_slots=2, max_pages_per_branch=12,
+        eos_id=tk.EOS, sampling=SamplingParams(temperature=1.0), seed=1))
+    prm = OraclePRM(tasks.oracle_grader, noise=0.05, seed=2)
+    sch = Scheduler(eng, prm, SchedulerConfig(policy="vanilla", n=1,
+                                              window=8, max_tokens=64),
+                    answer_fn=extract_answer)
+    rng = np.random.default_rng(3)
+    for i in range(2):
+        p = tasks.gen_problem(rng)
+        sch.submit(p.prompt_tokens(), payload=p, arrival=i)
+    m = sch.run(max_steps=10000)
+    assert len(m["requests"]) == 2
+    assert eng.allocator.used_pages == 0
+    assert all(s is None for s in eng.slots)
+
+
+@pytest.mark.parametrize("family_kw", [
+    dict(arch_type="ssm", d_ff=0, ssm_state=16, ssm_head_dim=32, ssm_chunk=8),
+    dict(arch_type="hybrid", ssm_state=16, ssm_head_dim=32, ssm_chunk=8),
+])
+def test_suspend_resume_roundtrips_ssm_state_bit_exactly(family_kw):
+    """suspend_branch snapshots conv/ssd to host; resume_branch must restore
+    the slot rows bit-for-bit even after another branch dirtied them."""
+    cfg = tiny_config(**family_kw)
+    model = Model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    eng = Engine(model, params, EngineConfig(
+        page_size=4, num_pages=64, max_slots=2, max_pages_per_branch=16,
+        eos_id=1, sampling=SamplingParams(temperature=0.0), seed=0))
+    blocks, lg, ssm = eng.prefill([2, 5, 9, 13])
+    h = eng.spawn_branch(0, blocks, lg, ssm, 4)
+    for _ in range(3):
+        eng.decode_step()
+    slot = h.slot
+    conv_before = np.asarray(eng.state["conv"][:, slot])
+    ssd_before = np.asarray(eng.state["ssd"][:, slot])
+
+    eng.suspend_branch(h)
+    other = eng.spawn_branch(1, blocks, lg, ssm, 4)   # dirty the slot rows
+    for _ in range(2):
+        eng.decode_step()
+    eng.free_branch(other)
+    assert eng.resume_branch(h)
+
+    conv_after = np.asarray(eng.state["conv"][:, h.slot])
+    ssd_after = np.asarray(eng.state["ssd"][:, h.slot])
+    np.testing.assert_array_equal(conv_before, conv_after)
+    np.testing.assert_array_equal(ssd_before, ssd_after)
+
+    eng.free_branch(h)
+    eng.release_prefix(blocks)
+    assert eng.allocator.used_pages == 0

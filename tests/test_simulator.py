@@ -2,6 +2,8 @@
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # sim-/training-heavy: not in the CI fast lane
+
 from repro.core.scheduler import percentile_latency
 from repro.serving.simulator import (SimEngine, SimEngineConfig, SimWorkload,
                                      run_sim_experiment)
@@ -43,17 +45,24 @@ def test_sart_beats_sc_latency_at_same_n():
 
 
 def test_early_stopping_shortens_tail():
-    """Paper Fig. 7: tail latency improves with redundant sampling."""
+    """Paper Fig. 7: tail latency improves with redundant sampling.
+
+    Averaged over seeds: a single p97-of-30 comparison is one draw of the
+    overthink tail and can flip on any change to the rng stream (a request
+    whose pruner kills everything but an overthinker loses by itself)."""
     w = _fast_workload(overthink_p=0.3)
-    m1, _ = run_sim_experiment("vanilla", 1, num_requests=30,
-                               arrival_gap=30, workload=w,
-                               engine_cfg=_cfg(max_slots=32), window=25,
-                               seed=2)
-    m8, _ = run_sim_experiment("sart", 8, num_requests=30, arrival_gap=30,
-                               workload=w, engine_cfg=_cfg(max_slots=32),
-                               window=25, seed=2)
-    assert percentile_latency(m8, 97, "inference") < \
-        percentile_latency(m1, 97, "inference")
+
+    def p97(policy, n, seed):
+        m, _ = run_sim_experiment(policy, n, num_requests=30,
+                                  arrival_gap=30, workload=w,
+                                  engine_cfg=_cfg(max_slots=32), window=25,
+                                  seed=seed)
+        return percentile_latency(m, 97, "inference")
+
+    seeds = (0, 1, 2)
+    tail_vanilla = np.mean([p97("vanilla", 1, s) for s in seeds])
+    tail_sart = np.mean([p97("sart", 8, s) for s in seeds])
+    assert tail_sart < tail_vanilla
 
 
 def test_pruning_reduces_queue_vs_noprune():

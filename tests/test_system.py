@@ -4,6 +4,8 @@ import jax
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # sim-/training-heavy: not in the CI fast lane
+
 from repro.core import OraclePRM, RewardHeadPRM, Scheduler, SchedulerConfig
 from repro.core.scheduler import percentile_latency
 from repro.data import DataConfig, padded_batches, prm_batches, tasks

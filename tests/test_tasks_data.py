@@ -1,7 +1,7 @@
 """Synthetic task correctness + data pipeline."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from prop import given, settings, st
 
 from repro.data import DataConfig, padded_batches, prm_batches, tasks
 from repro.data import tokenizer as tk
