@@ -102,16 +102,21 @@ def bench_chunked_prefill(quick=False):
     """Admission cost across ragged prompt lengths: the chunked-bucketed
     path compiles O(num_buckets) shapes where the exact-length path compiles
     one program per distinct length — the dominant admission latency when
-    prompt lengths are diverse."""
+    prompt lengths are diverse. Run for an attention-only AND an ssm config:
+    since the masked-dt chunk lane, ssm/hybrid admission is bucketed too."""
     from repro.data import tokenizer as tk
     from repro.models import Model, ModelConfig
     from repro.serving import Engine, EngineConfig
 
-    cfg = ModelConfig(name="b", arch_type="dense", num_layers=2, d_model=128,
-                      vocab_size=tk.VOCAB_SIZE, num_heads=4, num_kv_heads=2,
-                      d_ff=512)
-    model = Model(cfg)
-    params = model.init_params(jax.random.PRNGKey(0))
+    arch_cfgs = {
+        "dense": ModelConfig(name="b", arch_type="dense", num_layers=2,
+                             d_model=128, vocab_size=tk.VOCAB_SIZE,
+                             num_heads=4, num_kv_heads=2, d_ff=512),
+        "ssm": ModelConfig(name="b-ssm", arch_type="ssm", num_layers=2,
+                           d_model=128, vocab_size=tk.VOCAB_SIZE,
+                           num_heads=4, num_kv_heads=2, d_ff=0,
+                           ssm_state=16, ssm_head_dim=32, ssm_chunk=8),
+    }
     rng = np.random.default_rng(0)
     n_prompts = 6 if quick else 16
     lengths = rng.permutation(np.arange(5, 5 + n_prompts))
@@ -119,19 +124,22 @@ def bench_chunked_prefill(quick=False):
                for s in lengths]
 
     rows = []
-    for mode in ("chunked", "exact"):
-        eng = Engine(model, params, EngineConfig(
-            page_size=8, num_pages=512, max_slots=8,
-            max_pages_per_branch=16, eos_id=tk.EOS, prefill_chunk=8))
-        t0 = time.perf_counter()
-        for p in prompts:
-            blocks, _, _ = eng.prefill(p, exact=(mode == "exact"))
-            eng.release_prefix(blocks)
-        us = (time.perf_counter() - t0) / len(prompts) * 1e6
-        compiles = (eng.prefill_compile_count if mode == "chunked"
-                    else len(eng._prefill_cache))
-        rows.append((f"prefill_{mode}_ragged{len(prompts)}", us,
-                     f"compiles={compiles}"))
+    for arch, cfg in arch_cfgs.items():
+        model = Model(cfg)
+        params = model.init_params(jax.random.PRNGKey(0))
+        for mode in ("chunked", "exact"):
+            eng = Engine(model, params, EngineConfig(
+                page_size=8, num_pages=512, max_slots=8,
+                max_pages_per_branch=16, eos_id=tk.EOS, prefill_chunk=8))
+            t0 = time.perf_counter()
+            for p in prompts:
+                blocks, _, _ = eng.prefill(p, exact=(mode == "exact"))
+                eng.release_prefix(blocks)
+            us = (time.perf_counter() - t0) / len(prompts) * 1e6
+            compiles = (eng.prefill_compile_count if mode == "chunked"
+                        else len(eng._prefill_cache))
+            rows.append((f"prefill_{mode}_{arch}_ragged{len(prompts)}", us,
+                         f"compiles={compiles}"))
     return rows
 
 

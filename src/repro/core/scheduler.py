@@ -219,10 +219,12 @@ class Scheduler:
             self._spawn_one(req)
 
     def _admit(self, req: Request):
-        """Algorithm 1 PREFILL, now asynchronous: admission allocates the
-        prompt's pages and enqueues its chunks; they piggyback on decode
-        steps (engine mixed step) instead of stalling the batch. Engines
-        without chunked support return an already-done state and keep the
+        """Algorithm 1 PREFILL, now asynchronous and uniform across model
+        families (attention, ssm, hybrid — ssm/hybrid chunks ride the
+        masked-dt mixed step): admission allocates the prompt's pages and
+        enqueues its chunks; they piggyback on decode steps instead of
+        stalling the batch. Only engines explicitly configured with
+        ``chunked_prefill=False`` return an already-done state and keep the
         seed's one-tick synchronous accounting."""
         req.prefill_state = self.engine.begin_prefill(req.prompt)
         if req.prefill_state.done:

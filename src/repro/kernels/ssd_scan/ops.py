@@ -15,14 +15,25 @@ def _on_tpu() -> bool:
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "use_kernel"))
-def ssd(x, dt, a, b, c, chunk: int = 64, use_kernel: bool = True):
-    """SSD scan; Pallas kernel on TPU / interpret elsewhere. Pads S to chunk."""
+def ssd(x, dt, a, b, c, chunk: int = 64, use_kernel: bool = True,
+        valid=None):
+    """SSD scan; Pallas kernel on TPU / interpret elsewhere. Pads S to chunk.
+
+    ``valid`` ([B, S] bool or None) marks real positions: invalid ones get
+    dt forced to 0, i.e. an exact identity state transition and zero
+    contribution to every other position's output (masked-dt chunked
+    prefill). Outputs at invalid positions are unspecified. The mask is
+    forwarded to the leaf implementations — the dt-zeroing lives there, in
+    exactly one place per path."""
     if not use_kernel:
-        return ssd_scan_ref(x, dt, a, b, c)
+        return ssd_scan_ref(x, dt, a, b, c, valid=valid)
     s = x.shape[1]
     pad = (-s) % chunk
     if pad:
         zpad = lambda t: jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
         x, dt, b, c = zpad(x), zpad(dt), zpad(b), zpad(c)
-    y = ssd_scan(x, dt, a, b, c, chunk=chunk, interpret=not _on_tpu())
+        if valid is not None:
+            valid = jnp.pad(valid, [(0, 0), (0, pad)])   # pads are invalid
+    y = ssd_scan(x, dt, a, b, c, chunk=chunk, interpret=not _on_tpu(),
+                 valid=valid)
     return y[:, :s]

@@ -11,12 +11,16 @@ import jax
 import jax.numpy as jnp
 
 
-def ssd_scan_ref(x, dt, a, b, c):
+def ssd_scan_ref(x, dt, a, b, c, valid=None):
     """Token-by-token SSM recurrence.
 
     h_t = exp(dt_t a) h_{t-1} + dt_t B_t x_t ;  y_t = C_t · h_t
     x: [B,S,H,P]; dt: [B,S,H]; a: [H]; b,c: [B,S,H,N] -> y [B,S,H,P].
+    ``valid`` ([B,S] bool or None) zeroes dt at invalid positions, making
+    their state transition an exact identity.
     """
+    if valid is not None:
+        dt = jnp.where(valid[..., None], dt, 0.0)
     bs, s, h, p = x.shape
     n = b.shape[-1]
 

@@ -74,13 +74,21 @@ def _ssd_kernel(
 
 
 def ssd_scan(x, dt, a, b, c, *, chunk: int = 64,
-             interpret: bool = False):
+             interpret: bool = False, valid=None):
     """Chunked SSD scan (no initial state, returns outputs only).
 
     x: [B, S, H, P]; dt: [B, S, H] (>0); a: [H] (<0);
     b, c: [B, S, H, N] (head-broadcast). S must be a multiple of `chunk`
     (caller pads). Returns y [B, S, H, P].
+
+    ``valid`` ([B, S] bool or None) zeroes dt at invalid positions before
+    the kernel launches. Every in-kernel use of a position — its log-decay
+    dt·a, its dt-gated B·x state contribution, and its column of the
+    intra-chunk gate — is proportional to (or an exp of) dt, so dt = 0 is
+    exactly an identity state transition; the kernel body needs no mask.
     """
+    if valid is not None:
+        dt = jnp.where(valid[..., None], dt, 0.0)
     bs, s, h, p = x.shape
     n = b.shape[-1]
     assert s % chunk == 0, (s, chunk)

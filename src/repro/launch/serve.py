@@ -15,7 +15,19 @@ import os
 from typing import Optional, Tuple
 
 
-def load_reasoner(ckpt_dir: Optional[str]):
+# untrained-fallback trunks per family (scheduling behaviour only): lets the
+# CLI drive the ssm/hybrid serving paths — masked-dt chunked admission — end
+# to end without a checkpoint
+_FALLBACK_FAMILIES = {
+    "dense": dict(arch_type="dense", d_ff=512),
+    "ssm": dict(arch_type="ssm", d_ff=0, ssm_state=16, ssm_head_dim=32,
+                ssm_chunk=16),
+    "hybrid": dict(arch_type="hybrid", d_ff=512, ssm_state=16,
+                   ssm_head_dim=32, ssm_chunk=16),
+}
+
+
+def load_reasoner(ckpt_dir: Optional[str], arch: str = "dense"):
     """Returns (model, params, prm_head_params_or_None)."""
     import jax
 
@@ -23,7 +35,14 @@ def load_reasoner(ckpt_dir: Optional[str]):
     from ..models import Model, ModelConfig
     from ..training import load_checkpoint
 
-    if ckpt_dir and os.path.exists(os.path.join(ckpt_dir, "config.json")):
+    has_ckpt = ckpt_dir and os.path.exists(
+        os.path.join(ckpt_dir, "config.json"))
+    if arch != "dense" and has_ckpt:
+        import sys
+        print(f"warning: checkpoint {ckpt_dir} is dense-only; "
+              f"--arch {arch} serves the untrained fallback trunk instead",
+              file=sys.stderr)
+    if arch == "dense" and has_ckpt:
         with open(os.path.join(ckpt_dir, "config.json")) as f:
             c = json.load(f)
         cfg = ModelConfig(
@@ -40,9 +59,10 @@ def load_reasoner(ckpt_dir: Optional[str]):
         if os.path.exists(prm_path):
             prm = load_checkpoint(prm_path)
         return model, params, prm
-    cfg = ModelConfig(name="untrained", arch_type="dense", num_layers=2,
+    cfg = ModelConfig(name=f"untrained-{arch}", num_layers=2,
                       d_model=128, vocab_size=tk.VOCAB_SIZE, num_heads=4,
-                      num_kv_heads=2, d_ff=512, max_seq_len=512)
+                      num_kv_heads=2, max_seq_len=512,
+                      **_FALLBACK_FAMILIES[arch])
     model = Model(cfg)
     params = model.init_params(jax.random.PRNGKey(0))
     return model, params, None
@@ -50,7 +70,8 @@ def load_reasoner(ckpt_dir: Optional[str]):
 
 def serve(policy: str, n: int, num_requests: int, rate_gap: int,
           ckpt: Optional[str], prm_kind: str, window: int, max_tokens: int,
-          max_slots: int, seed: int, temperature: float) -> dict:
+          max_slots: int, seed: int, temperature: float,
+          arch: str = "dense") -> dict:
     import numpy as np
 
     from ..core import OraclePRM, RewardHeadPRM, Scheduler, SchedulerConfig
@@ -59,7 +80,7 @@ def serve(policy: str, n: int, num_requests: int, rate_gap: int,
     from ..data import tokenizer as tk
     from ..serving import Engine, EngineConfig, SamplingParams
 
-    model, params, prm_head = load_reasoner(ckpt)
+    model, params, prm_head = load_reasoner(ckpt, arch)
     engine = Engine(model, params, EngineConfig(
         page_size=16, num_pages=4096, max_slots=max_slots,
         max_pages_per_branch=32, eos_id=tk.EOS,
@@ -94,6 +115,8 @@ def serve(policy: str, n: int, num_requests: int, rate_gap: int,
         "queue_p50": percentile_latency(metrics, 50, "queue"),
         "decode_steps": metrics["decode_steps"],
         "clock": metrics["clock"],
+        # O(buckets) for every family since the masked-dt chunk lane
+        "prefill_compile_count": engine.prefill_compile_count,
     }
     return out
 
@@ -108,6 +131,10 @@ def main():
     ap.add_argument("--rate-gap", type=int, default=8,
                     help="decode steps between arrivals")
     ap.add_argument("--ckpt", default="checkpoints/reasoner")
+    ap.add_argument("--arch", default="dense",
+                    choices=sorted(_FALLBACK_FAMILIES),
+                    help="untrained-fallback trunk family (ssm/hybrid "
+                         "exercise the masked-dt chunked admission path)")
     ap.add_argument("--prm", default="oracle", choices=["oracle", "head"])
     ap.add_argument("--window", type=int, default=8)
     ap.add_argument("--max-tokens", type=int, default=96)
@@ -117,7 +144,7 @@ def main():
     args = ap.parse_args()
     out = serve(args.policy, args.n, args.requests, args.rate_gap,
                 args.ckpt, args.prm, args.window, args.max_tokens,
-                args.slots, args.seed, args.temperature)
+                args.slots, args.seed, args.temperature, args.arch)
     print(json.dumps(out, indent=2))
 
 

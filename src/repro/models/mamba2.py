@@ -40,7 +40,8 @@ def _segsum(x):
 
 
 def ssd_chunked(x, dt, a, b, c, chunk: int,
-                initial_state: Optional[jax.Array] = None):
+                initial_state: Optional[jax.Array] = None,
+                valid: Optional[jax.Array] = None):
     """Chunked SSD scan.
 
     x:  [B, S, H, P]   head inputs
@@ -49,12 +50,20 @@ def ssd_chunked(x, dt, a, b, c, chunk: int,
     b:  [B, S, H, N]   input projections (already head-broadcast)
     c:  [B, S, H, N]   output projections (already head-broadcast)
     initial_state: [B, H, P, N] or None
+    valid: [B, S] bool or None — positions marked False get dt forced to 0,
+        which makes their state transition an exact identity (decay
+        exp(0·a)=1, update dt·B·x=0) and removes them from every other
+        position's output. This is what lets right-padded chunk rows ride
+        the serving mixed step without polluting the recurrence.
 
-    Returns (y [B, S, H, P], final_state [B, H, P, N]).
+    Returns (y [B, S, H, P], final_state [B, H, P, N]). Outputs at invalid
+    positions are unspecified (callers discard them).
     """
     bs, s, h, p = x.shape
     n = b.shape[-1]
     q = chunk
+    if valid is not None:
+        dt = jnp.where(valid[..., None], dt, 0.0)
     pad = (-s) % q
     if pad:
         zpad = lambda t: jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
@@ -109,12 +118,16 @@ def ssd_chunked(x, dt, a, b, c, chunk: int,
     return y[:, :s], final_state
 
 
-def ssd_decode_step(state, x, dt, a, b, c):
+def ssd_decode_step(state, x, dt, a, b, c, valid=None):
     """Single-token SSD recurrence.
 
     state: [B, H, P, N]; x: [B, H, P]; dt: [B, H]; a: [H];
-    b, c: [B, H, N]. Returns (y [B,H,P], new_state).
+    b, c: [B, H, N]; valid: [B] bool or None — rows marked False get dt
+    forced to 0, so their state update is an exact identity (inert rows in
+    the serving mixed step). Returns (y [B,H,P], new_state).
     """
+    if valid is not None:
+        dt = jnp.where(valid[:, None], dt, 0.0)
     da = jnp.exp(dt * a)                                   # [B,H]
     upd = jnp.einsum("bh,bhn,bhp->bhpn", dt, b, x)
     new_state = state * da[:, :, None, None].astype(state.dtype) + upd.astype(state.dtype)
@@ -167,8 +180,14 @@ def _split_xbc(cfg: ModelConfig, xbc):
     return x, b, c
 
 
-def _causal_conv(p, xbc, conv_state=None):
-    """Depthwise causal conv. xbc: [B, S, C]. conv_state: [B, W-1, C] tail."""
+def _causal_conv(p, xbc, conv_state=None, valid_len=None):
+    """Depthwise causal conv. xbc: [B, S, C]. conv_state: [B, W-1, C] tail.
+
+    ``valid_len`` (scalar or [B], <= S) marks only the first ``valid_len``
+    positions as real input: the returned state is the W-1 tail of the
+    *valid* stream (prev state ++ xbc[:valid_len]), so right-padded rows
+    never leak into the next segment's receptive field. Conv outputs at
+    padded positions are unspecified (callers discard them)."""
     w = p["conv_w"].shape[0]
     if conv_state is None:
         pad = jnp.zeros((xbc.shape[0], w - 1, xbc.shape[-1]), xbc.dtype)
@@ -177,7 +196,17 @@ def _causal_conv(p, xbc, conv_state=None):
     xp = jnp.concatenate([pad, xbc], axis=1)               # [B, S+W-1, C]
     out = sum(xp[:, i:i + xbc.shape[1]] * p["conv_w"][i] for i in range(w))
     out = out + p["conv_b"]
-    new_state = xp[:, -(w - 1):] if w > 1 else pad
+    if w == 1:
+        new_state = pad
+    elif valid_len is None:
+        new_state = xp[:, -(w - 1):]
+    else:
+        # tail of the valid stream: xp[b, vl : vl + W-1] (vl == S reproduces
+        # the unmasked slice above)
+        vl = jnp.broadcast_to(jnp.asarray(valid_len), (xbc.shape[0],))
+        new_state = jax.vmap(
+            lambda row, n: jax.lax.dynamic_slice_in_dim(row, n, w - 1, 0)
+        )(xp, vl)
     return jax.nn.silu(out), new_state
 
 
@@ -189,43 +218,61 @@ def _head_broadcast(cfg: ModelConfig, bc):
     return jnp.repeat(bc, h // g, axis=2)
 
 
-def mamba2_forward(cfg: ModelConfig, p, x_in, initial=None):
-    """x_in: [B, S, D] -> (y [B,S,D], (conv_state, ssd_state))."""
+def mamba2_forward(cfg: ModelConfig, p, x_in, initial=None, valid_len=None):
+    """x_in: [B, S, D] -> (y [B,S,D], (conv_state, ssd_state)).
+
+    ``valid_len`` (scalar or [B]) treats only the first ``valid_len``
+    positions as real tokens: padded tail positions get dt masked to zero
+    (identity SSD transition) and are excluded from the conv state, so the
+    returned states equal those of a scan over the unpadded sequence.
+    Outputs at padded positions are unspecified."""
     bs, s, _ = x_in.shape
     h, pp = cfg.ssm_heads, cfg.ssm_head_dim
     proj = x_in @ p["in_proj"]
     z, xbc, dt_raw = _split_proj(cfg, proj)
     conv_state_in = initial[0] if initial is not None else None
     ssd_state_in = initial[1] if initial is not None else None
-    xbc, conv_state = _causal_conv(p, xbc, conv_state_in)
+    xbc, conv_state = _causal_conv(p, xbc, conv_state_in, valid_len)
     xs, b, c = _split_xbc(cfg, xbc)
     xs = xs.reshape(bs, s, h, pp)
     bh = _head_broadcast(cfg, b)
     ch = _head_broadcast(cfg, c)
     dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
     a = -jnp.exp(p["a_log"])
-    y, ssd_state = ssd_chunked(xs, dt, a, bh, ch, cfg.ssm_chunk, ssd_state_in)
+    valid = None
+    if valid_len is not None:
+        vl = jnp.broadcast_to(jnp.asarray(valid_len), (bs,))
+        valid = jnp.arange(s)[None, :] < vl[:, None]
+    y, ssd_state = ssd_chunked(xs, dt, a, bh, ch, cfg.ssm_chunk, ssd_state_in,
+                               valid=valid)
     y = y + xs * p["d_skip"][None, None, :, None].astype(y.dtype)
     y = y.reshape(bs, s, cfg.d_inner)
     y = apply_norm(cfg, p["norm"], y * jax.nn.silu(z))
     return y @ p["out_proj"], (conv_state, ssd_state)
 
 
-def mamba2_decode(cfg: ModelConfig, p, x_in, conv_state, ssd_state):
+def mamba2_decode(cfg: ModelConfig, p, x_in, conv_state, ssd_state,
+                  valid=None):
     """One-token decode. x_in: [B, 1, D]; conv_state: [B, W-1, C];
-    ssd_state: [B, H, P, N]. Returns (y [B,1,D], conv_state, ssd_state)."""
+    ssd_state: [B, H, P, N]; valid: [B] bool or None — rows marked False
+    keep BOTH states bit-identical (inert rows in the serving mixed step).
+    Returns (y [B,1,D], conv_state, ssd_state)."""
     bs = x_in.shape[0]
     h, pp = cfg.ssm_heads, cfg.ssm_head_dim
     proj = x_in @ p["in_proj"]                              # [B,1,·]
     z, xbc, dt_raw = _split_proj(cfg, proj)
+    conv_state_in = conv_state
     xbc, conv_state = _causal_conv(p, xbc, conv_state)
+    if valid is not None:
+        conv_state = jnp.where(valid[:, None, None], conv_state,
+                               conv_state_in.astype(conv_state.dtype))
     xs, b, c = _split_xbc(cfg, xbc)
     xs1 = xs[:, 0].reshape(bs, h, pp)
     bh = _head_broadcast(cfg, b)[:, 0]                      # [B,H,N]
     ch = _head_broadcast(cfg, c)[:, 0]
     dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])
     a = -jnp.exp(p["a_log"])
-    y, ssd_state = ssd_decode_step(ssd_state, xs1, dt, a, bh, ch)
+    y, ssd_state = ssd_decode_step(ssd_state, xs1, dt, a, bh, ch, valid=valid)
     y = y + xs1 * p["d_skip"][None, :, None].astype(y.dtype)
     y = y.reshape(bs, 1, cfg.d_inner)
     y = apply_norm(cfg, p["norm"], y * jax.nn.silu(z))

@@ -33,7 +33,8 @@ from ..models.attention import _project_qkv, _rotate
 from ..models.config import ModelConfig
 from ..models.layers import (apply_mlp, apply_norm, embed_tokens,
                              sinusoidal_embedding, unembed)
-from ..models.mamba2 import init_mamba2_state, mamba2_decode
+from ..models.mamba2 import (init_mamba2_state, mamba2_decode,
+                             mamba2_forward)
 from ..models.model import Model
 from ..models.moe import apply_moe
 from .sampling import SamplingParams, sample
@@ -49,12 +50,14 @@ class EngineConfig:
     eos_id: int = 1
     sampling: SamplingParams = SamplingParams(temperature=1.0, top_p=0.95)
     seed: int = 0
-    # Chunked prefill (attention-only configs): prompts are split into
+    # Chunked prefill (all model families): prompts are split into
     # ``prefill_chunk``-token chunks, each padded up to one of
     # ``prefill_buckets`` and run as extra rows of the decode step, so
     # admission piggybacks on decode instead of stalling it and the number
     # of compiled prefill shapes is O(len(buckets)), not O(distinct prompt
-    # lengths). () derives buckets as (chunk // 2, chunk).
+    # lengths). ssm/hybrid chunk rows run a masked-dt scan (pad positions
+    # are identity state transitions) with the running SSM state carried
+    # across chunks. () derives buckets as (chunk // 2, chunk).
     chunked_prefill: bool = True
     prefill_chunk: int = 64
     prefill_buckets: tuple = ()
@@ -65,13 +68,18 @@ class ChunkedPrefillState:
     """A partially-prefilled request: pages fill chunk-by-chunk while the
     decode batch keeps stepping. ``done`` flips once the final chunk has
     been written and the last-position logits are available for
-    ``spawn_branch``."""
+    ``spawn_branch``. For ssm/hybrid configs ``ssm_state`` carries the
+    running per-layer (conv, ssd) state between chunks; it ends up holding
+    exactly what the exact-length path returns. ``harvested`` flips in
+    ``finish_prefill`` — from then on the pages belong to the caller and
+    ``abort_prefill`` must not release them."""
     prompt: List[int]
     blocks: BranchBlocks
     next_pos: int = 0                # prompt tokens written so far
     last_logits: object = None
-    ssm_state: object = None         # only set by the legacy exact path
+    ssm_state: object = None         # [L,1,...] (conv, ssd) running state
     done: bool = False
+    harvested: bool = False
 
     @property
     def remaining(self) -> int:
@@ -134,15 +142,18 @@ class Engine:
         self.decode_steps_executed = 0
         self.prefill_chunk_steps = 0
 
-        # chunked prefill: supported for attention-only configs (padding a
-        # chunk would pollute the SSM recurrence of ssm/hybrid models, which
-        # keep the exact-length path)
-        self._chunked_ok = (cfg.chunked_prefill and mc.uses_attention
-                            and not mc.uses_ssm)
+        # chunked prefill: every family rides the bucketed path. Attention
+        # pad rows are idempotent re-writes of the last valid row; ssm/hybrid
+        # pad rows get dt masked to zero (identity state transition), with
+        # the running (conv, ssd) state carried on the ChunkedPrefillState.
+        self._chunked_ok = cfg.chunked_prefill
         buckets = tuple(sorted(set(cfg.prefill_buckets))) or tuple(sorted(
             {max(cfg.prefill_chunk // 2, 1), cfg.prefill_chunk}))
-        assert buckets[-1] >= cfg.prefill_chunk, \
-            "largest prefill bucket must cover a full chunk"
+        if buckets[-1] < cfg.prefill_chunk:
+            raise ValueError(
+                f"largest prefill bucket {buckets[-1]} must cover a full "
+                f"prefill_chunk of {cfg.prefill_chunk} tokens — otherwise "
+                "chunk rows would alias (see Engine._bucket_for)")
         self._buckets = buckets
         self._buckets_used: set = set()
         self._pending_prefills: List[ChunkedPrefillState] = []
@@ -171,22 +182,19 @@ class Engine:
         None). The prefix pages are NOT yet shared — call ``spawn_branch``
         N times to fork branches off them.
 
-        Attention-only configs default to the chunked-bucketed path (same
-        compiled shapes as the serving mixed step); ``exact=True`` forces the
-        legacy exact-length program, which ssm/hybrid configs always use
-        (right-padding would be masked out by attention but would pollute the
-        SSM recurrence state).
+        All families default to the chunked-bucketed path (same compiled
+        shapes as the serving mixed step); ``exact=True`` forces the legacy
+        exact-length program (one compile per distinct prompt length).
+        ssm/hybrid chunks run the masked-dt scan, so right padding is an
+        identity state transition rather than recurrence pollution.
         """
         if not self._chunked_ok:
-            exact = True     # ssm/hybrid state rows only exist for the
-                             # decode slots; chunk rows can't carry them
+            exact = True     # chunked admission disabled by config
         if not exact:
-            st = ChunkedPrefillState(
-                prompt=list(prompt),
-                blocks=self._alloc_prompt_pages(len(prompt)))
+            st = self._new_chunked_state(prompt)
             while not st.done:
                 self._advance_chunk(st, piggyback=False)
-            return st.blocks, st.last_logits, None
+            return st.blocks, st.last_logits, st.ssm_state
         cfg, mc = self.cfg, self.model.cfg
         s = len(prompt)
         if s not in self._prefill_cache:
@@ -211,35 +219,54 @@ class Engine:
         return self.allocator.alloc_prefix(s)
 
     # ------------------------------------------------- chunked prefill (new)
+    def _new_chunked_state(self, prompt: List[int]) -> ChunkedPrefillState:
+        """Allocate a prompt's pages and, for ssm/hybrid configs, the
+        zero-initialized per-layer running (conv, ssd) state its chunks
+        thread through the mixed step."""
+        st = ChunkedPrefillState(
+            prompt=list(prompt),
+            blocks=self._alloc_prompt_pages(len(prompt)))
+        mc = self.model.cfg
+        if mc.uses_ssm:
+            conv, ssd = init_mamba2_state(mc, 1, self.model.dtype)
+            L = mc.num_layers
+            st.ssm_state = (jnp.zeros((L,) + conv.shape, self.model.dtype),
+                            jnp.zeros((L,) + ssd.shape, self.model.dtype))
+        return st
+
     def begin_prefill(self, prompt: List[int]) -> ChunkedPrefillState:
-        """Admit a request without stalling decode. For attention-only
-        configs the returned state is queued and its prompt chunks piggyback
-        on subsequent ``decode_step`` calls (one chunk per step); poll
-        ``state.done`` and harvest with ``finish_prefill``. Configs without
-        chunked support prefill synchronously and return an already-done
-        state. Raises OutOfPagesError (allocating nothing) when the KV pool
-        cannot hold the prompt."""
+        """Admit a request without stalling decode. The returned state is
+        queued and its prompt chunks piggyback on subsequent ``decode_step``
+        calls (one chunk per step); poll ``state.done`` and harvest with
+        ``finish_prefill``. With ``chunked_prefill=False`` the prompt
+        prefills synchronously and the state returns already done. Raises
+        OutOfPagesError (allocating nothing) when the KV pool cannot hold
+        the prompt."""
         if not self._chunked_ok:
             blocks, logits, ssm = self.prefill(prompt, exact=True)
             return ChunkedPrefillState(
                 prompt=list(prompt), blocks=blocks, next_pos=len(prompt),
                 last_logits=logits, ssm_state=ssm, done=True)
-        st = ChunkedPrefillState(
-            prompt=list(prompt),
-            blocks=self._alloc_prompt_pages(len(prompt)))
+        st = self._new_chunked_state(prompt)
         self._pending_prefills.append(st)
         return st
 
     def finish_prefill(self, st: ChunkedPrefillState):
-        """Harvest a completed prefill: (prefix_blocks, last_logits, ssm)."""
+        """Harvest a completed prefill: (prefix_blocks, last_logits, ssm).
+        Ownership of the pages passes to the caller."""
         assert st.done, "prefill still has pending chunks"
+        st.harvested = True
         return st.blocks, st.last_logits, st.ssm_state
 
     def abort_prefill(self, st: ChunkedPrefillState) -> None:
-        """Drop a queued prefill and release its pages."""
+        """Drop a queued prefill and release its pages. A state already
+        harvested via ``finish_prefill`` no longer owns its pages (they back
+        live branches), so aborting it only detaches it from the queue —
+        releasing would double-decref shared pages and corrupt refcounts."""
         if st in self._pending_prefills:
             self._pending_prefills.remove(st)
-        self.allocator.release(st.blocks)
+        if not st.harvested:
+            self.allocator.release(st.blocks)
         st.done = True
 
     @property
@@ -256,15 +283,23 @@ class Engine:
         for b in self._buckets:
             if b >= n:
                 return b
-        return self._buckets[-1]
+        # silently returning the largest bucket would alias chunk rows
+        # (several prompt positions mapped onto one step row)
+        raise ValueError(
+            f"chunk of {n} tokens exceeds the largest prefill bucket "
+            f"{self._buckets[-1]}; configure prefill_buckets to cover "
+            f"prefill_chunk={self.cfg.prefill_chunk}")
 
     def _chunk_inputs(self, st: ChunkedPrefillState):
         """Build the extra step rows for the next chunk of ``st``.
 
         Rows past the chunk's true length shadow the last valid row (same
-        token/position), so their page writes are idempotent duplicates and
-        never touch unwritten slots — no masking needed inside the jit'd
-        step."""
+        token/position) so their positions/lengths stay in range, but they
+        are otherwise pure padding: ``_step_fn`` drops their K/V page
+        writes (``write_ok`` → OOB sentinel — from layer 2 on a pad row's
+        activations can diverge from the row it shadows, so re-writing the
+        same slot would clobber valid state) and the masked-dt SSM lane
+        treats them as identity transitions via ``chunk_len``."""
         cfg = self.cfg
         s = len(st.prompt)
         chunk_len = min(cfg.prefill_chunk, s - st.next_pos)
@@ -283,19 +318,30 @@ class Engine:
         """Run one chunk of ``st`` through the step program. With
         ``piggyback`` the caller (``decode_step``) supplies the live decode
         rows; standalone draining pads with inert rows (sentinel block
-        tables drop their writes) so active branches are never advanced."""
-        cfg = self.cfg
+        tables drop their page writes, and the slot-validity mask freezes
+        the per-slot SSM states) so active branches are never advanced.
+
+        ssm/hybrid configs thread the request's running per-layer (conv,
+        ssd) state through the step (``chunk_*`` keys) and get it back
+        advanced by exactly ``chunk_len`` tokens — pad rows are identity
+        transitions under the masked-dt scan."""
+        cfg, mc = self.cfg, self.model.cfg
         B = cfg.max_slots
         ct, cp, cbt, cl, chunk_len, bucket = self._chunk_inputs(st)
         if piggyback:
             d_tokens, d_positions = self._tokens, self._positions
             d_bt, d_lengths = self._block_tables, self._lengths
+            slot_valid = self._active
         else:
             d_tokens = np.zeros((B,), np.int32)
             d_positions = np.zeros((B,), np.int32)
             d_bt = np.full((B, cfg.max_pages_per_branch), cfg.num_pages,
                            np.int32)
             d_lengths = np.zeros((B,), np.int32)
+            slot_valid = np.zeros((B,), bool)
+        chunk_state = {}
+        if mc.uses_ssm:
+            chunk_state = {"conv": st.ssm_state[0], "ssd": st.ssm_state[1]}
         self._buckets_used.add(bucket)
         next_tokens, hidden, logits, new_state = self._step_jit(
             self.params, self.state,
@@ -303,7 +349,12 @@ class Engine:
             jnp.asarray(np.concatenate([d_positions, cp])),
             jnp.asarray(np.concatenate([d_bt, cbt])),
             jnp.asarray(np.concatenate([d_lengths, cl])),
-            self._next_rng())
+            self._next_rng(), chunk_state, jnp.int32(chunk_len),
+            jnp.asarray(slot_valid))
+        new_state = dict(new_state)
+        if mc.uses_ssm:
+            st.ssm_state = (new_state.pop("chunk_conv"),
+                            new_state.pop("chunk_ssd"))
         self.state.update(new_state)
         self.prefill_chunk_steps += 1
         st.next_pos += chunk_len
@@ -480,7 +531,7 @@ class Engine:
 
     # ----------------------------------------------------------------- decode
     def _step_fn(self, params, state, tokens, positions, block_tables,
-                 lengths, rng):
+                 lengths, rng, chunk_state, chunk_len, slot_valid):
         """One batched token step, generic in row count.
 
         Rows 0..max_slots-1 are the decode slots; any extra rows are one
@@ -490,15 +541,38 @@ class Engine:
         rows scatter K/V before attention, and row i's length covers only
         positions <= its own. One compile per distinct row count: the pure
         decode shape plus one mixed shape per prefill bucket.
+
+        The SSM mixer of ssm/hybrid configs is inherently sequential, so its
+        chunk rows can't be independent like attention's: they run as ONE
+        [1, bucket, D] sequence through the masked-dt chunked scan instead,
+        seeded by ``chunk_state`` (per-layer (conv, ssd) carried across
+        chunks on the ChunkedPrefillState) with only the first ``chunk_len``
+        rows valid — pad rows are exact identity transitions. ``slot_valid``
+        masks the per-slot SSM state update of decode rows the same way, so
+        inert rows (standalone chunk draining, empty slots) never perturb
+        suspended or future occupants.
         """
         model, mc, cfg = self.model, self.model.cfg, self.cfg
         B = tokens.shape[0]
+        nS = cfg.max_slots
+        # static: does this shape carry an SSM chunk lane?
+        ssm_chunk_lane = bool(chunk_state) and mc.uses_ssm
         x = embed_tokens(mc, params["embed"], tokens[:, None])
         if mc.pos_embedding == "sinusoidal":
             x = x + sinusoidal_embedding(positions, mc.d_model)[:, None].astype(x.dtype)
 
         page_of = block_tables[jnp.arange(B), positions // cfg.page_size]
         slot_in_page = positions % cfg.page_size
+        if B > nS:
+            # chunk rows past chunk_len are pure padding: route their K/V
+            # writes to the OOB sentinel (mode="drop"). Shadowing the last
+            # valid row is NOT idempotent for hybrid configs — from layer 2
+            # on, pad-row inputs differ (the masked SSM lane leaves
+            # unspecified values at pad positions) and would clobber the
+            # valid row's K/V.
+            write_ok = jnp.concatenate([
+                jnp.ones((nS,), bool), jnp.arange(B - nS) < chunk_len])
+            page_of = jnp.where(write_ok, page_of, cfg.num_pages)
 
         def layer(carry, scanned):
             x = carry
@@ -525,11 +599,23 @@ class Engine:
                 mix = mix + y
                 outs["k_pages"], outs["v_pages"] = kp, vp
             if mc.uses_ssm:
-                y, conv, ssd = mamba2_decode(mc, layer_p["mamba"], h,
-                                             scanned["conv"], scanned["ssd"])
-                mix = mix + y
+                y, conv, ssd = mamba2_decode(
+                    mc, layer_p["mamba"], h[:nS], scanned["conv"],
+                    scanned["ssd"], valid=slot_valid)
                 outs["conv"] = conv.astype(scanned["conv"].dtype)
                 outs["ssd"] = ssd.astype(scanned["ssd"].dtype)
+                if ssm_chunk_lane:
+                    y_ch, (c_conv, c_ssd) = mamba2_forward(
+                        mc, layer_p["mamba"], jnp.swapaxes(h[nS:], 0, 1),
+                        initial=(scanned["chunk_conv"],
+                                 scanned["chunk_ssd"]),
+                        valid_len=chunk_len)
+                    outs["chunk_conv"] = c_conv.astype(
+                        scanned["chunk_conv"].dtype)
+                    outs["chunk_ssd"] = c_ssd.astype(
+                        scanned["chunk_ssd"].dtype)
+                    y = jnp.concatenate([y, jnp.swapaxes(y_ch, 0, 1)], 0)
+                mix = mix + y
             if mc.arch_type == "hybrid":
                 mix = mix * 0.5
             x = x + mix
@@ -546,6 +632,9 @@ class Engine:
         for key in ("k_pages", "v_pages", "conv", "ssd"):
             if key in state:
                 scanned_in[key] = state[key]
+        if ssm_chunk_lane:
+            scanned_in["chunk_conv"] = chunk_state["conv"]
+            scanned_in["chunk_ssd"] = chunk_state["ssd"]
         x, new_state = jax.lax.scan(layer, x, scanned_in)
         x = apply_norm(mc, params["final_norm"], x)
         hidden = x[:, 0]
@@ -607,7 +696,8 @@ class Engine:
             next_tokens, hidden, _, new_state = self._step_jit(
                 self.params, self.state, jnp.asarray(self._tokens),
                 jnp.asarray(self._positions), jnp.asarray(self._block_tables),
-                jnp.asarray(self._lengths), self._next_rng())
+                jnp.asarray(self._lengths), self._next_rng(), {},
+                jnp.int32(0), jnp.asarray(self._active))
             self.state.update(new_state)
         self._last_hidden = hidden[:cfg.max_slots]
         self.decode_steps_executed += 1

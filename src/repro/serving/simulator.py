@@ -119,12 +119,17 @@ class SimEngine:
 
     def finish_prefill(self, st: ChunkedPrefillState):
         assert st.done, "prefill still has pending chunks"
+        st.harvested = True
         return st.blocks, st.last_logits, st.ssm_state
 
     def abort_prefill(self, st: ChunkedPrefillState) -> None:
+        """Mirror of Engine.abort_prefill: harvested states no longer own
+        their pages (branches fork off them), so only unharvested aborts
+        release."""
         if st in self._pending_prefills:
             self._pending_prefills.remove(st)
-        self.allocator.release(st.blocks)
+        if not st.harvested:
+            self.allocator.release(st.blocks)
         st.done = True
 
     @property

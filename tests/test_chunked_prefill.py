@@ -1,6 +1,8 @@
-"""Chunked-bucketed prefill: equivalence with the exact-length path, O(1)
-compile count in prompt-length diversity, and decode-step piggybacking that
-never perturbs running branches."""
+"""Chunked-bucketed prefill: equivalence with the exact-length path (all
+model families — attention pad rows drop their page writes, ssm/hybrid pad
+rows are masked-dt identity transitions), O(1) compile count in
+prompt-length diversity, and decode-step piggybacking that never perturbs
+running branches."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -9,7 +11,9 @@ import pytest
 from repro.models import Model
 from repro.serving import Engine, EngineConfig, SamplingParams
 
-from conftest import tiny_config
+from conftest import FAMILY_CONFIGS, tiny_config
+
+FAMILIES = {k: FAMILY_CONFIGS[k] for k in ("dense", "ssm", "hybrid")}
 
 
 def _engine(cfg, temperature=0.0, slots=4, seed=0, **eng_kw):
@@ -21,6 +25,14 @@ def _engine(cfg, temperature=0.0, slots=4, seed=0, **eng_kw):
                 prefill_chunk=8)
     base.update(eng_kw)
     return model, params, Engine(model, params, EngineConfig(**base))
+
+
+def _assert_ssm_close(ssm_a, ssm_b, atol=1e-5):
+    assert (ssm_a is None) == (ssm_b is None)
+    if ssm_a is not None:
+        for got, want in zip(ssm_a, ssm_b):
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       rtol=1e-4, atol=atol)
 
 
 def _gather_prefix(eng, blocks, s):
@@ -62,10 +74,42 @@ def test_chunked_matches_exact_prefill(s):
     assert e_chunk.allocator.used_pages == 0
 
 
-def test_chunked_then_decode_matches_exact_then_decode():
+@pytest.mark.parametrize("family", ["ssm", "hybrid"])
+@pytest.mark.parametrize("s", [1, 4, 5, 8, 13, 17])
+def test_chunked_matches_exact_prefill_ssm(family, s):
+    """ssm/hybrid prompts through the masked-dt chunk lane must reproduce
+    the exact-length program's last logits AND final per-layer (conv, ssd)
+    state across ragged lengths spanning chunk/bucket/page boundaries."""
+    cfg = tiny_config(**FAMILIES[family])
+    rng = np.random.default_rng(s)
+    prompt = [int(t) for t in rng.integers(2, cfg.vocab_size, size=s)]
+
+    _, _, e_exact = _engine(cfg)
+    _, _, e_chunk = _engine(cfg)
+    b_e, lg_e, ssm_e = e_exact.prefill(prompt, exact=True)
+    b_c, lg_c, ssm_c = e_chunk.prefill(prompt)      # chunked by default
+
+    np.testing.assert_allclose(np.asarray(lg_e), np.asarray(lg_c),
+                               rtol=1e-4, atol=1e-4)
+    _assert_ssm_close(ssm_e, ssm_c)
+    if cfg.uses_attention:
+        ke, ve = _gather_prefix(e_exact, b_e, s)
+        kc, vc = _gather_prefix(e_chunk, b_c, s)
+        np.testing.assert_allclose(ke, kc, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(ve, vc, rtol=1e-4, atol=1e-5)
+    assert len(e_chunk._prefill_cache) == 0         # exact path never used
+
+    e_exact.release_prefix(b_e)
+    e_chunk.release_prefix(b_c)
+    assert e_chunk.allocator.used_pages == 0
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_chunked_then_decode_matches_exact_then_decode(family):
     """Greedy generation after a chunked prefill equals generation after an
-    exact prefill — the pages it left behind are a faithful cache."""
-    cfg = tiny_config()
+    exact prefill — the pages and SSM state it left behind are a faithful
+    cache."""
+    cfg = tiny_config(**FAMILIES[family])
     prompt = [2, 5, 9, 13, 7, 3, 11, 4, 8, 6, 10]   # 11 tokens: 2 chunks
 
     def gen(exact):
@@ -83,13 +127,16 @@ def test_chunked_then_decode_matches_exact_then_decode():
     assert gen(exact=True) == gen(exact=False)
 
 
-def test_compile_count_is_o_num_buckets():
-    """Acceptance: 16 prompts of distinct ragged lengths trace at most 4
-    prefill/mixed-step shapes (the seed's exact path traced 16)."""
-    cfg = tiny_config()
+@pytest.mark.parametrize("family,n_lengths", [
+    ("dense", 16), ("ssm", 8), ("hybrid", 8)])
+def test_compile_count_is_o_num_buckets(family, n_lengths):
+    """Acceptance: prompts of distinct ragged lengths trace at most 4
+    prefill/mixed-step shapes (the seed's exact path traced one per
+    length) — for every model family, ssm/hybrid included."""
+    cfg = tiny_config(**FAMILIES[family])
     _, _, eng = _engine(cfg, slots=2, num_pages=256,
                         max_pages_per_branch=32)
-    lengths = list(range(3, 3 + 16))                # 16 distinct lengths
+    lengths = list(range(3, 3 + n_lengths))         # distinct lengths
     rng = np.random.default_rng(0)
     for s in lengths:
         prompt = [int(t) for t in rng.integers(2, cfg.vocab_size, size=s)]
@@ -100,12 +147,15 @@ def test_compile_count_is_o_num_buckets():
     assert eng.allocator.used_pages == 0
 
 
-def test_piggybacked_prefill_leaves_decode_untouched():
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_piggybacked_prefill_leaves_decode_untouched(family):
     """A prompt admitted mid-generation rides the decode step as extra rows;
     the running branch's greedy continuation must be bit-identical to a run
     with no concurrent prefill, and the admitted prompt must produce the
-    same logits as a standalone prefill."""
-    cfg = tiny_config()
+    same logits as a standalone prefill. For ssm/hybrid this additionally
+    pins that the chunk lane's carried state never bleeds into the per-slot
+    (conv, ssd) rows of live branches."""
+    cfg = tiny_config(**FAMILIES[family])
     prompt_a = [2, 5, 9, 13, 7]
     prompt_b = [3, 8, 11, 6, 12, 4, 10, 9, 2, 7, 5, 13, 3]   # 13 tokens
 
@@ -167,14 +217,86 @@ def test_abort_prefill_releases_pages():
     assert not eng.has_pending_prefill
 
 
-def test_ssm_configs_fall_back_to_exact():
-    """ssm/hybrid models must keep the exact-length path (padding would
-    pollute the recurrence) and begin_prefill must complete synchronously."""
-    cfg = tiny_config(arch_type="hybrid", ssm_state=16, ssm_head_dim=32,
-                      ssm_chunk=8)
+@pytest.mark.parametrize("family", ["ssm", "hybrid"])
+def test_ssm_configs_admit_async(family):
+    """ssm/hybrid prompts now ride the bucketed chunk lane (masked-dt scan):
+    begin_prefill queues instead of stalling, chunks drain one per decode
+    step, and the harvested state carries the final SSM state for
+    spawn_branch."""
+    cfg = tiny_config(**FAMILIES[family])
     _, _, eng = _engine(cfg)
+    st = eng.begin_prefill([2, 5, 9, 13, 7, 3, 11, 4, 8])  # 9 tok: 2 chunks
+    assert not st.done and eng.has_pending_prefill
+    steps = 0
+    while not st.done:
+        eng.decode_step()
+        steps += 1
+    assert steps == 2
+    blocks, lg, ssm = eng.finish_prefill(st)
+    assert ssm is not None and lg is not None
+    assert eng.prefill_compile_count <= 2
+    h = eng.spawn_branch(0, blocks, lg, ssm, 9)
+    for _ in range(3):
+        eng.decode_step()
+    eng.free_branch(h)
+    eng.release_prefix(blocks)
+    assert eng.allocator.used_pages == 0
+
+
+def test_chunked_prefill_disabled_is_synchronous():
+    """chunked_prefill=False keeps the seed's synchronous exact-length
+    admission for every family."""
+    cfg = tiny_config(**FAMILIES["ssm"])
+    _, _, eng = _engine(cfg, chunked_prefill=False)
     st = eng.begin_prefill([2, 5, 9, 13, 7])
     assert st.done and st.ssm_state is not None
     assert not eng.has_pending_prefill
     eng.release_prefix(st.blocks)
     assert eng.allocator.used_pages == 0
+
+
+def test_abort_after_harvest_does_not_double_release():
+    """Regression: aborting a state whose pages were already harvested (and
+    forked by spawn_branch) must NOT release them again — that would decref
+    pages live branches still reference and corrupt the pool."""
+    cfg = tiny_config()
+    _, _, eng = _engine(cfg)
+    st = eng.begin_prefill([2, 5, 9, 13, 7, 3, 11, 4, 8])
+    while not st.done:
+        eng.decode_step()
+    blocks, lg, ssm = eng.finish_prefill(st)
+    h = eng.spawn_branch(0, blocks, lg, ssm, 9)
+    used = eng.allocator.used_pages
+    eng.abort_prefill(st)             # late abort: queue no-op, pages kept
+    assert eng.allocator.used_pages == used
+    eng.allocator.check_invariants()
+    for _ in range(4):
+        eng.decode_step()             # branch must still decode fine
+    eng.free_branch(h)
+    eng.release_prefix(blocks)
+    assert eng.allocator.used_pages == 0
+    eng.allocator.check_invariants()
+
+
+def test_abort_prefill_is_idempotent():
+    cfg = tiny_config()
+    _, _, eng = _engine(cfg)
+    st = eng.begin_prefill([2, 5, 9, 13, 7])
+    eng.abort_prefill(st)
+    eng.abort_prefill(st)             # BranchBlocks already emptied: no-op
+    assert eng.allocator.used_pages == 0
+    eng.allocator.check_invariants()
+
+
+def test_bucket_overflow_raises():
+    """A chunk longer than the largest bucket must fail loudly — silently
+    padding to the top bucket would alias several prompt positions onto one
+    step row."""
+    cfg = tiny_config()
+    _, _, eng = _engine(cfg)                        # buckets (4, 8)
+    assert eng._bucket_for(8) == 8                  # boundary: exact fit
+    with pytest.raises(ValueError, match="exceeds the largest"):
+        eng._bucket_for(9)
+    # misconfiguration is rejected at construction, before any admission
+    with pytest.raises(ValueError, match="must cover a full"):
+        _engine(cfg, prefill_buckets=(2, 4))        # top < prefill_chunk=8

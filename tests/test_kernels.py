@@ -108,6 +108,26 @@ def test_ssd_kernel_nondivisible_padding(rng):
     np.testing.assert_allclose(ker, ref, atol=2e-4)
 
 
+@pytest.mark.parametrize("vl", [1, 7, 11, 16])
+def test_ssd_kernel_valid_mask_matches_unpadded_prefix(rng, vl):
+    """Masked-dt through the kernel wrapper: ssd(..., valid=mask) over a
+    right-padded sequence must reproduce the unpadded scan at every valid
+    position — pad positions are identity transitions that contribute
+    nothing downstream (same contract the serving chunk lane relies on)."""
+    x = jnp.asarray(rng.normal(size=(2, 16, 2, 8)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, size=(2, 16, 2)), jnp.float32)
+    a = -jnp.ones((2,), jnp.float32)
+    bb = jnp.asarray(rng.normal(size=(2, 16, 2, 4)), jnp.float32)
+    cc = jnp.asarray(rng.normal(size=(2, 16, 2, 4)), jnp.float32)
+    valid = jnp.arange(16)[None, :] < vl
+    for use_kernel in (True, False):
+        got = ssd(x, dt, a, bb, cc, chunk=8, use_kernel=use_kernel,
+                  valid=valid)
+        want = ssd(x[:, :vl], dt[:, :vl], a, bb[:, :vl], cc[:, :vl],
+                   chunk=8, use_kernel=use_kernel)
+        np.testing.assert_allclose(got[:, :vl], want, atol=2e-4)
+
+
 def test_ssd_kernel_bf16(rng):
     x = jnp.asarray(rng.normal(size=(1, 16, 2, 8))).astype(jnp.bfloat16)
     dt = jnp.asarray(rng.uniform(0.01, 0.2, size=(1, 16, 2))).astype(jnp.bfloat16)

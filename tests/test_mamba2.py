@@ -2,6 +2,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from prop import given, settings, st
 
 from repro.kernels.ssd_scan.ref import ssd_scan_ref
 from repro.models.mamba2 import (init_mamba2, init_mamba2_state,
@@ -86,6 +87,87 @@ def test_prefill_state_continues_decode(rng):
     for t in range(15, 20):
         y, conv, ssd = mamba2_decode(cfg, p, x[:, t:t + 1], conv, ssd)
     np.testing.assert_allclose(y[:, 0], full[:, -1], atol=5e-4)
+
+
+# ------------------------------------------------------------ masked dt
+# Zeroing dt makes a position's state transition an exact identity
+# (decay exp(0·a) = 1, update dt·B·x = 0) — the property that lets
+# right-padded chunk rows ride the serving mixed step without polluting
+# the recurrence (see docs/serving.md, "Masked-dt SSM chunking").
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 16), st.sampled_from([4, 8, 16]))
+def test_masked_scan_matches_unpadded_prefix(vl, chunk):
+    """ssd_chunked over a right-padded sequence with a validity mask must
+    reproduce the unpadded scan: same valid-position outputs, same final
+    state — for every ragged length / chunking combination."""
+    rng = np.random.default_rng(vl * 31 + chunk)
+    x, dt, a, b, c = _inputs(rng, b=2, s=16)
+    valid = jnp.arange(16)[None, :] < vl
+    y_m, st_m = ssd_chunked(x, dt, a, b, c, chunk=chunk, valid=valid)
+    y_u, st_u = ssd_chunked(x[:, :vl], dt[:, :vl], a, b[:, :vl], c[:, :vl],
+                            chunk=chunk)
+    np.testing.assert_allclose(st_m, st_u, atol=2e-4)
+    np.testing.assert_allclose(y_m[:, :vl], y_u, atol=2e-4)
+
+
+def test_masked_scan_all_invalid_is_bit_exact_identity(rng):
+    """dt == 0 everywhere: the carried state must pass through bit-exactly
+    (state·exp(0) + 0·B·x), not merely within tolerance."""
+    x, dt, a, b, c = _inputs(rng, b=2, s=8)
+    init = jnp.asarray(rng.normal(size=(2, 4, 16, 8)), jnp.float32)
+    _, st_out = ssd_chunked(x, dt, a, b, c, chunk=8, initial_state=init,
+                            valid=jnp.zeros((2, 8), bool))
+    np.testing.assert_array_equal(np.asarray(st_out), np.asarray(init))
+
+
+def test_masked_decode_step_freezes_state(rng):
+    """ssd_decode_step with valid=[True, False]: the invalid row's state is
+    bit-identical; the valid row matches the unmasked step."""
+    x, dt, a, b, c = _inputs(rng, b=2, s=1)
+    state = jnp.asarray(rng.normal(size=(2, 4, 16, 8)), jnp.float32)
+    y_u, st_u = ssd_decode_step(state, x[:, 0], dt[:, 0], a, b[:, 0], c[:, 0])
+    _, st_m = ssd_decode_step(state, x[:, 0], dt[:, 0], a, b[:, 0], c[:, 0],
+                              valid=jnp.asarray([True, False]))
+    np.testing.assert_array_equal(np.asarray(st_m[1]), np.asarray(state[1]))
+    np.testing.assert_array_equal(np.asarray(st_m[0]), np.asarray(st_u[0]))
+
+
+def test_mamba2_decode_valid_freezes_conv_and_ssd(rng):
+    """Full mixer one-token decode: invalid rows keep BOTH the conv tail
+    and the SSD state bit-exact (inert rows in the serving mixed step)."""
+    cfg = _ssm_cfg()
+    p = init_mamba2(jax.random.PRNGKey(0), cfg)
+    conv, ssd = init_mamba2_state(cfg, 2)
+    conv = conv + jnp.asarray(rng.normal(size=conv.shape), jnp.float32)
+    ssd = ssd + jnp.asarray(rng.normal(size=ssd.shape), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(2, 1, cfg.d_model)), jnp.float32)
+    _, c_u, s_u = mamba2_decode(cfg, p, x, conv, ssd)
+    _, c_m, s_m = mamba2_decode(cfg, p, x, conv, ssd,
+                                valid=jnp.asarray([False, True]))
+    np.testing.assert_array_equal(np.asarray(c_m[0]), np.asarray(conv[0]))
+    np.testing.assert_array_equal(np.asarray(s_m[0]), np.asarray(ssd[0]))
+    np.testing.assert_array_equal(np.asarray(c_m[1]), np.asarray(c_u[1]))
+    np.testing.assert_array_equal(np.asarray(s_m[1]), np.asarray(s_u[1]))
+
+
+def test_mamba2_forward_valid_len_matches_unpadded(rng):
+    """Full mixer over a right-padded chunk: valid_len masking reproduces
+    the unpadded forward's outputs AND both carried states (the conv tail
+    must come from the valid stream, not the padding)."""
+    cfg = _ssm_cfg()
+    p = init_mamba2(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(rng.normal(size=(1, 12, cfg.d_model)), jnp.float32)
+    for vl in (1, 2, 7, 9, 12):
+        y_m, (c_m, s_m) = mamba2_forward(cfg, p, x, valid_len=vl)
+        y_u, (c_u, s_u) = mamba2_forward(cfg, p, x[:, :vl])
+        np.testing.assert_allclose(np.asarray(c_m), np.asarray(c_u),
+                                   atol=1e-5)
+        np.testing.assert_allclose(np.asarray(s_m), np.asarray(s_u),
+                                   atol=5e-4)
+        np.testing.assert_allclose(np.asarray(y_m[:, :vl]), np.asarray(y_u),
+                                   atol=5e-4)
 
 
 def test_groups_broadcast(rng):

@@ -108,6 +108,55 @@ def test_branch_at_block_table_capacity_is_evicted_not_crashed():
     dict(arch_type="ssm", d_ff=0, ssm_state=16, ssm_head_dim=32, ssm_chunk=8),
     dict(arch_type="hybrid", ssm_state=16, ssm_head_dim=32, ssm_chunk=8),
 ])
+def test_ssm_requests_admit_async_through_scheduler(family_kw):
+    """Uniform admission (Algorithm 1, all families): ssm/hybrid requests
+    go through the asynchronous chunked path — parked on ``prefilling``,
+    chunks riding decode steps — and complete without leaks, with the
+    bucketed compile bound holding end-to-end."""
+    from repro.data import tasks
+
+    cfg = tiny_config(vocab_size=tk.VOCAB_SIZE, **family_kw)
+    model = Model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    eng = Engine(model, params, EngineConfig(
+        page_size=8, num_pages=256, max_slots=4, max_pages_per_branch=16,
+        eos_id=tk.EOS, sampling=SamplingParams(temperature=1.0), seed=1,
+        prefill_chunk=8))
+    prm = OraclePRM(tasks.oracle_grader, noise=0.05, seed=2)
+    sch = Scheduler(eng, prm, SchedulerConfig(policy="sart", n=2, m=1,
+                                              window=8, max_tokens=24),
+                    answer_fn=extract_answer)
+    rng = np.random.default_rng(3)
+    for i in range(3):
+        p = tasks.gen_problem(rng)
+        sch.submit(p.prompt_tokens(), payload=p, arrival=i * 2)
+
+    saw_async = []
+    orig = sch._admit
+
+    def spy(req):
+        orig(req)
+        # sync admission harvests inline and clears prefill_state
+        saw_async.append(req.prefill_state is not None
+                         and not req.prefill_state.done)
+    sch._admit = spy
+
+    m = sch.run(max_steps=10000)
+    assert len(m["requests"]) == 3
+    assert saw_async and all(saw_async), \
+        "ssm admission fell back to the synchronous path"
+    assert all(r["ttfb"] is not None and r["ttfb"] >= 0
+               for r in m["requests"])
+    assert eng.prefill_compile_count <= 2
+    assert len(eng._prefill_cache) == 0          # exact path never used
+    assert eng.allocator.used_pages == 0
+    assert all(s is None for s in eng.slots)
+
+
+@pytest.mark.parametrize("family_kw", [
+    dict(arch_type="ssm", d_ff=0, ssm_state=16, ssm_head_dim=32, ssm_chunk=8),
+    dict(arch_type="hybrid", ssm_state=16, ssm_head_dim=32, ssm_chunk=8),
+])
 def test_suspend_resume_roundtrips_ssm_state_bit_exactly(family_kw):
     """suspend_branch snapshots conv/ssd to host; resume_branch must restore
     the slot rows bit-for-bit even after another branch dirtied them."""
