@@ -70,6 +70,53 @@ def bench_ssd(quick=False):
     return rows
 
 
+def bench_mixed_step(quick=False):
+    """Chunk-row attention inside the mixed decode+prefill step: the
+    per-token flash-decode path (every chunk row streams the whole context)
+    vs the fused paged flash-prefill kernel (each q block streams it once).
+    The bytes column is the analytic K+V HBM read — the memory-bound
+    quantity that gates time-to-first-branch on the TPU target; wall-clock
+    here times the jnp reference of each path (what the CPU engine runs),
+    as an interpret-normalized op-count proxy."""
+    from repro.kernels.flash_prefill.ops import (mixed_step_bytes_read,
+                                                 paged_flash_prefill)
+    from repro.kernels.paged_attention.ops import paged_attention
+    rng = np.random.default_rng(0)
+    shapes = [(64, 256, 4, 2, 64, 16)] if quick else [
+        (256, 2048, 8, 8, 64, 16),
+        (256, 4096, 8, 2, 64, 16),
+    ]  # (chunk T, context pos0, q_heads, kv_heads, head_dim, page_size)
+    rows = []
+    for (t, pos0, qh, kvh, hd, ps) in shapes:
+        need = -(-(pos0 + t) // ps)
+        npages = need + 1
+        pps = need + 2
+        q = jnp.asarray(rng.normal(size=(t, qh, hd)), jnp.float32)
+        kp = jnp.asarray(rng.normal(size=(kvh, npages, ps, hd)), jnp.float32)
+        vp = jnp.asarray(rng.normal(size=(kvh, npages, ps, hd)), jnp.float32)
+        bt = np.full((pps,), npages, np.int32)
+        bt[:need] = rng.permutation(npages)[:need]
+        bt = jnp.asarray(bt)
+        iters = 3 if quick else 10
+
+        fused = jax.jit(lambda q, kp, vp, bt: paged_flash_prefill(
+            q, kp, vp, bt, jnp.int32(pos0), jnp.int32(t), use_kernel=False))
+        us_f = _time(fused, q, kp, vp, bt, iters=iters)
+        by_f = mixed_step_bytes_read(t, pos0, ps, kvh, hd, path="fused")
+        rows.append((f"mixed_step_fused_c{t}_ctx{pos0}_kv{kvh}", us_f,
+                     f"kv_bytes={by_f}"))
+
+        bt_rows = jnp.broadcast_to(bt, (t, pps))
+        lens = pos0 + jnp.arange(t) + 1
+        decode = jax.jit(lambda q, kp, vp, bt, ln: paged_attention(
+            q, kp, vp, bt, ln, use_kernel=False))
+        us_d = _time(decode, q, kp, vp, bt_rows, lens, iters=iters)
+        by_d = mixed_step_bytes_read(t, pos0, ps, kvh, hd, path="decode")
+        rows.append((f"mixed_step_decode_c{t}_ctx{pos0}_kv{kvh}", us_d,
+                     f"kv_bytes={by_d} ({by_d / by_f:.1f}x fused)"))
+    return rows
+
+
 def bench_engine_decode_step(quick=False):
     """Whole-engine decode step (model fwd + paged attention + sampling)."""
     from repro.data import tokenizer as tk
@@ -145,6 +192,7 @@ def bench_chunked_prefill(quick=False):
 
 def main(quick: bool = False):
     for rows in (bench_paged_attention(quick), bench_ssd(quick),
+                 bench_mixed_step(quick),
                  bench_engine_decode_step(quick),
                  bench_chunked_prefill(quick)):
         for name, us, derived in rows:

@@ -5,9 +5,13 @@
 #   ssd_scan        — Mamba2 chunked SSD scan for the ssm/hybrid assigned
 #                     architectures.
 #   flash_prefill   — causal flash-attention forward for the prefill phase
-#                     (prefill latency gates queuing delay in Algorithm 1).
-from .flash_prefill.ops import flash_attention
+#                     (prefill latency gates queuing delay in Algorithm 1),
+#                     plus the fused paged variant that block-processes a
+#                     prefill chunk's rows against paged KV in the mixed
+#                     decode+prefill step.
+from .flash_prefill.ops import flash_attention, paged_flash_prefill
 from .paged_attention.ops import paged_attention
 from .ssd_scan.ops import ssd
 
-__all__ = ["flash_attention", "paged_attention", "ssd"]
+__all__ = ["flash_attention", "paged_attention", "paged_flash_prefill",
+           "ssd"]

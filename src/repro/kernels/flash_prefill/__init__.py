@@ -1,3 +1,3 @@
-from .ops import flash_attention
+from .ops import flash_attention, mixed_step_bytes_read, paged_flash_prefill
 
-__all__ = ["flash_attention"]
+__all__ = ["flash_attention", "mixed_step_bytes_read", "paged_flash_prefill"]

@@ -10,10 +10,15 @@ attention without materializing [Sq, Sk] scores:
   causal block skipping via pl.when (a kv block strictly above the diagonal
   contributes nothing and is not computed).
 
-KV is expected head-repeated to q_heads (GQA groups expanded), matching the
-jnp chunked path in `repro.models.attention`. MXU alignment: block sizes
-default to 256/512 with head_dim padded to 128 multiples in production
-configs. Validated against ref.py in interpret mode.
+KV is GQA-native: ``[B, S, Hkv, hd]`` with ``Hkv`` dividing the query head
+count — the BlockSpec index map picks the head group (``hi // group``), so
+callers never pre-repeat KV heads (which would double KV HBM traffic).
+Sequences that don't divide the block sizes are padded internally; padded
+query rows carry an explicit validity mask and emit exact zeros, and padded
+key columns are masked out of every softmax (a fully-masked row would
+otherwise normalize garbage — exp(-inf - -inf) = 1 — into its output).
+MXU alignment: block sizes default to 256/512 with head_dim padded to 128
+multiples in production configs. Validated against ref.py in interpret mode.
 """
 from __future__ import annotations
 
@@ -27,8 +32,13 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
+def _round_up(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
 def _flash_kernel(q_ref, k_ref, v_ref, out_ref, m_ref, l_ref, acc_ref, *,
-                  bq: int, bk: int, scale: float, causal: bool):
+                  bq: int, bk: int, scale: float, causal: bool,
+                  s_q: int, s_k: int):
     qi = pl.program_id(2)
     ki = pl.program_id(3)
     nk = pl.num_programs(3)
@@ -41,8 +51,12 @@ def _flash_kernel(q_ref, k_ref, v_ref, out_ref, m_ref, l_ref, acc_ref, *,
 
     q_start = qi * bq
     k_start = ki * bk
-    # causal: skip kv blocks strictly above the diagonal
-    live = (not causal) or (k_start <= q_start + bq - 1)
+    # skip kv blocks with no visible keys: strictly above the causal
+    # diagonal, or entirely inside the kv padding; whole-pad q blocks are
+    # skipped too (their rows are zeroed in _finalize regardless)
+    live = (k_start < s_k) & (q_start < s_q)
+    if causal:
+        live &= k_start <= q_start + bq - 1
 
     @pl.when(live)
     def _compute():
@@ -50,10 +64,12 @@ def _flash_kernel(q_ref, k_ref, v_ref, out_ref, m_ref, l_ref, acc_ref, *,
         k = k_ref[0, :, 0, :].astype(jnp.float32)           # [bk, hd]
         v = v_ref[0, :, 0, :].astype(jnp.float32)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [bq, bk]
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kpos < s_k
         if causal:
             qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
-            kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-            s = jnp.where(kpos <= qpos, s, NEG_INF)
+            mask &= kpos <= qpos
+        s = jnp.where(mask, s, NEG_INF)
         m_prev = m_ref[...]
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
         p = jnp.exp(s - m_new)
@@ -66,31 +82,58 @@ def _flash_kernel(q_ref, k_ref, v_ref, out_ref, m_ref, l_ref, acc_ref, *,
     @pl.when(ki == nk - 1)
     def _finalize():
         denom = jnp.maximum(l_ref[...], 1e-30)
-        out_ref[0, :, 0, :] = (acc_ref[...] / denom).astype(out_ref.dtype)
+        # row validity: pad rows (>= s_q) hold either attention over garbage
+        # query values or — when fully masked — the exp(-inf - -inf) = 1
+        # mis-normalized residue; emit exact zeros for them instead
+        rows = q_start + jax.lax.broadcasted_iota(
+            jnp.int32, (bq, 1), 0)
+        out = jnp.where(rows < s_q, acc_ref[...] / denom, 0.0)
+        out_ref[0, :, 0, :] = out.astype(out_ref.dtype)
 
 
 def flash_prefill(q: jax.Array, k: jax.Array, v: jax.Array, *,
                   causal: bool = True, block_q: int = 256,
-                  block_k: int = 256, interpret: bool = False) -> jax.Array:
-    """q, k, v: [B, S, H, hd] (KV already head-repeated). Returns [B,S,H,hd].
+                  block_k: int = 256, interpret: bool = False,
+                  true_len: int | None = None) -> jax.Array:
+    """q: [B, S, H, hd]; k, v: [B, S, Hkv, hd] with Hkv | H (GQA-native,
+    no pre-repeat). Returns [B, S, H, hd].
 
-    S must divide by the block sizes (callers pad; production shapes are
-    powers of two)."""
+    S need not divide the block sizes — inputs are padded internally and
+    the pad region is masked (keys) / zeroed (query rows). ``true_len``
+    optionally marks a caller-padded sequence: rows at positions >=
+    ``true_len`` return exact zeros and keys there are never attended."""
     b, s, h, hd = q.shape
-    bq = min(block_q, s)
-    bk = min(block_k, s)
-    assert s % bq == 0 and s % bk == 0, (s, bq, bk)
+    kb, sk, hkv, khd = k.shape
+    assert (kb, sk, khd) == (b, s, hd), (q.shape, k.shape)
+    assert k.shape == v.shape, (k.shape, v.shape)
+    assert h % hkv == 0, (h, hkv)
+    group = h // hkv
+    s_true = s if true_len is None else true_len
+    assert 0 < s_true <= s, (s_true, s)
+
+    bq = min(block_q, _round_up(s, 8))
+    bk = min(block_k, _round_up(s, 8))
+    sq_p = _round_up(s, bq)
+    sk_p = _round_up(s, bk)
+    pad_q = sq_p - s
+    pad_k = sk_p - s
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
     scale = 1.0 / (hd ** 0.5)
-    grid = (b, h, s // bq, s // bk)
+    grid = (b, h, sq_p // bq, sk_p // bk)
 
     q_spec = pl.BlockSpec((1, bq, 1, hd), lambda bi, hi, qi, ki: (bi, qi, hi, 0))
-    k_spec = pl.BlockSpec((1, bk, 1, hd), lambda bi, hi, qi, ki: (bi, ki, hi, 0))
+    kv_spec = pl.BlockSpec((1, bk, 1, hd),
+                           lambda bi, hi, qi, ki: (bi, ki, hi // group, 0))
 
     kernel = pl.pallas_call(
         functools.partial(_flash_kernel, bq=bq, bk=bk, scale=scale,
-                          causal=causal),
+                          causal=causal, s_q=s_true, s_k=s_true),
         grid=grid,
-        in_specs=[q_spec, k_spec, k_spec],
+        in_specs=[q_spec, kv_spec, kv_spec],
         out_specs=q_spec,
         out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
         scratch_shapes=[
@@ -100,4 +143,5 @@ def flash_prefill(q: jax.Array, k: jax.Array, v: jax.Array, *,
         ],
         interpret=interpret,
     )
-    return kernel(q, k, v)
+    out = kernel(q, k, v)
+    return out[:, :s]

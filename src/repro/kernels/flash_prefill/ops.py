@@ -1,13 +1,21 @@
-"""Jit'd public wrapper for the flash prefill kernel."""
+"""Jit'd public wrappers for the flash prefill kernels (dense and paged).
+
+On CPU (this container) the Pallas kernel bodies execute via
+``interpret=True`` (or the pure-jnp refs with ``use_kernel=False``, which is
+what the live engine runs); on TPU the same ``pallas_call``s compile to
+Mosaic.
+"""
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
 
 from .flash_prefill import flash_prefill
-from .ref import flash_prefill_ref
+from .paged_prefill import paged_flash_prefill_fwd
+from .ref import flash_prefill_ref, paged_flash_prefill_ref
 
 
 def _on_tpu() -> bool:
@@ -18,19 +26,61 @@ def _on_tpu() -> bool:
                                              "use_kernel"))
 def flash_attention(q, k, v, causal: bool = True, block_q: int = 256,
                     block_k: int = 256, use_kernel: bool = True):
-    """Flash prefill attention; pads S to the block size."""
+    """Flash prefill attention. q: [B,S,H,hd]; k, v: [B,S,Hkv,hd] with
+    Hkv | H (GQA heads are indexed inside the kernel — never pre-repeat).
+    Non-divisible S is padded inside the kernel wrapper for causal and
+    non-causal alike."""
     if not use_kernel:
         return flash_prefill_ref(q, k, v, causal=causal)
-    s = q.shape[1]
-    bq = min(block_q, max(s, 8))
-    bk = min(block_k, max(s, 8))
-    pad = max((-s) % bq, (-s) % bk)
+    return flash_prefill(q, k, v, causal=causal, block_q=block_q,
+                         block_k=block_k, interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "use_kernel"))
+def paged_flash_prefill(q, k_pages, v_pages, block_table, pos0, valid_len,
+                        block_q: int = 128, use_kernel: bool = True):
+    """Fused mixed-step chunk attention: one flash pass of the chunk's query
+    rows [T, H, hd] over a request's paged KV (see ``paged_prefill``).
+
+    ``pos0`` is the absolute position of chunk row 0, ``valid_len`` the
+    number of non-pad rows (rows past it return exact zeros). T is padded
+    to the q-block size internally.
+    """
+    if not use_kernel:
+        return paged_flash_prefill_ref(q, k_pages, v_pages, block_table,
+                                       pos0, valid_len)
+    t = q.shape[0]
+    bq = min(block_q, t)
+    pad = (-t) % bq
     if pad:
-        # causal masking keeps real queries away from padded keys; padded
-        # query rows are sliced off below (padding is causal-only)
-        assert causal, "seq padding requires causal masking"
-        zp = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        q, k, v = zp(q), zp(k), zp(v)
-    out = flash_prefill(q, k, v, causal=causal, block_q=bq, block_k=bk,
-                        interpret=not _on_tpu())
-    return out[:, :s]
+        # appended rows sit past valid_len, so the kernel zeroes them
+        q = jnp.pad(q, ((0, pad), (0, 0), (0, 0)))
+    out = paged_flash_prefill_fwd(q, k_pages, v_pages, block_table, pos0,
+                                  valid_len, block_q=bq,
+                                  interpret=not _on_tpu())
+    return out[:t]
+
+
+def mixed_step_bytes_read(chunk: int, pos0: int, page_size: int,
+                          kv_heads: int, head_dim: int, *, path: str,
+                          block_q: int = 128, itemsize: int = 4) -> int:
+    """Analytic K+V HBM bytes the chunk-row attention of one mixed step
+    reads (the memory-bound quantity on the TPU decode roofline).
+
+    ``path="decode"`` is the per-token flash-decode loop: every chunk row
+    streams its whole visible context. ``path="fused"`` is the paged
+    flash-prefill kernel: each q block streams the context once, and pages
+    past a block's causal horizon are never fetched (the index map parks
+    them on a resident page).
+    """
+    if path == "decode":
+        pages = sum(math.ceil((pos0 + i + 1) / page_size)
+                    for i in range(chunk))
+    elif path == "fused":
+        bq = min(block_q, chunk)
+        pages = sum(
+            math.ceil((pos0 + min((qi + 1) * bq, chunk)) / page_size)
+            for qi in range(math.ceil(chunk / bq)))
+    else:
+        raise ValueError(f"unknown mixed-step path {path!r}")
+    return 2 * pages * page_size * kv_heads * head_dim * itemsize

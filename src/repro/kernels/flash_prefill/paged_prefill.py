@@ -1,0 +1,185 @@
+"""Pallas TPU fused paged flash-prefill for the mixed decode+prefill step.
+
+The serving engine admits prompts chunk-by-chunk as extra rows of the decode
+step (docs/serving.md). Before this kernel, each chunk row re-used the
+per-token flash-decode path: every row streamed the request's *entire* paged
+context from HBM, an O(chunk · context) read that gates time-to-first-branch
+— the quantity SART's redundant sampling with early stopping (Algorithm 1)
+needs small to keep the branch queue fed.
+
+This kernel block-processes the whole chunk against the paged KV in one
+flash pass:
+
+  * grid = (kv_heads, q_blocks, kv_pages) — the page axis is minor and
+    sequential; VMEM scratch (m, l, acc) carries the online softmax across
+    page blocks, so each q block streams the context once instead of once
+    per row.
+  * The request's block table and a (pos0, valid_len) descriptor are
+    scalar-prefetched (``PrefetchScalarGridSpec``); the K/V index map chases
+    the table exactly like the flash-decode kernel, and clamps dead
+    iterations (pages past the q block's causal horizon, sentinel table
+    entries) onto an already-fetched page so the pipeline re-uses the
+    buffer instead of DMA'ing pages that contribute nothing.
+  * Causal masking is against true absolute positions: chunk row i sits at
+    position pos0 + i and sees keys at positions <= pos0 + i — the prefix
+    plus the causally-visible part of the chunk itself (whose K/V the mixed
+    step scatters before attention runs).
+  * Rows at i >= valid_len are bucket padding: a validity mask keeps them
+    out of every softmax claim and the epilogue writes exact zeros for
+    them (never the exp(-inf - -inf) = 1 mis-normalized residue).
+
+The GQA group rides the sublane dimension next to the q rows ([bq, group,
+hd] blocks flattened to [bq·group, hd] for the MXU), mirroring the decode
+kernel's layout. Validated in ``interpret=True`` mode on CPU against
+``ref.paged_flash_prefill_ref``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_prefill_kernel(
+    # scalar-prefetch refs
+    block_table_ref,     # [pages_per_seq] int32 (sentinel entries >= npages)
+    info_ref,            # [2] int32: (pos0, valid_len)
+    # inputs
+    q_ref,               # [1, bq, group, head_dim]
+    k_ref,               # [1, 1, page_size, head_dim]
+    v_ref,               # [1, 1, page_size, head_dim]
+    # outputs
+    out_ref,             # [1, bq, group, head_dim]
+    # scratch
+    m_ref,               # [bq * group, 1] f32
+    l_ref,               # [bq * group, 1] f32
+    acc_ref,             # [bq * group, head_dim] f32
+    *,
+    bq: int,
+    group: int,
+    page_size: int,
+    scale: float,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+    pos0 = info_ref[0]
+    valid_len = info_ref[1]
+    q_start = qi * bq
+    k_start = ki * page_size
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # last key position any valid row of this q block can see; pages past it
+    # (and whole-pad q blocks) are skipped — the index map already parked
+    # their DMA on a live page
+    max_qpos = pos0 + jnp.minimum(q_start + bq, valid_len) - 1
+    live = (q_start < valid_len) & (k_start <= max_qpos)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32).reshape(bq * group, -1) * scale
+        k = k_ref[0, 0].astype(jnp.float32)                 # [P, hd]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [bq*G, P]
+        row = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // group
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        # causal against absolute positions + bucket-pad row validity
+        mask = (kpos <= pos0 + q_start + row) & (q_start + row < valid_len)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        row = jax.lax.broadcasted_iota(
+            jnp.int32, (bq * group, 1), 0) // group
+        out = jnp.where(q_start + row < valid_len,
+                        acc_ref[...] / denom, 0.0)
+        out_ref[0] = out.reshape(bq, group, -1).astype(out_ref.dtype)
+
+
+def paged_flash_prefill_fwd(
+    q: jax.Array,             # [T, q_heads, head_dim] — chunk query rows
+    k_pages: jax.Array,       # [kv_heads, num_pages, page_size, head_dim]
+    v_pages: jax.Array,       # [kv_heads, num_pages, page_size, head_dim]
+    block_table: jax.Array,   # [pages_per_seq] int32 (shared by all rows)
+    pos0: jax.Array,          # scalar int32: absolute position of row 0
+    valid_len: jax.Array,     # scalar int32: rows >= valid_len are padding
+    *,
+    block_q: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Flash-prefill the chunk rows against one request's paged KV.
+
+    Row i attends keys at absolute positions 0..pos0+i (its own token
+    included — the mixed step writes the chunk's K/V before attention).
+    ``block_table`` must cover positions 0..pos0+valid_len-1; entries past
+    that may be the engine's OOB sentinel (they are clamped and their
+    positions fall outside every row's causal horizon). Rows >= valid_len
+    return exact zeros. T must divide block_q (``ops.paged_flash_prefill``
+    pads). Returns [T, q_heads, head_dim].
+    """
+    t, q_heads, head_dim = q.shape
+    kv_heads, num_pages, page_size, _ = k_pages.shape
+    assert q_heads % kv_heads == 0, (q_heads, kv_heads)
+    group = q_heads // kv_heads
+    bq = min(block_q, t)
+    assert t % bq == 0, (t, bq)
+    pages_per_seq = block_table.shape[0]
+    scale = 1.0 / (head_dim ** 0.5)
+
+    q_spec = pl.BlockSpec(
+        (1, bq, group, head_dim), lambda h, qi, ki, bt, info: (h, qi, 0, 0))
+
+    def kv_index(h, qi, ki, bt, info):
+        # park iterations past the q block's causal horizon on its last
+        # live page, and clamp sentinel entries into range — both read
+        # already-resident pages, so skipped grid steps move no bytes
+        max_kpos = info[0] + jnp.minimum((qi + 1) * bq, info[1]) - 1
+        ki_live = jnp.minimum(ki, jnp.maximum(max_kpos, 0) // page_size)
+        return (h, jnp.minimum(bt[ki_live], num_pages - 1), 0, 0)
+
+    kv_spec = pl.BlockSpec((1, 1, page_size, head_dim), kv_index)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(kv_heads, t // bq, pages_per_seq),
+        in_specs=[q_spec, kv_spec, kv_spec],
+        out_specs=q_spec,
+        scratch_shapes=[
+            pltpu.VMEM((bq * group, 1), jnp.float32),
+            pltpu.VMEM((bq * group, 1), jnp.float32),
+            pltpu.VMEM((bq * group, head_dim), jnp.float32),
+        ],
+    )
+
+    kernel = pl.pallas_call(
+        functools.partial(_paged_prefill_kernel, bq=bq, group=group,
+                          page_size=page_size, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(
+            (kv_heads, t, group, head_dim), q.dtype),
+        interpret=interpret,
+    )
+    info = jnp.stack([jnp.asarray(pos0, jnp.int32),
+                      jnp.asarray(valid_len, jnp.int32)])
+    q4 = q.reshape(t, kv_heads, group, head_dim).transpose(1, 0, 2, 3)
+    out = kernel(block_table.astype(jnp.int32), info, q4, k_pages, v_pages)
+    return out.transpose(1, 0, 2, 3).reshape(t, q_heads, head_dim)

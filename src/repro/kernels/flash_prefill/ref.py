@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for the flash prefill kernel."""
+"""Pure-jnp oracles for the flash prefill kernels (dense and paged)."""
 from __future__ import annotations
 
 import jax
@@ -8,9 +8,15 @@ NEG_INF = -1e30
 
 
 def flash_prefill_ref(q, k, v, causal: bool = True):
-    """q, k, v: [B, S, H, hd] -> [B, S, H, hd] (full softmax attention)."""
+    """q: [B, S, H, hd]; k, v: [B, S, Hkv, hd] with Hkv | H (GQA-native).
+    Returns [B, S, H, hd] (full softmax attention)."""
     hd = q.shape[-1]
     s = q.shape[1]
+    h, hkv = q.shape[2], k.shape[2]
+    assert h % hkv == 0, (h, hkv)
+    if hkv != h:
+        k = jnp.repeat(k, h // hkv, axis=2)
+        v = jnp.repeat(v, h // hkv, axis=2)
     scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
                         k.astype(jnp.float32)) / jnp.sqrt(
         jnp.asarray(hd, jnp.float32))
@@ -20,3 +26,37 @@ def flash_prefill_ref(q, k, v, causal: bool = True):
     w = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bhqk,bkhd->bqhd", w, v.astype(jnp.float32))
     return out.astype(q.dtype)
+
+
+def paged_flash_prefill_ref(q, k_pages, v_pages, block_table, pos0,
+                            valid_len):
+    """Oracle for ``paged_prefill.paged_flash_prefill_fwd`` (same shapes).
+
+    Gathers the request's pages into one contiguous [S, kv, hd] context and
+    runs masked softmax attention for every chunk row: row i (at absolute
+    position pos0 + i) sees keys at positions <= pos0 + i; rows >= valid_len
+    are bucket padding and return exact zeros. Sentinel block-table entries
+    are clamped — their positions lie beyond every valid row's causal
+    horizon, so the garbage they gather is always masked. O(T·S) memory,
+    correctness-only.
+    """
+    t, q_heads, head_dim = q.shape
+    kv_heads, num_pages, page_size, _ = k_pages.shape
+    group = q_heads // kv_heads
+    s_max = block_table.shape[0] * page_size
+
+    bt = jnp.clip(block_table, 0, num_pages - 1)
+    k = k_pages[:, bt].reshape(kv_heads, s_max, head_dim)
+    v = v_pages[:, bt].reshape(kv_heads, s_max, head_dim)
+
+    qg = q.reshape(t, kv_heads, group, head_dim).astype(jnp.float32)
+    scores = jnp.einsum("tkgd,ksd->tkgs", qg, k.astype(jnp.float32))
+    scores = scores / jnp.sqrt(jnp.asarray(head_dim, jnp.float32))
+    qpos = pos0 + jnp.arange(t)
+    mask = jnp.arange(s_max)[None, :] <= qpos[:, None]       # [T, S]
+    scores = jnp.where(mask[:, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("tkgs,ksd->tkgd", w, v.astype(jnp.float32))
+    out = jnp.where((jnp.arange(t) < valid_len)[:, None, None, None],
+                    out, 0.0)
+    return out.reshape(t, q_heads, head_dim).astype(q.dtype)

@@ -106,11 +106,18 @@ def paged_attention_decode(
     pages_per_seq = block_tables.shape[1]
     scale = 1.0 / (head_dim ** 0.5)
 
+    num_pages = k_pages.shape[1]
+
     q_block = pl.BlockSpec(
         (1, group, head_dim), lambda b, h, i, bt, ln: (b, h, 0))
+    # sentinel block-table entries (the engine pads tables with num_pages)
+    # are clamped into range: their pages sit past `lengths`, so the length
+    # mask discards whatever the clamped fetch returns — without the clamp
+    # the index map would address HBM out of bounds on TPU
     kv_block = pl.BlockSpec(
         (1, 1, page_size, head_dim),
-        lambda b, h, i, bt, ln: (h, bt[b, i], 0, 0))
+        lambda b, h, i, bt, ln: (h, jnp.minimum(bt[b, i], num_pages - 1),
+                                 0, 0))
     out_block = pl.BlockSpec(
         (1, group, head_dim), lambda b, h, i, bt, ln: (b, h, 0))
 

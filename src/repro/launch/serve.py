@@ -71,7 +71,7 @@ def load_reasoner(ckpt_dir: Optional[str], arch: str = "dense"):
 def serve(policy: str, n: int, num_requests: int, rate_gap: int,
           ckpt: Optional[str], prm_kind: str, window: int, max_tokens: int,
           max_slots: int, seed: int, temperature: float,
-          arch: str = "dense") -> dict:
+          arch: str = "dense", mixed_step_kernel: str = "fused") -> dict:
     import numpy as np
 
     from ..core import OraclePRM, RewardHeadPRM, Scheduler, SchedulerConfig
@@ -85,7 +85,8 @@ def serve(policy: str, n: int, num_requests: int, rate_gap: int,
         page_size=16, num_pages=4096, max_slots=max_slots,
         max_pages_per_branch=32, eos_id=tk.EOS,
         sampling=SamplingParams(temperature=temperature, top_p=0.95),
-        seed=seed), prm_params=prm_head)
+        seed=seed, mixed_step_kernel=mixed_step_kernel),
+        prm_params=prm_head)
     if prm_kind == "head" and prm_head is not None:
         prm = RewardHeadPRM(engine)
     else:
@@ -117,6 +118,7 @@ def serve(policy: str, n: int, num_requests: int, rate_gap: int,
         "clock": metrics["clock"],
         # O(buckets) for every family since the masked-dt chunk lane
         "prefill_compile_count": engine.prefill_compile_count,
+        "mixed_step_kernel": mixed_step_kernel,
     }
     return out
 
@@ -135,6 +137,11 @@ def main():
                     choices=sorted(_FALLBACK_FAMILIES),
                     help="untrained-fallback trunk family (ssm/hybrid "
                          "exercise the masked-dt chunked admission path)")
+    ap.add_argument("--mixed-step-kernel", default="fused",
+                    choices=["fused", "decode"],
+                    help="chunk-row attention path of the mixed step: one "
+                         "fused paged flash-prefill pass vs the per-token "
+                         "flash-decode fallback")
     ap.add_argument("--prm", default="oracle", choices=["oracle", "head"])
     ap.add_argument("--window", type=int, default=8)
     ap.add_argument("--max-tokens", type=int, default=96)
@@ -144,7 +151,8 @@ def main():
     args = ap.parse_args()
     out = serve(args.policy, args.n, args.requests, args.rate_gap,
                 args.ckpt, args.prm, args.window, args.max_tokens,
-                args.slots, args.seed, args.temperature, args.arch)
+                args.slots, args.seed, args.temperature, args.arch,
+                args.mixed_step_kernel)
     print(json.dumps(out, indent=2))
 
 

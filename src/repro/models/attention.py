@@ -70,7 +70,7 @@ def _rotate(cfg: ModelConfig, q, k, positions):
 def _attend(cfg: ModelConfig, q, k, v, mask):
     """q: [B,Sq,H,hd]; k,v: [B,Sk,KV,hd]; mask: [B,1,Sq,Sk] bool (True=keep)."""
     hd = q.shape[-1]
-    groups = cfg.num_heads // cfg.num_kv_heads
+    groups = cfg.gqa_groups
     b, sq, h, _ = q.shape
     sk = k.shape[1]
     q = q.reshape(b, sq, cfg.num_kv_heads, groups, hd)
@@ -95,7 +95,7 @@ def _attend_chunked(cfg: ModelConfig, q, k, v):
     saving [S,S,H] tensors.
     """
     b, s, h, hd = q.shape
-    groups = cfg.num_heads // cfg.num_kv_heads
+    groups = cfg.gqa_groups
     k = jnp.repeat(k, groups, axis=2)
     v = jnp.repeat(v, groups, axis=2)
     q = constrain(q, "bshd")

@@ -90,6 +90,12 @@ class ModelConfig:
         return self.head_dim or (self.d_model // self.num_heads)
 
     @property
+    def gqa_groups(self) -> int:
+        """Query heads per KV head — the GQA group size the attention
+        kernels tile along the sublane dimension."""
+        return self.num_heads // max(self.num_kv_heads, 1)
+
+    @property
     def uses_attention(self) -> bool:
         return self.arch_type != "ssm"
 

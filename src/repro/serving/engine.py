@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..kernels.flash_prefill.ops import paged_flash_prefill
 from ..kernels.paged_attention.ops import paged_attention
 from ..kv import BranchBlocks, OutOfPagesError, PageAllocator
 from ..models.attention import _project_qkv, _rotate
@@ -61,6 +62,12 @@ class EngineConfig:
     chunked_prefill: bool = True
     prefill_chunk: int = 64
     prefill_buckets: tuple = ()
+    # Chunk-row attention path of the mixed step. "fused" runs the chunk's
+    # rows as one paged flash-prefill pass over the request's block table
+    # (O(context) HBM reads per q block); "decode" is the fallback that
+    # re-uses the per-token flash-decode path for every chunk row
+    # (O(chunk · context) reads), kept for equivalence testing.
+    mixed_step_kernel: str = "fused"
 
 
 @dataclasses.dataclass
@@ -110,6 +117,8 @@ class Engine:
             assert not mc.sliding_window, \
                 "paged engine serves full-attention configs; sliding-window" \
                 " long-context is exercised via the dense dry-run path"
+        assert cfg.mixed_step_kernel in ("fused", "decode"), \
+            cfg.mixed_step_kernel
         self.allocator = PageAllocator(cfg.num_pages, cfg.page_size)
         self._rng = jax.random.PRNGKey(cfg.seed)
         self._next_branch_id = 0
@@ -542,6 +551,14 @@ class Engine:
         positions <= its own. One compile per distinct row count: the pure
         decode shape plus one mixed shape per prefill bucket.
 
+        With ``mixed_step_kernel="fused"`` (the default) the chunk rows'
+        attention runs as one paged flash-prefill pass over the request's
+        block table instead of per-token flash-decode calls — same masking
+        semantics (row i sees absolute positions <= pos0 + i), one
+        O(context) HBM stream per q block instead of one per row.
+        ``"decode"`` keeps the legacy unified call for fallback and
+        equivalence testing.
+
         The SSM mixer of ssm/hybrid configs is inherently sequential, so its
         chunk rows can't be independent like attention's: they run as ONE
         [1, bucket, D] sequence through the masked-dt chunked scan instead,
@@ -557,6 +574,13 @@ class Engine:
         nS = cfg.max_slots
         # static: does this shape carry an SSM chunk lane?
         ssm_chunk_lane = bool(chunk_state) and mc.uses_ssm
+        # static: chunk rows take the fused paged flash-prefill path (one
+        # flash pass over the request's block table) instead of riding the
+        # per-token flash-decode loop — O(context) vs O(chunk · context)
+        # HBM reads per layer
+        fused_chunk = (B > nS and mc.uses_attention
+                       and cfg.mixed_step_kernel == "fused")
+        on_tpu = jax.default_backend() == "tpu"
         x = embed_tokens(mc, params["embed"], tokens[:, None])
         if mc.pos_embedding == "sinusoidal":
             x = x + sinusoidal_embedding(positions, mc.d_model)[:, None].astype(x.dtype)
@@ -592,9 +616,25 @@ class Engine:
                     jnp.moveaxis(k[:, 0], 1, 0), mode="drop")
                 vp = vp.at[:, page_of, slot_in_page].set(
                     jnp.moveaxis(v[:, 0], 1, 0), mode="drop")
-                att = paged_attention(
-                    q[:, 0], kp, vp, block_tables, lengths + 1,
-                    use_kernel=jax.default_backend() == "tpu")
+                if fused_chunk:
+                    # decode rows keep the flash-decode path; the chunk's
+                    # rows share one block table (they are broadcast rows
+                    # of the same request) and run as a single flash pass
+                    # with causal masking against absolute positions —
+                    # row i at pos0 + i sees the prefix plus the chunk K/V
+                    # written above. Bucket-pad rows (>= chunk_len) emit
+                    # exact zeros; their writes were already dropped.
+                    att_dec = paged_attention(
+                        q[:nS, 0], kp, vp, block_tables[:nS],
+                        lengths[:nS] + 1, use_kernel=on_tpu)
+                    att_chunk = paged_flash_prefill(
+                        q[nS:, 0], kp, vp, block_tables[nS], positions[nS],
+                        chunk_len, use_kernel=on_tpu)
+                    att = jnp.concatenate([att_dec, att_chunk], 0)
+                else:
+                    att = paged_attention(
+                        q[:, 0], kp, vp, block_tables, lengths + 1,
+                        use_kernel=on_tpu)
                 y = att.reshape(B, 1, -1) @ layer_p["attn"]["wo"]
                 mix = mix + y
                 outs["k_pages"], outs["v_pages"] = kp, vp

@@ -190,6 +190,91 @@ def test_piggybacked_prefill_leaves_decode_untouched(family):
     ref.release_prefix(b_ref)
 
 
+@pytest.mark.parametrize("kernel", ["fused", "decode"])
+@pytest.mark.parametrize("family", ["dense", "hybrid"])
+@pytest.mark.parametrize("s", [8, 9, 12, 16, 7])
+def test_chunk_visible_context_pinned_at_page_edges(family, kernel, s):
+    """Regression pinning the exact visible-context length of mixed-step
+    chunk rows at chunk/page boundaries (page_size=4, prefill_chunk=8, so
+    chunk boundaries land on and straddle page edges).
+
+    Chunk rows attend pages the step itself just wrote, so an off-by-one in
+    the causal horizon at a page edge would read one future (unwritten)
+    slot. Before the final chunk, every not-yet-written slot of the
+    request's pre-allocated pages is poisoned with huge values: the final
+    chunk must overwrite exactly its own positions and mask everything
+    past each row's own position, leaving the last logits equal to the
+    exact-length prefill's."""
+    cfg = tiny_config(**FAMILIES[family])
+    rng = np.random.default_rng(s)
+    prompt = [int(t) for t in rng.integers(2, cfg.vocab_size, size=s)]
+
+    _, _, e_exact = _engine(cfg)
+    b_e, lg_e, _ = e_exact.prefill(prompt, exact=True)
+
+    _, _, eng = _engine(cfg, mixed_step_kernel=kernel)
+    st = eng.begin_prefill(prompt)
+    while st.remaining > eng.cfg.prefill_chunk:
+        eng.decode_step()
+    ps = eng.cfg.page_size
+    pages = np.asarray(st.blocks.pages, np.int64)
+    poison = np.zeros(eng.state["k_pages"].shape[2:4], bool)  # [P, ps]
+    for pos in range(st.next_pos, len(pages) * ps):
+        poison[pages[pos // ps], pos % ps] = True
+    pz = jnp.asarray(poison)[None, None, :, :, None]
+    for key in ("k_pages", "v_pages"):
+        eng.state[key] = jnp.where(pz, 1e4, eng.state[key])
+    while not st.done:
+        eng.decode_step()
+    b_c, lg_c, _ = eng.finish_prefill(st)
+
+    np.testing.assert_allclose(np.asarray(lg_e), np.asarray(lg_c),
+                               rtol=1e-4, atol=1e-4)
+    e_exact.release_prefix(b_e)
+    eng.release_prefix(b_c)
+
+
+@pytest.mark.parametrize("family", ["dense", "hybrid"])
+def test_fused_mixed_step_matches_decode_path(family):
+    """Equivalence of the two mixed_step_kernel paths: same seed, same
+    workload (a branch decoding greedily while a second prompt piggybacks)
+    must produce bit-identical branch tokens, fp32-close harvested logits,
+    and fp32-close K/V pages for the admitted prompt."""
+    cfg = tiny_config(**FAMILIES[family])
+    prompt_a = [2, 5, 9, 13, 7]
+    prompt_b = [3, 8, 11, 6, 12, 4, 10, 9, 2, 7, 5, 13, 3]   # 13 tokens
+
+    def run(kernel):
+        _, _, eng = _engine(cfg, temperature=0.0, mixed_step_kernel=kernel)
+        blocks, lg, ssm = eng.prefill(prompt_a)
+        h = eng.spawn_branch(0, blocks, lg, ssm, len(prompt_a))
+        for _ in range(3):
+            eng.decode_step()
+        st = eng.begin_prefill(prompt_b)
+        while not st.done:
+            eng.decode_step()
+        b_b, lg_b, _ = eng.finish_prefill(st)
+        kb, vb = _gather_prefix(eng, b_b, len(prompt_b))
+        toks = list(h.tokens)
+        eng.free_branch(h)
+        eng.release_prefix(blocks)
+        eng.release_prefix(b_b)
+        return toks, np.asarray(lg_b), kb, vb
+
+    toks_f, lg_f, k_f, v_f = run("fused")
+    toks_d, lg_d, k_d, v_d = run("decode")
+    assert toks_f == toks_d
+    np.testing.assert_allclose(lg_f, lg_d, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(k_f, k_d, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(v_f, v_d, rtol=1e-4, atol=1e-5)
+
+
+def test_mixed_step_kernel_validated():
+    cfg = tiny_config()
+    with pytest.raises(AssertionError):
+        _engine(cfg, mixed_step_kernel="nope")
+
+
 def test_pending_prefills_complete_fifo():
     """Several admitted prompts drain one chunk per step, oldest first."""
     cfg = tiny_config()

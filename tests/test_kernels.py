@@ -178,3 +178,165 @@ def test_flash_prefill_noncausal(rng):
     out = flash_attention(q, k, v, causal=False, block_q=16, block_k=16)
     ref = flash_prefill_ref(q, k, v, causal=False)
     np.testing.assert_allclose(out, ref, atol=2e-4)
+
+
+def test_flash_prefill_noncausal_nondivisible(rng):
+    """Regression: internal padding used to require causal masking (the
+    wrapper asserted), so non-causal non-divisible shapes crashed. Now the
+    kernel masks padded key columns explicitly for either mode."""
+    from repro.kernels.flash_prefill.ops import flash_attention
+    from repro.kernels.flash_prefill.ref import flash_prefill_ref
+    q = jnp.asarray(rng.normal(size=(1, 37, 2, 32)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 37, 2, 32)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 37, 2, 32)), jnp.float32)
+    out = flash_attention(q, k, v, causal=False, block_q=16, block_k=16)
+    ref = flash_prefill_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(out, ref, atol=2e-4)
+
+
+@pytest.mark.parametrize("h,hkv", [(4, 2), (8, 1), (6, 3)])
+def test_flash_prefill_gqa_native_kv(rng, h, hkv):
+    """Regression for Hkv < H: KV stays [B, S, Hkv, hd] and the kernel
+    indexes the head group in the BlockSpec — callers never pre-repeat
+    (which doubled KV HBM traffic and broke silently when forgotten)."""
+    from repro.kernels.flash_prefill.ops import flash_attention
+    from repro.kernels.flash_prefill.ref import flash_prefill_ref
+    b, s, hd = 2, 48, 32
+    q = jnp.asarray(rng.normal(size=(b, s, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, hkv, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, hkv, hd)), jnp.float32)
+    out = flash_attention(q, k, v, block_q=16, block_k=16)
+    ref = flash_prefill_ref(q, k, v)
+    np.testing.assert_allclose(out, ref, atol=2e-4)
+    # pre-repeated KV must agree with the native-GQA call
+    rep = flash_attention(q, jnp.repeat(k, h // hkv, 2),
+                          jnp.repeat(v, h // hkv, 2),
+                          block_q=16, block_k=16)
+    np.testing.assert_allclose(out, rep, atol=1e-6)
+
+
+def test_flash_prefill_masked_rows_exact_zeros(rng):
+    """Regression: fully-masked (pad) query rows used to emit mis-normalized
+    garbage (denominator clamped to 1e-30, or exp(-inf - -inf) = 1 claims).
+    With an explicit row-validity mask they are exact zeros."""
+    from repro.kernels.flash_prefill.flash_prefill import flash_prefill
+    from repro.kernels.flash_prefill.ref import flash_prefill_ref
+    q = jnp.asarray(rng.normal(size=(1, 16, 2, 32)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 16, 2, 32)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 16, 2, 32)), jnp.float32)
+    for causal in (True, False):
+        out = flash_prefill(q, k, v, causal=causal, block_q=8, block_k=8,
+                            interpret=True, true_len=13)
+        ref = flash_prefill_ref(q[:, :13], k[:, :13], v[:, :13],
+                                causal=causal)
+        np.testing.assert_allclose(out[:, :13], ref, atol=2e-4)
+        assert np.all(np.asarray(out)[:, 13:] == 0.0)
+
+
+# ---------------------------------------------------------------------------
+# fused paged flash-prefill (the mixed-step chunk-row kernel)
+
+
+def _paged_setup(rng, t, pos0, valid, qh, kvh, hd, ps, dtype=jnp.float32):
+    """Random paged KV + a block table shaped like the engine's: real pages
+    cover positions 0..pos0+valid-1 (in permuted order), the rest of the
+    static-width table is the OOB sentinel (== num_pages)."""
+    need = -(-(pos0 + valid) // ps)
+    npages = need + 2
+    pps = need + 3
+    kp = jnp.asarray(rng.normal(size=(kvh, npages, ps, hd))).astype(dtype)
+    vp = jnp.asarray(rng.normal(size=(kvh, npages, ps, hd))).astype(dtype)
+    bt = np.full((pps,), npages, np.int32)
+    bt[:need] = rng.permutation(npages)[:need]
+    q = jnp.asarray(rng.normal(size=(t, qh, hd))).astype(dtype)
+    return q, kp, vp, jnp.asarray(bt)
+
+
+@pytest.mark.parametrize("t,pos0,valid,qh,kvh,hd,ps,bq", [
+    (8, 0, 8, 4, 2, 32, 4, 8),     # fresh prompt, GQA
+    (8, 5, 8, 4, 4, 32, 4, 4),     # chunk straddles a page boundary
+    (8, 13, 3, 8, 2, 64, 8, 8),    # bucket-pad rows (valid < t)
+    (16, 7, 11, 4, 1, 32, 4, 4),   # MQA, ragged, multiple q blocks
+    (8, 16, 8, 2, 2, 16, 8, 8),    # chunk starts exactly at a page edge
+    (6, 3, 5, 4, 2, 32, 4, 4),     # t not a block_q multiple: wrapper pads
+])
+def test_paged_flash_prefill_vs_ref(rng, t, pos0, valid, qh, kvh, hd, ps,
+                                    bq):
+    from repro.kernels.flash_prefill.ops import paged_flash_prefill
+    from repro.kernels.flash_prefill.ref import paged_flash_prefill_ref
+    q, kp, vp, bt = _paged_setup(rng, t, pos0, valid, qh, kvh, hd, ps)
+    out = paged_flash_prefill(q, kp, vp, bt, jnp.int32(pos0),
+                              jnp.int32(valid), block_q=bq)
+    ref = paged_flash_prefill_ref(q, kp, vp, bt, jnp.int32(pos0),
+                                  jnp.int32(valid))
+    np.testing.assert_allclose(out, ref, atol=2e-4)
+    # bucket-pad rows are exact zeros, never near-zero residue
+    assert np.all(np.asarray(out)[valid:] == 0.0)
+
+
+@pytest.mark.parametrize("t,pos0,valid,qh,kvh,hd,ps", [
+    (8, 5, 8, 4, 2, 32, 4),
+    (8, 13, 3, 8, 2, 64, 8),
+    (16, 7, 11, 4, 4, 32, 4),
+])
+def test_paged_flash_prefill_matches_decode_path(rng, t, pos0, valid, qh,
+                                                 kvh, hd, ps):
+    """The fused kernel and the per-token flash-decode path are the same
+    math: row i of the chunk == a decode call with length pos0 + i + 1
+    against the same block table."""
+    from repro.kernels.flash_prefill.ops import paged_flash_prefill
+    from repro.kernels.paged_attention.ref import paged_attention_decode_ref
+    q, kp, vp, bt = _paged_setup(rng, t, pos0, valid, qh, kvh, hd, ps)
+    out = paged_flash_prefill(q, kp, vp, bt, jnp.int32(pos0),
+                              jnp.int32(valid))
+    bt_rows = jnp.broadcast_to(bt, (t, bt.shape[0]))
+    lens = pos0 + jnp.arange(t) + 1
+    dec = paged_attention_decode_ref(q, kp, vp, bt_rows, lens)
+    np.testing.assert_allclose(np.asarray(out)[:valid],
+                               np.asarray(dec)[:valid], atol=2e-4)
+
+
+def test_paged_flash_prefill_bf16(rng):
+    from repro.kernels.flash_prefill.ops import paged_flash_prefill
+    from repro.kernels.flash_prefill.ref import paged_flash_prefill_ref
+    q, kp, vp, bt = _paged_setup(rng, 8, 5, 8, 4, 2, 32, 4,
+                                 dtype=jnp.bfloat16)
+    out = paged_flash_prefill(q, kp, vp, bt, jnp.int32(5), jnp.int32(8),
+                              block_q=4)
+    ref = paged_flash_prefill_ref(q, kp, vp, bt, jnp.int32(5), jnp.int32(8))
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=5e-2)
+
+
+def test_paged_flash_prefill_ignores_poisoned_future_pages(rng):
+    """Keys past a row's causal horizon — slots the chunk has not written
+    yet and sentinel-table garbage — must not affect its output."""
+    from repro.kernels.flash_prefill.ops import paged_flash_prefill
+    t, pos0, valid, qh, kvh, hd, ps = 8, 5, 6, 4, 2, 32, 4
+    q, kp, vp, bt = _paged_setup(rng, t, pos0, valid, qh, kvh, hd, ps)
+    base = paged_flash_prefill(q, kp, vp, bt, jnp.int32(pos0),
+                               jnp.int32(valid), block_q=4)
+    # poison every slot at absolute positions >= pos0 + valid
+    npages = kp.shape[1]
+    flat = np.zeros((npages * ps,), bool)
+    for pos in range(pos0 + valid, (npages - 2) * ps):
+        flat[int(bt[pos // ps]) * ps + pos % ps] = True
+    poison = jnp.asarray(flat).reshape(npages, ps)
+    kp2 = jnp.where(poison[None, :, :, None], 1e4, kp)
+    vp2 = jnp.where(poison[None, :, :, None], 1e4, vp)
+    pert = paged_flash_prefill(q, kp2, vp2, bt, jnp.int32(pos0),
+                               jnp.int32(valid), block_q=4)
+    np.testing.assert_allclose(base, pert, atol=1e-6)
+
+
+def test_mixed_step_bytes_fused_strictly_fewer():
+    """Acceptance: at chunk >= 256 and context >= 2048 the fused path reads
+    strictly fewer K/V bytes than the per-token flash-decode loop (the
+    O(chunk · context) -> O(q_blocks · context) collapse)."""
+    from repro.kernels.flash_prefill.ops import mixed_step_bytes_read
+    for chunk, ctx in [(256, 2048), (256, 4096), (512, 2048)]:
+        dec = mixed_step_bytes_read(chunk, ctx, 16, 8, 64, path="decode")
+        fus = mixed_step_bytes_read(chunk, ctx, 16, 8, 64, path="fused")
+        assert fus < dec, (chunk, ctx, fus, dec)
+        # one 128-row q block streams the context once, not 128 times
+        assert dec > 50 * fus, (chunk, ctx, fus, dec)
