@@ -1,14 +1,48 @@
 """Figure 5: end-to-end latency + accuracy of Vanilla / Self-Consistency /
 Rebase / SART across N, at two arrival rates (trace-driven simulator at
 paper-scale response lengths; the live tiny-model variant of the same
-comparison runs in examples/sart_vs_baselines.py)."""
+comparison runs in examples/sart_vs_baselines.py).
+
+Also reports ``ttfb50`` (median time-to-first-branch) under Poisson-burst
+arrivals for single-lane vs token-budget multi-lane chunk scheduling
+(``SimEngineConfig.step_token_budget`` — see docs/scheduling.md): under
+bursty admission the single FIFO chunk lane serializes prompts one chunk
+per decode step, so the lane budget is what bounds time-to-first-branch at
+high arrival rates."""
 from __future__ import annotations
 
 import numpy as np
 
 from repro.core.scheduler import percentile_latency
 from repro.serving.simulator import (SimEngineConfig, SimWorkload,
+                                     poisson_burst_arrivals,
                                      run_sim_experiment)
+
+
+def run_burst(quick: bool = False, seed: int = 0):
+    """ttfb under Poisson-burst arrivals: step_token_budget set to one
+    chunk (bit-exact legacy single-lane FIFO) vs multi-lane packing."""
+    w = SimWorkload(mean_len=200 if quick else 400, sigma_len=0.6,
+                    overthink_p=0.12, correct_p=0.55, prompt_len=512)
+    nreq = 12 if quick else 24
+    chunk = 64
+    # high arrival rate: bursts of ~6 prompts every 30 steps; each prompt
+    # is 8 chunks, so the single lane serializes ~48 chunk-steps per burst
+    times = poisson_burst_arrivals(nreq, burst_gap=30, burst_mean=5)
+    rows = []
+    for lanes_name, budget in [("single", chunk), ("multi4", 4 * chunk)]:
+        ec = SimEngineConfig(max_slots=128, num_pages=500000,
+                             prefill_chunk=chunk, step_token_budget=budget)
+        m, acc = run_sim_experiment(
+            "sart", 4, num_requests=nreq, workload=w, engine_cfg=ec,
+            window=100, seed=seed, arrival_times=times)
+        rows.append({
+            "lanes": lanes_name, "budget": budget, "accuracy": acc,
+            "p50": percentile_latency(m, 50),
+            "ttfb50": percentile_latency(m, 50, "ttfb"),
+            "ttfb97": percentile_latency(m, 97, "ttfb"),
+        })
+    return rows
 
 
 def run(quick: bool = False, seed: int = 0):
@@ -56,6 +90,18 @@ def main(quick: bool = False):
             print(f"fig5_{rate}_speedup_sart_vs_sc_n8,"
                   f"{sc['p50'] / sa['p50']:.2f},"
                   f"acc_delta={sa['accuracy'] - sc['accuracy']:+.2f}")
+    burst = run_burst(quick=quick)
+    for r in burst:
+        print(f"fig5_burst_{r['lanes']}_budget{r['budget']},"
+              f"{r['ttfb50']:.0f},ttfb97={r['ttfb97']:.0f};"
+              f"p50={r['p50']:.0f};acc={r['accuracy']:.2f}")
+    # always print the acceptance row — a 0/NaN denominator is itself a
+    # signal and must not silently drop the headline metric
+    single, multi = burst[0], burst[1]
+    speedup = (single["ttfb50"] / multi["ttfb50"] if multi["ttfb50"] > 0
+               else float("inf") if single["ttfb50"] > 0 else float("nan"))
+    print(f"fig5_burst_ttfb50_speedup_multi_vs_single,{speedup:.2f},"
+          f"budget={multi['budget']}")
 
 
 if __name__ == "__main__":

@@ -6,7 +6,17 @@ derived column reports bytes touched per call — the quantity that matters
 for the memory-bound decode roofline on the TPU target."""
 from __future__ import annotations
 
+import sys
 import time
+
+try:
+    import repro  # noqa: F401  (deferred per-bench imports hide the error)
+except ModuleNotFoundError:
+    sys.exit(
+        "kernel_bench: the `repro` package is not importable — run from the "
+        "repo root with PYTHONPATH=src, e.g.\n"
+        "    PYTHONPATH=src python -m benchmarks.kernel_bench\n"
+        "or use the wrapper: scripts/bench.sh kernel_bench")
 
 import jax
 import jax.numpy as jnp

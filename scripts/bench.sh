@@ -1,0 +1,13 @@
+#!/usr/bin/env bash
+# Run a benchmarks/ entry point with the repo's PYTHONPATH set up.
+#
+#   scripts/bench.sh                      # quick benchmark harness (run.py)
+#   scripts/bench.sh kernel_bench         # one module
+#   scripts/bench.sh run --full           # full harness
+#
+# See docs/benchmarks.md for what each module measures.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+mod="${1:-run}"
+shift || true
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec python -m "benchmarks.${mod}" "$@"

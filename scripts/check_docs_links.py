@@ -1,0 +1,88 @@
+#!/usr/bin/env python3
+"""Check that intra-repo markdown links resolve (CI docs lane).
+
+Scans every tracked ``*.md`` file for inline links ``[text](target)`` and
+verifies, for each non-external target:
+
+  * the referenced file exists (relative to the linking file);
+  * a ``#fragment`` resolves to a heading in the target file, using
+    GitHub's slugification (lowercase, strip punctuation, spaces->dashes).
+
+External links (``http(s)://``, ``mailto:``) are ignored — this lane is
+about keeping the docs/ tree internally consistent, not about the
+network. Exits non-zero listing every dead link.
+"""
+from __future__ import annotations
+
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: strip markdown emphasis/code, lowercase, drop
+    punctuation except dashes/underscores, spaces become dashes."""
+    h = re.sub(r"[`*_]", "", heading.strip())
+    h = h.lower()
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def anchors_of(md_path: Path) -> set:
+    text = md_path.read_text(encoding="utf-8")
+    return {github_slug(m.group(1)) for m in HEADING_RE.finditer(text)}
+
+
+def repo_md_files(root: Path):
+    # tracked AND untracked-but-not-ignored, so a dead link in a page that
+    # hasn't been `git add`ed yet still fails locally, not just in CI
+    out = subprocess.run(
+        ["git", "ls-files", "--cached", "--others", "--exclude-standard",
+         "*.md", "**/*.md"],
+        cwd=root, capture_output=True, text=True)
+    files = [root / p for p in out.stdout.splitlines() if p.strip()]
+    if files:
+        return files
+    return [p for p in root.rglob("*.md") if ".git" not in p.parts]
+
+
+def check(root: Path):
+    errors = []
+    for md in repo_md_files(root):
+        text = md.read_text(encoding="utf-8")
+        for m in LINK_RE.finditer(text):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path_part, _, frag = target.partition("#")
+            if path_part:
+                dest = (md.parent / path_part).resolve()
+                if not dest.exists():
+                    errors.append(f"{md.relative_to(root)}: dead link "
+                                  f"-> {target} (no such file)")
+                    continue
+            else:
+                dest = md                     # same-file anchor
+            if frag and dest.suffix == ".md":
+                if github_slug(frag) not in anchors_of(dest):
+                    errors.append(f"{md.relative_to(root)}: dead anchor "
+                                  f"-> {target}")
+    return errors
+
+
+def main():
+    root = Path(__file__).resolve().parent.parent
+    errors = check(root)
+    for e in errors:
+        print(f"check_docs_links: {e}", file=sys.stderr)
+    if errors:
+        sys.exit(f"check_docs_links: {len(errors)} dead link(s)")
+    print("check_docs_links: all intra-repo markdown links resolve")
+
+
+if __name__ == "__main__":
+    main()

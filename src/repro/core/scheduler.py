@@ -16,6 +16,23 @@ fair comparison):
   * ``sart_noprune``   — ablation (paper Fig. 6): early stop only.
   * ``rebase``         — reward-guided tree search baseline (fork strong
                          leaves, cull weak ones, ≤N live leaves).
+
+Public contracts (documented in docs/architecture.md and
+docs/scheduling.md, which deep-link here):
+
+  * **Engine-agnostic**: the scheduler drives anything implementing the
+    engine interface (``repro.serving.Engine`` live, ``SimEngine`` traced)
+    through the same code path — policies compare on identical control
+    flow.
+  * **Admission keeps the chunk lanes fed**: ``_admit_one`` keeps up to
+    ``engine.admission_capacity`` prefills in flight (1 for legacy
+    single-lane engines); ``_poll_prefills`` harvests finished prefills
+    every tick and, when the engine packs multiple lanes, tops the
+    in-flight set back up from the arrival queue (oldest-first — the
+    scheduler half of token-budget lane scheduling).
+  * **Eager release**: completions, prunes and early stops free engine
+    slots and pages the moment they happen; ``metrics()`` is only valid
+    because ``_finalize`` releases the request's prefix exactly once.
 """
 from __future__ import annotations
 
@@ -171,29 +188,18 @@ class Scheduler:
                 if req.pending <= 0:
                     self.branch_queue.popleft()
             else:
-                if self.prefilling:
-                    # one async prefill in flight at a time: the engine
-                    # serves chunks FIFO anyway, and admitting a burst would
-                    # reserve every prompt's pages long before any chunk
-                    # runs, starving live decode branches into eviction
-                    break
-                req = self._arrived()
-                if req is None:
-                    break
-                try:
-                    self._admit(req)
-                except OutOfPagesError:
-                    self.request_queue.appendleft(req)
+                # keep as many prefills in flight as the engine can pack
+                # into one mixed step (admission_capacity = max chunk
+                # lanes; 1 without a token budget) — admitting beyond that
+                # would reserve prompts' pages long before any chunk runs,
+                # starving live decode branches into eviction
+                if not self._admit_one():
                     break
         # admission consumes no slot (chunks ride the decode step), so a
-        # saturated batch doesn't block it — keep one prefill in flight
-        if not self.engine.free_slots and not self.prefilling:
-            req = self._arrived()
-            if req is not None:
-                try:
-                    self._admit(req)
-                except OutOfPagesError:
-                    self.request_queue.appendleft(req)
+        # saturated batch doesn't block it — keep the lanes fed
+        if not self.engine.free_slots:
+            while self._admit_one():
+                pass
         if self.cfg.preempt and not self.engine.free_slots:
             self._maybe_preempt()
 
@@ -217,6 +223,25 @@ class Scheduler:
         req = self.branch_queue[0]
         if not req.done and req.pending > 0:
             self._spawn_one(req)
+
+    def _admit_one(self) -> bool:
+        """Admit one arrived request if the engine's chunk lanes have room
+        (``admission_capacity``: the max lanes one mixed step can carry —
+        1 for legacy single-lane FIFO engines). Returns True if a request
+        was admitted, False when at capacity, out of arrivals, or out of
+        pages (the request is requeued)."""
+        capacity = getattr(self.engine, "admission_capacity", 1)
+        if len(self.prefilling) >= capacity:
+            return False
+        req = self._arrived()
+        if req is None:
+            return False
+        try:
+            self._admit(req)
+        except OutOfPagesError:
+            self.request_queue.appendleft(req)
+            return False
+        return True
 
     def _admit(self, req: Request):
         """Algorithm 1 PREFILL, now asynchronous and uniform across model
@@ -253,11 +278,24 @@ class Scheduler:
         self.branch_queue.append(req)
 
     def _poll_prefills(self) -> bool:
+        """Harvest finished prefills and keep the engine's chunk lanes fed.
+
+        With token-budget lane scheduling (``admission_capacity > 1``) this
+        is the scheduler half of the lane packer: every decode tick it
+        refills the in-flight prefill set from the admission queue up to
+        the lane capacity, oldest-first — the engine-side
+        ``pack_chunk_lanes`` then chooses which of them ride the next
+        mixed step under the token budget (with its starvation bound).
+        Legacy single-lane engines (capacity 1) keep the seed's admission
+        points (window start + harvest refill) untouched."""
         harvested = False
         for req in [r for r in self.prefilling if r.prefill_state.done]:
             self.prefilling.remove(req)
             self._harvest_prefill(req)
             harvested = True
+        if getattr(self.engine, "admission_capacity", 1) > 1:
+            while self._admit_one():
+                pass
         return harvested
 
     def _rebase_initial_width(self) -> int:

@@ -1,7 +1,7 @@
 """Pallas TPU fused paged flash-prefill for the mixed decode+prefill step.
 
 The serving engine admits prompts chunk-by-chunk as extra rows of the decode
-step (docs/serving.md). Before this kernel, each chunk row re-used the
+step (docs/scheduling.md). Before this kernel, each chunk row re-used the
 per-token flash-decode path: every row streamed the request's *entire* paged
 context from HBM, an O(chunk · context) read that gates time-to-first-branch
 — the quantity SART's redundant sampling with early stopping (Algorithm 1)

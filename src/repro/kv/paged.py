@@ -12,6 +12,22 @@ Layout (TPU-friendly, consumed by ``repro.kernels.paged_attention``):
 
 The allocator itself is plain Python (it runs on the host between jit'd decode
 steps, exactly like vLLM's block manager runs on the CPU between CUDA steps).
+
+Public contracts (documented in docs/architecture.md, which deep-links
+here):
+
+  * **Refcount conservation**: every page is either free or has refcount
+    >= 1, never both, and the two sets partition the pool —
+    ``check_invariants`` asserts it; ``tests/test_kv_properties.py``
+    drives random op interleavings against it.
+  * **All-or-nothing reservation**: ``extend`` (and ``alloc_prefix`` built
+    on it) either allocates every page the growth needs or raises
+    ``OutOfPagesError`` having allocated none, so callers never roll back
+    partial state.
+  * **Fork shares, append copies**: ``fork`` increfs all parent pages
+    (including a trailing partial page); writers must ``cow_last_page``
+    (or let ``append_token`` do it) before writing into a shared partial
+    page. Release is eager and idempotent on an emptied block list.
 """
 from __future__ import annotations
 

@@ -71,7 +71,8 @@ def load_reasoner(ckpt_dir: Optional[str], arch: str = "dense"):
 def serve(policy: str, n: int, num_requests: int, rate_gap: int,
           ckpt: Optional[str], prm_kind: str, window: int, max_tokens: int,
           max_slots: int, seed: int, temperature: float,
-          arch: str = "dense", mixed_step_kernel: str = "fused") -> dict:
+          arch: str = "dense", mixed_step_kernel: str = "fused",
+          step_token_budget: int = 0) -> dict:
     import numpy as np
 
     from ..core import OraclePRM, RewardHeadPRM, Scheduler, SchedulerConfig
@@ -85,7 +86,8 @@ def serve(policy: str, n: int, num_requests: int, rate_gap: int,
         page_size=16, num_pages=4096, max_slots=max_slots,
         max_pages_per_branch=32, eos_id=tk.EOS,
         sampling=SamplingParams(temperature=temperature, top_p=0.95),
-        seed=seed, mixed_step_kernel=mixed_step_kernel),
+        seed=seed, mixed_step_kernel=mixed_step_kernel,
+        step_token_budget=step_token_budget),
         prm_params=prm_head)
     if prm_kind == "head" and prm_head is not None:
         prm = RewardHeadPRM(engine)
@@ -116,9 +118,18 @@ def serve(policy: str, n: int, num_requests: int, rate_gap: int,
         "queue_p50": percentile_latency(metrics, 50, "queue"),
         "decode_steps": metrics["decode_steps"],
         "clock": metrics["clock"],
-        # O(buckets) for every family since the masked-dt chunk lane
+        "ttfb50": percentile_latency(metrics, 50, "ttfb"),
+        # O(buckets x lane-configs) for every family (masked-dt chunk lane
+        # + token-budget lane packing)
         "prefill_compile_count": engine.prefill_compile_count,
         "mixed_step_kernel": mixed_step_kernel,
+        "step_token_budget": step_token_budget,
+        "chunk_lane_capacity": engine.admission_capacity,
+        # avg chunk lanes per mixed step: > 1 means the token budget packed
+        # concurrent prefills onto single decode ticks
+        "chunk_lanes_per_mixed_step": (
+            engine.prefill_chunk_steps / engine.mixed_steps_executed
+            if engine.mixed_steps_executed else 0.0),
     }
     return out
 
@@ -142,6 +153,10 @@ def main():
                     help="chunk-row attention path of the mixed step: one "
                          "fused paged flash-prefill pass vs the per-token "
                          "flash-decode fallback")
+    ap.add_argument("--step-token-budget", type=int, default=0,
+                    help="max chunk-row tokens per mixed step, drawn from "
+                         "multiple in-flight prefills (token-budget lane "
+                         "scheduling); 0 = legacy one-FIFO-chunk-per-step")
     ap.add_argument("--prm", default="oracle", choices=["oracle", "head"])
     ap.add_argument("--window", type=int, default=8)
     ap.add_argument("--max-tokens", type=int, default=96)
@@ -152,7 +167,7 @@ def main():
     out = serve(args.policy, args.n, args.requests, args.rate_gap,
                 args.ckpt, args.prm, args.window, args.max_tokens,
                 args.slots, args.seed, args.temperature, args.arch,
-                args.mixed_step_kernel)
+                args.mixed_step_kernel, args.step_token_budget)
     print(json.dumps(out, indent=2))
 
 

@@ -16,12 +16,35 @@ The engine is the substrate Algorithm 1 (the SART scheduler) drives:
 
 On CPU the paged attention uses the vectorized jnp reference path; on TPU the
 same call dispatches to the Pallas flash-decode kernel.
+
+Public contracts (documented in docs/architecture.md and
+docs/scheduling.md, which deep-link here):
+
+  * **Admission is non-blocking**: ``begin_prefill`` reserves the prompt's
+    pages up front (failing fast with ``OutOfPagesError``, allocating
+    nothing) and queues a ``ChunkedPrefillState``; its chunks ride later
+    ``decode_step`` calls as extra rows — one FIFO chunk per step, or up
+    to ``EngineConfig.step_token_budget`` chunk-row tokens packed from
+    several pending prefills as concurrent lanes (``pack_chunk_lanes``:
+    oldest-first with a starvation bound).
+  * **Harvested ownership**: once ``finish_prefill`` returns, the state's
+    pages belong to the caller — ``abort_prefill`` on a harvested state
+    only detaches it from the queue; releasing again would double-decref
+    pages that live branches share.
+  * **Bounded compiles**: mixed-step shapes are O(len(prefill_buckets) x
+    len(chunk_lane_configs)) — all lanes of a step pad to one shared
+    bucket, and lane counts round down into a small allowed set
+    (``prefill_compile_count`` counts traced shapes).
+  * **Inert rows never perturb state**: sentinel block-table entries drop
+    K/V page writes and the ``slot_valid`` mask freezes per-slot SSM rows,
+    so empty slots, suspended branches and standalone chunk draining leave
+    live state bit-identical.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -68,9 +91,28 @@ class EngineConfig:
     # re-uses the per-token flash-decode path for every chunk row
     # (O(chunk · context) reads), kept for equivalence testing.
     mixed_step_kernel: str = "fused"
+    # Token-budget lane scheduling (vLLM-style): a mixed step carries up to
+    # ``step_token_budget`` chunk-row tokens drawn from MULTIPLE in-flight
+    # prefills (one lane per request, all lanes padded to one shared
+    # bucket), instead of one FIFO chunk per step. 0 keeps the legacy
+    # single-lane FIFO (bit-exact pre-lane behaviour). Must be >= the
+    # largest prefill bucket when set.
+    step_token_budget: int = 0
+    # Allowed lane counts per mixed step. The packer rounds the number of
+    # selected lanes DOWN to the nearest entry, so compiled mixed-step
+    # shapes stay O(len(prefill_buckets) * len(chunk_lane_configs)).
+    # () derives powers of two up to step_token_budget // max_bucket.
+    chunk_lane_configs: tuple = ()
+    # A pending prefill skipped by the packer (its chunk didn't fit the
+    # remaining budget) more than this many times blocks packing past it:
+    # no younger request overtakes it again; it then waits only on older
+    # requests draining (oldest-first, bounded overtaking).
+    prefill_starvation_bound: int = 4
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)    # identity equality: the admission
+# queue holds several states at once and `in`/`remove` must never confuse
+# two requests that happen to share a prompt
 class ChunkedPrefillState:
     """A partially-prefilled request: pages fill chunk-by-chunk while the
     decode batch keeps stepping. ``done`` flips once the final chunk has
@@ -87,10 +129,106 @@ class ChunkedPrefillState:
     ssm_state: object = None         # [L,1,...] (conv, ssd) running state
     done: bool = False
     harvested: bool = False
+    passed_over: int = 0             # consecutive packer skips (starvation)
 
     @property
     def remaining(self) -> int:
         return len(self.prompt) - self.next_pos
+
+
+def pack_chunk_lanes(pending: List[ChunkedPrefillState], *, budget: int,
+                     chunk_bucket: Callable[[ChunkedPrefillState], int],
+                     lane_configs: Sequence[int], starvation_bound: int):
+    """Select which pending prefills contribute a chunk lane to the next
+    mixed step (shared by ``Engine`` and ``SimEngine``).
+
+    Token-budget packing: walk the admission queue oldest-first, adding one
+    lane per request while the padded row count — ``shared_bucket x
+    n_lanes`` — fits ``budget``. All selected lanes pad to ONE shared
+    bucket (the max any selected chunk needs) and the lane count is
+    rounded down to the nearest entry of ``lane_configs``, so the compiled
+    mixed-step shapes stay O(buckets x lane-configs) instead of exploding
+    over bucket mixtures.
+
+    A request whose chunk would overflow the remaining budget is skipped —
+    later, smaller tail chunks may still fit — but each skip increments its
+    ``passed_over`` counter, and once that reaches ``starvation_bound`` the
+    packer refuses to pack anything *behind* it in the queue. The
+    guarantee is an ordering bound, not a latency one: no younger request
+    ever overtakes a starved one, so from then on it waits only on
+    requests older than itself draining (oldest-first with a bounded
+    overtaking window).
+
+    ``budget <= 0`` is the legacy single-lane FIFO: exactly one chunk — the
+    oldest — per step, padded to its own bucket.
+
+    Returns ``(selected, bucket)``: the states whose next chunk rides this
+    step, in queue order, and the shared bucket each lane pads to.
+    """
+    if not pending:
+        return [], 0
+    if budget <= 0:
+        st = pending[0]
+        st.passed_over = 0
+        return [st], chunk_bucket(st)
+    max_lanes = max(lane_configs)
+    selected: List[ChunkedPrefillState] = []
+    shared = 0
+    for st in pending:
+        if len(selected) == max_lanes:
+            break
+        b = max(shared, chunk_bucket(st))
+        if b * (len(selected) + 1) <= budget:
+            selected.append(st)
+            shared = b
+        elif st.passed_over >= starvation_bound:
+            break                     # nothing may overtake a starved lane
+        else:
+            st.passed_over += 1
+    n = max((c for c in lane_configs if c <= len(selected)), default=0)
+    for st in selected[n:]:           # rounded off this step: counts as a skip
+        st.passed_over += 1
+    selected = selected[:n]
+    for st in selected:
+        st.passed_over = 0
+    bucket = max((chunk_bucket(st) for st in selected), default=0)
+    return selected, bucket
+
+
+def derive_lane_configs(configs: Sequence[int], budget: int,
+                        max_bucket: int) -> tuple:
+    """Resolve the allowed per-step lane counts for a token budget.
+
+    Explicit ``configs`` are validated (must contain 1 — the packer rounds
+    lane counts down, so some entry must always be reachable). The default
+    is powers of two up to ``budget // max_bucket`` plus that maximum
+    itself, keeping the set O(log(budget / bucket)) small.
+    """
+    if 0 < budget < max_bucket:
+        raise ValueError(
+            f"step_token_budget={budget} cannot carry even one full "
+            f"prefill bucket of {max_bucket} tokens")
+    max_lanes = max(budget // max_bucket, 1) if budget > 0 else 1
+    if configs:
+        lanes = tuple(sorted(set(int(c) for c in configs)))
+        if not lanes or lanes[0] != 1:
+            raise ValueError(
+                f"chunk_lane_configs {configs} must include 1: the packer "
+                "rounds lane counts down to an allowed configuration")
+        if lanes[-1] > max_lanes:
+            # a config the packer can never fill would make
+            # admission_capacity over-reserve prompts' pages (admitted
+            # requests whose chunks can't ride any step)
+            raise ValueError(
+                f"chunk_lane_configs {configs} exceed the "
+                f"{max_lanes} lane(s) step_token_budget={budget} can "
+                f"carry at bucket {max_bucket}")
+        return lanes
+    lanes, c = {1, max_lanes}, 1
+    while c < max_lanes:
+        c = min(c * 2, max_lanes)
+        lanes.add(c)
+    return tuple(sorted(lanes))
 
 
 @dataclasses.dataclass
@@ -146,7 +284,8 @@ class Engine:
         self._last_hidden = jnp.zeros((B, mc.d_model), jnp.float32)
         self.prm_params = prm_params
 
-        self._step_jit = jax.jit(self._step_fn)
+        self._step_jit = jax.jit(self._step_fn,
+                                 static_argnames=("lane_buckets",))
         self._prefill_cache: Dict[int, callable] = {}
         self.decode_steps_executed = 0
         self.prefill_chunk_steps = 0
@@ -164,8 +303,17 @@ class Engine:
                 f"prefill_chunk of {cfg.prefill_chunk} tokens — otherwise "
                 "chunk rows would alias (see Engine._bucket_for)")
         self._buckets = buckets
-        self._buckets_used: set = set()
+        self._buckets_used: set = set()   # (bucket, n_lanes) shapes traced
         self._pending_prefills: List[ChunkedPrefillState] = []
+        if cfg.step_token_budget > 0 and not cfg.chunked_prefill:
+            raise ValueError(
+                "step_token_budget requires chunked_prefill=True — "
+                "synchronous exact-length admission has no chunk lanes to "
+                "budget (and a capacity > 1 would let the scheduler drain "
+                "its whole arrival queue in one tick)")
+        self._lane_configs = derive_lane_configs(
+            cfg.chunk_lane_configs, cfg.step_token_budget, buckets[-1])
+        self.mixed_steps_executed = 0     # decode steps carrying >= 1 lane
 
     # ------------------------------------------------------------------ util
     @property
@@ -202,7 +350,7 @@ class Engine:
         if not exact:
             st = self._new_chunked_state(prompt)
             while not st.done:
-                self._advance_chunk(st, piggyback=False)
+                self._advance_chunks([st], piggyback=False)
             return st.blocks, st.last_logits, st.ssm_state
         cfg, mc = self.cfg, self.model.cfg
         s = len(prompt)
@@ -246,8 +394,9 @@ class Engine:
     def begin_prefill(self, prompt: List[int]) -> ChunkedPrefillState:
         """Admit a request without stalling decode. The returned state is
         queued and its prompt chunks piggyback on subsequent ``decode_step``
-        calls (one chunk per step); poll ``state.done`` and harvest with
-        ``finish_prefill``. With ``chunked_prefill=False`` the prompt
+        calls (one FIFO chunk per step, or up to ``step_token_budget``
+        chunk-row tokens across concurrent lanes when the budget is set);
+        poll ``state.done`` and harvest with ``finish_prefill``. With ``chunked_prefill=False`` the prompt
         prefills synchronously and the state returns already done. Raises
         OutOfPagesError (allocating nothing) when the KV pool cannot hold
         the prompt."""
@@ -284,8 +433,11 @@ class Engine:
 
     @property
     def prefill_compile_count(self) -> int:
-        """Distinct chunk shapes traced so far — O(num_buckets) by
-        construction, vs O(distinct prompt lengths) for the exact path."""
+        """Distinct mixed-step chunk shapes traced so far — (bucket,
+        lane-count) pairs, O(num_buckets x num_lane_configs) by
+        construction (the packer pads all lanes of a step to one shared
+        bucket and rounds lane counts to ``chunk_lane_configs``), vs
+        O(distinct prompt lengths) for the exact path."""
         return len(self._buckets_used)
 
     def _bucket_for(self, n: int) -> int:
@@ -299,8 +451,27 @@ class Engine:
             f"{self._buckets[-1]}; configure prefill_buckets to cover "
             f"prefill_chunk={self.cfg.prefill_chunk}")
 
-    def _chunk_inputs(self, st: ChunkedPrefillState):
-        """Build the extra step rows for the next chunk of ``st``.
+    def _chunk_bucket(self, st: ChunkedPrefillState) -> int:
+        return self._bucket_for(min(self.cfg.prefill_chunk, st.remaining))
+
+    def _pack_lanes(self):
+        """One packer call per decode step (it mutates the starvation
+        counters of skipped states)."""
+        return pack_chunk_lanes(
+            self._pending_prefills, budget=self.cfg.step_token_budget,
+            chunk_bucket=self._chunk_bucket,
+            lane_configs=self._lane_configs,
+            starvation_bound=self.cfg.prefill_starvation_bound)
+
+    @property
+    def admission_capacity(self) -> int:
+        """Max prefills worth keeping in flight: the packer can serve at
+        most this many chunk lanes per mixed step."""
+        return self._lane_configs[-1]
+
+    def _chunk_inputs(self, st: ChunkedPrefillState, bucket: int):
+        """Build one lane's extra step rows for the next chunk of ``st``,
+        padded to the step's shared ``bucket``.
 
         Rows past the chunk's true length shadow the last valid row (same
         token/position) so their positions/lengths stay in range, but they
@@ -308,11 +479,10 @@ class Engine:
         writes (``write_ok`` → OOB sentinel — from layer 2 on a pad row's
         activations can diverge from the row it shadows, so re-writing the
         same slot would clobber valid state) and the masked-dt SSM lane
-        treats them as identity transitions via ``chunk_len``."""
+        treats them as identity transitions via the lane's chunk length."""
         cfg = self.cfg
         s = len(st.prompt)
         chunk_len = min(cfg.prefill_chunk, s - st.next_pos)
-        bucket = self._bucket_for(chunk_len)
         idx = np.minimum(st.next_pos + np.arange(bucket), s - 1)
         tokens = np.asarray(st.prompt, np.int32)[idx]
         row = np.full((cfg.max_pages_per_branch,), cfg.num_pages, np.int32)
@@ -321,22 +491,29 @@ class Engine:
         # the step attends over lengths+1 tokens: row i covers positions
         # 0..next_pos+i inclusive, i.e. prefix + causal within the chunk
         return (tokens, idx.astype(np.int32), block_tables,
-                idx.astype(np.int32), chunk_len, bucket)
+                idx.astype(np.int32), chunk_len)
 
-    def _advance_chunk(self, st: ChunkedPrefillState, piggyback: bool):
-        """Run one chunk of ``st`` through the step program. With
-        ``piggyback`` the caller (``decode_step``) supplies the live decode
-        rows; standalone draining pads with inert rows (sentinel block
-        tables drop their page writes, and the slot-validity mask freezes
-        the per-slot SSM states) so active branches are never advanced.
+    def _advance_chunks(self, sts: List[ChunkedPrefillState],
+                        piggyback: bool, bucket: int = 0):
+        """Run one chunk of each state in ``sts`` through the step program
+        as concurrent lanes (``sts`` comes from ``pack_chunk_lanes``; the
+        legacy path passes a single state). With ``piggyback`` the caller
+        (``decode_step``) supplies the live decode rows; standalone
+        draining pads with inert rows (sentinel block tables drop their
+        page writes, and the slot-validity mask freezes the per-slot SSM
+        states) so active branches are never advanced.
 
-        ssm/hybrid configs thread the request's running per-layer (conv,
-        ssd) state through the step (``chunk_*`` keys) and get it back
-        advanced by exactly ``chunk_len`` tokens — pad rows are identity
-        transitions under the masked-dt scan."""
+        ssm/hybrid configs thread each lane's running per-layer (conv,
+        ssd) state through the step (``chunk_*`` keys, stacked along a
+        lane axis) and get it back advanced by exactly that lane's chunk
+        length — pad rows are identity transitions under the masked-dt
+        scan."""
         cfg, mc = self.cfg, self.model.cfg
         B = cfg.max_slots
-        ct, cp, cbt, cl, chunk_len, bucket = self._chunk_inputs(st)
+        if not bucket:
+            bucket = max(self._chunk_bucket(st) for st in sts)
+        lanes = [self._chunk_inputs(st, bucket) for st in sts]
+        chunk_lens = np.asarray([ln[4] for ln in lanes], np.int32)
         if piggyback:
             d_tokens, d_positions = self._tokens, self._positions
             d_bt, d_lengths = self._block_tables, self._lengths
@@ -350,28 +527,38 @@ class Engine:
             slot_valid = np.zeros((B,), bool)
         chunk_state = {}
         if mc.uses_ssm:
-            chunk_state = {"conv": st.ssm_state[0], "ssd": st.ssm_state[1]}
-        self._buckets_used.add(bucket)
+            chunk_state = {
+                "conv": jnp.concatenate([st.ssm_state[0] for st in sts], 1),
+                "ssd": jnp.concatenate([st.ssm_state[1] for st in sts], 1)}
+        lane_buckets = (bucket,) * len(sts)
+        self._buckets_used.add((bucket, len(sts)))
         next_tokens, hidden, logits, new_state = self._step_jit(
             self.params, self.state,
-            jnp.asarray(np.concatenate([d_tokens, ct])),
-            jnp.asarray(np.concatenate([d_positions, cp])),
-            jnp.asarray(np.concatenate([d_bt, cbt])),
-            jnp.asarray(np.concatenate([d_lengths, cl])),
-            self._next_rng(), chunk_state, jnp.int32(chunk_len),
-            jnp.asarray(slot_valid))
+            jnp.asarray(np.concatenate([d_tokens] + [ln[0] for ln in lanes])),
+            jnp.asarray(np.concatenate([d_positions]
+                                       + [ln[1] for ln in lanes])),
+            jnp.asarray(np.concatenate([d_bt] + [ln[2] for ln in lanes])),
+            jnp.asarray(np.concatenate([d_lengths]
+                                       + [ln[3] for ln in lanes])),
+            self._next_rng(), chunk_state, jnp.asarray(chunk_lens),
+            jnp.asarray(slot_valid), lane_buckets=lane_buckets)
         new_state = dict(new_state)
         if mc.uses_ssm:
-            st.ssm_state = (new_state.pop("chunk_conv"),
-                            new_state.pop("chunk_ssd"))
+            c_conv = new_state.pop("chunk_conv")      # [L, n_lanes, ...]
+            c_ssd = new_state.pop("chunk_ssd")
+            for i, st in enumerate(sts):
+                st.ssm_state = (c_conv[:, i:i + 1], c_ssd[:, i:i + 1])
         self.state.update(new_state)
-        self.prefill_chunk_steps += 1
-        st.next_pos += chunk_len
-        if st.next_pos >= len(st.prompt):
-            st.done = True
-            st.last_logits = logits[B + chunk_len - 1]
-            if st in self._pending_prefills:
-                self._pending_prefills.remove(st)
+        self.prefill_chunk_steps += len(sts)
+        self.mixed_steps_executed += 1
+        for i, st in enumerate(sts):
+            cl = int(chunk_lens[i])
+            st.next_pos += cl
+            if st.next_pos >= len(st.prompt):
+                st.done = True
+                st.last_logits = logits[B + i * bucket + cl - 1]
+                if st in self._pending_prefills:
+                    self._pending_prefills.remove(st)
         return next_tokens, hidden
 
     def _make_prefill(self, s_pad: int):
@@ -540,44 +727,57 @@ class Engine:
 
     # ----------------------------------------------------------------- decode
     def _step_fn(self, params, state, tokens, positions, block_tables,
-                 lengths, rng, chunk_state, chunk_len, slot_valid):
-        """One batched token step, generic in row count.
+                 lengths, rng, chunk_state, chunk_lens, slot_valid,
+                 lane_buckets: tuple = ()):
+        """One batched token step, generic in row count and lane count.
 
-        Rows 0..max_slots-1 are the decode slots; any extra rows are one
-        prefill chunk's tokens (same math: embed one token, write its K/V at
-        ``positions`` via the row's block table, attend over ``lengths``+1
-        tokens). Causality inside a chunk falls out of the length mask: all
-        rows scatter K/V before attention, and row i's length covers only
-        positions <= its own. One compile per distinct row count: the pure
-        decode shape plus one mixed shape per prefill bucket.
+        Rows 0..max_slots-1 are the decode slots; any extra rows are the
+        step's prefill chunk *lanes* — ``lane_buckets`` (static) gives the
+        padded row count of each lane, ``chunk_lens[i]`` (traced) its true
+        chunk length, and each lane's rows belong to one request (same
+        math as decode: embed one token, write its K/V at ``positions``
+        via the row's block table, attend over ``lengths``+1 tokens).
+        Causality inside a chunk falls out of the length mask: all rows
+        scatter K/V before attention, and row i's length covers only
+        positions <= its own. The packer emits only uniform lane tuples
+        with lane counts drawn from a small allowed set, so the compiled
+        shapes stay O(buckets x lane-configs): the pure decode shape plus
+        one mixed shape per (bucket, lane-count) pair.
 
-        With ``mixed_step_kernel="fused"`` (the default) the chunk rows'
-        attention runs as one paged flash-prefill pass over the request's
+        With ``mixed_step_kernel="fused"`` (the default) each lane's
+        attention runs as one paged flash-prefill pass over its request's
         block table instead of per-token flash-decode calls — same masking
         semantics (row i sees absolute positions <= pos0 + i), one
         O(context) HBM stream per q block instead of one per row.
         ``"decode"`` keeps the legacy unified call for fallback and
         equivalence testing.
 
-        The SSM mixer of ssm/hybrid configs is inherently sequential, so its
-        chunk rows can't be independent like attention's: they run as ONE
-        [1, bucket, D] sequence through the masked-dt chunked scan instead,
-        seeded by ``chunk_state`` (per-layer (conv, ssd) carried across
-        chunks on the ChunkedPrefillState) with only the first ``chunk_len``
-        rows valid — pad rows are exact identity transitions. ``slot_valid``
-        masks the per-slot SSM state update of decode rows the same way, so
-        inert rows (standalone chunk draining, empty slots) never perturb
-        suspended or future occupants.
+        The SSM mixer of ssm/hybrid configs is inherently sequential, so
+        its chunk rows can't be independent like attention's: each lane
+        runs as ONE [1, bucket, D] sequence through the masked-dt chunked
+        scan instead, seeded by its slice of ``chunk_state`` (per-layer
+        (conv, ssd) stacked along a lane axis, carried across chunks on
+        each ChunkedPrefillState) with only the first ``chunk_lens[i]``
+        rows valid — pad rows are exact identity transitions.
+        ``slot_valid`` masks the per-slot SSM state update of decode rows
+        the same way, so inert rows (standalone chunk draining, empty
+        slots) never perturb suspended or future occupants.
         """
         model, mc, cfg = self.model, self.model.cfg, self.cfg
         B = tokens.shape[0]
         nS = cfg.max_slots
-        # static: does this shape carry an SSM chunk lane?
+        # static: lane row offsets into the step's row axis
+        lane_off = []
+        off = nS
+        for bk in lane_buckets:
+            lane_off.append(off)
+            off += bk
+        # static: does this shape carry SSM chunk lanes?
         ssm_chunk_lane = bool(chunk_state) and mc.uses_ssm
         # static: chunk rows take the fused paged flash-prefill path (one
-        # flash pass over the request's block table) instead of riding the
-        # per-token flash-decode loop — O(context) vs O(chunk · context)
-        # HBM reads per layer
+        # flash pass per lane over its request's block table) instead of
+        # riding the per-token flash-decode loop — O(context) vs
+        # O(chunk · context) HBM reads per layer
         fused_chunk = (B > nS and mc.uses_attention
                        and cfg.mixed_step_kernel == "fused")
         on_tpu = jax.default_backend() == "tpu"
@@ -588,14 +788,16 @@ class Engine:
         page_of = block_tables[jnp.arange(B), positions // cfg.page_size]
         slot_in_page = positions % cfg.page_size
         if B > nS:
-            # chunk rows past chunk_len are pure padding: route their K/V
-            # writes to the OOB sentinel (mode="drop"). Shadowing the last
-            # valid row is NOT idempotent for hybrid configs — from layer 2
-            # on, pad-row inputs differ (the masked SSM lane leaves
-            # unspecified values at pad positions) and would clobber the
-            # valid row's K/V.
-            write_ok = jnp.concatenate([
-                jnp.ones((nS,), bool), jnp.arange(B - nS) < chunk_len])
+            # chunk rows past a lane's chunk length are pure padding: route
+            # their K/V writes to the OOB sentinel (mode="drop"). Shadowing
+            # the last valid row is NOT idempotent for hybrid configs —
+            # from layer 2 on, pad-row inputs differ (the masked SSM lane
+            # leaves unspecified values at pad positions) and would clobber
+            # the valid row's K/V.
+            write_ok = jnp.concatenate(
+                [jnp.ones((nS,), bool)]
+                + [jnp.arange(bk) < chunk_lens[i]
+                   for i, bk in enumerate(lane_buckets)])
             page_of = jnp.where(write_ok, page_of, cfg.num_pages)
 
         def layer(carry, scanned):
@@ -617,20 +819,24 @@ class Engine:
                 vp = vp.at[:, page_of, slot_in_page].set(
                     jnp.moveaxis(v[:, 0], 1, 0), mode="drop")
                 if fused_chunk:
-                    # decode rows keep the flash-decode path; the chunk's
+                    # decode rows keep the flash-decode path; each lane's
                     # rows share one block table (they are broadcast rows
                     # of the same request) and run as a single flash pass
                     # with causal masking against absolute positions —
                     # row i at pos0 + i sees the prefix plus the chunk K/V
-                    # written above. Bucket-pad rows (>= chunk_len) emit
-                    # exact zeros; their writes were already dropped.
-                    att_dec = paged_attention(
+                    # written above. Bucket-pad rows (>= the lane's chunk
+                    # length) emit exact zeros; their writes were already
+                    # dropped.
+                    att_parts = [paged_attention(
                         q[:nS, 0], kp, vp, block_tables[:nS],
-                        lengths[:nS] + 1, use_kernel=on_tpu)
-                    att_chunk = paged_flash_prefill(
-                        q[nS:, 0], kp, vp, block_tables[nS], positions[nS],
-                        chunk_len, use_kernel=on_tpu)
-                    att = jnp.concatenate([att_dec, att_chunk], 0)
+                        lengths[:nS] + 1, use_kernel=on_tpu)]
+                    for i, bk in enumerate(lane_buckets):
+                        o = lane_off[i]
+                        att_parts.append(paged_flash_prefill(
+                            q[o:o + bk, 0], kp, vp, block_tables[o],
+                            positions[o], chunk_lens[i],
+                            use_kernel=on_tpu))
+                    att = jnp.concatenate(att_parts, 0)
                 else:
                     att = paged_attention(
                         q[:, 0], kp, vp, block_tables, lengths + 1,
@@ -645,16 +851,25 @@ class Engine:
                 outs["conv"] = conv.astype(scanned["conv"].dtype)
                 outs["ssd"] = ssd.astype(scanned["ssd"].dtype)
                 if ssm_chunk_lane:
+                    # all lanes run as ONE batched masked-dt scan: the
+                    # packer only emits uniform lane tuples, the stacked
+                    # lane-state axis is the batch axis, and mamba2_forward
+                    # takes a per-row valid_len — so lane count adds no
+                    # sequential trace depth
+                    assert len(set(lane_buckets)) == 1, lane_buckets
+                    bk = lane_buckets[0]
+                    x_ch = h[nS:, 0].reshape(len(lane_buckets), bk, -1)
                     y_ch, (c_conv, c_ssd) = mamba2_forward(
-                        mc, layer_p["mamba"], jnp.swapaxes(h[nS:], 0, 1),
+                        mc, layer_p["mamba"], x_ch,
                         initial=(scanned["chunk_conv"],
                                  scanned["chunk_ssd"]),
-                        valid_len=chunk_len)
+                        valid_len=chunk_lens)
                     outs["chunk_conv"] = c_conv.astype(
                         scanned["chunk_conv"].dtype)
                     outs["chunk_ssd"] = c_ssd.astype(
                         scanned["chunk_ssd"].dtype)
-                    y = jnp.concatenate([y, jnp.swapaxes(y_ch, 0, 1)], 0)
+                    y = jnp.concatenate(
+                        [y, y_ch.reshape(B - nS, 1, -1)], 0)
                 mix = mix + y
             if mc.arch_type == "hybrid":
                 mix = mix * 0.5
@@ -685,16 +900,17 @@ class Engine:
         return next_tokens, hidden.astype(jnp.float32), logits, new_state
 
     def decode_step(self) -> Dict[int, int]:
-        """One decode step for all active slots, piggybacking one prompt
-        chunk of the oldest pending prefill (mixed step) when one is queued.
+        """One decode step for all active slots, piggybacking up to
+        ``step_token_budget`` chunk-row tokens of pending prefills as
+        concurrent lanes (mixed step) — one FIFO chunk when the budget is
+        unset (see ``pack_chunk_lanes``).
 
         Handles host-side page accounting (boundary alloc + CoW) *before* the
         jit'd step, then appends the sampled token to each active branch.
         Returns {slot: new_token}.
         """
         cfg, mc = self.cfg, self.model.cfg
-        pending = self._pending_prefills[0] if self._pending_prefills else None
-        if not self._active.any() and pending is None:
+        if not self._active.any() and not self._pending_prefills:
             return {}
         # page accounting for the token about to be written
         if mc.uses_attention:
@@ -730,14 +946,20 @@ class Engine:
                 if h is not None:
                     h.blocks.length += 1
 
-        if pending is not None:
-            next_tokens, hidden = self._advance_chunk(pending, piggyback=True)
+        # pack only after the page accounting above: an OutOfPagesError
+        # abort must not charge skipped prefills' starvation counters for
+        # a step that never ran
+        lanes, bucket = self._pack_lanes()
+        if lanes:
+            next_tokens, hidden = self._advance_chunks(
+                lanes, piggyback=True, bucket=bucket)
         else:
             next_tokens, hidden, _, new_state = self._step_jit(
                 self.params, self.state, jnp.asarray(self._tokens),
                 jnp.asarray(self._positions), jnp.asarray(self._block_tables),
                 jnp.asarray(self._lengths), self._next_rng(), {},
-                jnp.int32(0), jnp.asarray(self._active))
+                jnp.zeros((0,), jnp.int32), jnp.asarray(self._active),
+                lane_buckets=())
             self.state.update(new_state)
         self._last_hidden = hidden[:cfg.max_slots]
         self.decode_steps_executed += 1

@@ -25,7 +25,8 @@ import numpy as np
 
 from ..data import tokenizer as tk
 from ..kv import BranchBlocks, OutOfPagesError, PageAllocator
-from .engine import BranchHandle, ChunkedPrefillState
+from .engine import (BranchHandle, ChunkedPrefillState, derive_lane_configs,
+                     pack_chunk_lanes)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,6 +51,13 @@ class SimEngineConfig:
     eos_id: int = tk.EOS
     prefill_chunk: int = 64           # prompt tokens prefilled per step
     chunked_prefill: bool = True      # piggyback chunks on decode steps
+    # Token-budget lane scheduling, mirroring EngineConfig: a decode step
+    # carries up to this many chunk-row tokens drawn from multiple pending
+    # prefills (0 = legacy single-lane FIFO, one chunk per step). The sim
+    # has a single bucket (prefill_chunk), so the lane count per step is
+    # at most step_token_budget // prefill_chunk.
+    step_token_budget: int = 0
+    prefill_starvation_bound: int = 4
 
 
 @dataclasses.dataclass
@@ -84,7 +92,13 @@ class SimEngine:
         self._next_branch_id = 0
         self.decode_steps_executed = 0
         self.prefill_chunk_steps = 0
+        self.mixed_steps_executed = 0
         self._pending_prefills: List[ChunkedPrefillState] = []
+        if cfg.step_token_budget > 0 and not cfg.chunked_prefill:
+            raise ValueError("step_token_budget requires chunked_prefill "
+                             "(mirror of the Engine contract)")
+        self._lane_configs = derive_lane_configs(
+            (), cfg.step_token_budget, cfg.prefill_chunk)
 
     # ----------------------------------------------------- engine interface
     @property
@@ -136,16 +150,31 @@ class SimEngine:
     def has_pending_prefill(self) -> bool:
         return bool(self._pending_prefills)
 
+    @property
+    def admission_capacity(self) -> int:
+        """Mirror of Engine.admission_capacity: max chunk lanes one step
+        can carry under the token budget (1 = legacy FIFO)."""
+        return self._lane_configs[-1]
+
     def _advance_pending_prefill(self) -> None:
-        if not self._pending_prefills:
-            return
-        st = self._pending_prefills[0]
-        st.next_pos = min(st.next_pos + self.cfg.prefill_chunk,
-                          len(st.prompt))
-        self.prefill_chunk_steps += 1
-        if st.next_pos >= len(st.prompt):
-            st.done = True
-            self._pending_prefills.pop(0)
+        """Account the chunk lanes riding this decode step: the same
+        ``pack_chunk_lanes`` the live engine uses selects which pending
+        prefills advance (oldest-first under ``step_token_budget``, with
+        the starvation bound), each by one ``prefill_chunk``."""
+        lanes, _ = pack_chunk_lanes(
+            self._pending_prefills, budget=self.cfg.step_token_budget,
+            chunk_bucket=lambda st: self.cfg.prefill_chunk,
+            lane_configs=self._lane_configs,
+            starvation_bound=self.cfg.prefill_starvation_bound)
+        if lanes:
+            self.mixed_steps_executed += 1
+        for st in lanes:
+            st.next_pos = min(st.next_pos + self.cfg.prefill_chunk,
+                              len(st.prompt))
+            self.prefill_chunk_steps += 1
+            if st.next_pos >= len(st.prompt):
+                st.done = True
+                self._pending_prefills.remove(st)
 
     def _sample_spec(self) -> _BranchSpec:
         w = self.workload
@@ -280,15 +309,31 @@ class SimPRM:
         return [self.engine.reward_of(h) for h in handles]
 
 
+def poisson_burst_arrivals(num_requests: int, *, burst_gap: int,
+                           burst_mean: float, seed: int = 7) -> List[int]:
+    """Arrival clocks for bursts every ``burst_gap`` decode steps, each of
+    1 + Poisson(burst_mean) simultaneous requests — the bursty workload
+    the token-budget chunk lanes are sized for (docs/scheduling.md)."""
+    rng = np.random.default_rng(seed)
+    times, t = [], 0
+    while len(times) < num_requests:
+        times += [t] * (1 + int(rng.poisson(burst_mean)))
+        t += burst_gap
+    return sorted(times[:num_requests])
+
+
 def run_sim_experiment(policy: str, n: int, *, num_requests: int = 40,
                        arrival_gap: int = 0, workload: SimWorkload = None,
                        engine_cfg: SimEngineConfig = None, window: int = 400,
                        max_tokens: int = 1 << 30, seed: int = 0,
-                       m: int = 0, alpha: float = 0.5, beta: int = 0):
+                       m: int = 0, alpha: float = 0.5, beta: int = 0,
+                       arrival_times: Optional[List[int]] = None):
     """One simulated serving run; returns (metrics, accuracy).
 
     ``arrival_gap`` is the decode-step gap between request arrivals (the
     decode-step analogue of the paper's 1 vs 4 requests/second rates).
+    ``arrival_times`` overrides it with an explicit per-request arrival
+    clock (e.g. Poisson bursts for the chunk-lane ttfb experiments).
     """
     from ..core import OraclePRM, Scheduler, SchedulerConfig
     from ..data.tasks import extract_answer
@@ -305,7 +350,9 @@ def run_sim_experiment(policy: str, n: int, *, num_requests: int = 40,
         task = SimTask(answer=int(rng.integers(0, 10)))
         prompt = [tk.BOS] + [tk.digit(0)] * (workload.prompt_len - 2) \
             + [tk.EQUALS]
-        req = sch.submit(prompt, payload=task, arrival=i * arrival_gap)
+        arrival = (arrival_times[i] if arrival_times is not None
+                   else i * arrival_gap)
+        req = sch.submit(prompt, payload=task, arrival=arrival)
         engine.tasks[req.request_id] = task
     metrics = sch.run(max_steps=200_000_000)
     correct = sum(

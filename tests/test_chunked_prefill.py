@@ -269,6 +269,89 @@ def test_fused_mixed_step_matches_decode_path(family):
     np.testing.assert_allclose(v_f, v_d, rtol=1e-4, atol=1e-5)
 
 
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_multi_lane_matches_single_lane(family):
+    """Token-budget lane packing (step_token_budget for 2 concurrent chunk
+    lanes) must reproduce the single-lane path's harvested logits, final
+    SSM state AND K/V page contents for every admitted prompt — across
+    ragged lengths and all model families."""
+    cfg = tiny_config(**FAMILIES[family])
+    rng = np.random.default_rng(1)
+    prompts = [[int(t) for t in rng.integers(2, cfg.vocab_size, size=s)]
+               for s in (13, 9, 17)]
+
+    _, _, single = _engine(cfg)                      # legacy FIFO lane
+    want = [single.prefill(p) for p in prompts]
+
+    _, _, multi = _engine(cfg, step_token_budget=16)  # 2 lanes x bucket 8
+    assert multi.admission_capacity == 2
+    sts = [multi.begin_prefill(p) for p in prompts]
+    single_steps = sum(-(-len(p) // 8) for p in prompts)
+    steps = 0
+    while any(not st.done for st in sts):
+        multi.decode_step()
+        steps += 1
+    assert steps < single_steps, "packing never carried 2 lanes"
+    for st, p, (b_w, lg_w, ssm_w) in zip(sts, prompts, want):
+        b_m, lg_m, ssm_m = multi.finish_prefill(st)
+        np.testing.assert_allclose(np.asarray(lg_w), np.asarray(lg_m),
+                                   rtol=1e-4, atol=1e-4)
+        _assert_ssm_close(ssm_w, ssm_m)
+        if cfg.uses_attention:
+            kw, vw = _gather_prefix(single, b_w, len(p))
+            km, vm = _gather_prefix(multi, b_m, len(p))
+            np.testing.assert_allclose(kw, km, rtol=1e-4, atol=1e-5)
+            np.testing.assert_allclose(vw, vm, rtol=1e-4, atol=1e-5)
+        multi.release_prefix(b_m)
+    assert multi.allocator.used_pages == 0
+
+
+def test_lane_budget_one_chunk_is_bit_exact_with_fifo_engine():
+    """Acceptance: step_token_budget sized for exactly one chunk keeps the
+    live engine bit-exact with the legacy FIFO lane — same branch tokens,
+    same harvested logits, same rng stream."""
+    cfg = tiny_config()
+    prompt_a = [2, 5, 9, 13, 7]
+    prompt_b = [3, 8, 11, 6, 12, 4, 10, 9, 2, 7, 5, 13, 3]
+
+    def run(budget):
+        _, _, eng = _engine(cfg, temperature=0.0, step_token_budget=budget)
+        assert eng.admission_capacity == 1
+        blocks, lg, ssm = eng.prefill(prompt_a)
+        h = eng.spawn_branch(0, blocks, lg, ssm, len(prompt_a))
+        for _ in range(3):
+            eng.decode_step()
+        st = eng.begin_prefill(prompt_b)
+        while not st.done:
+            eng.decode_step()
+        _, lg_b, _ = eng.finish_prefill(st)
+        return list(h.tokens), np.asarray(lg_b)
+
+    toks_fifo, lg_fifo = run(0)
+    toks_one, lg_one = run(8)            # budget == one bucket-8 chunk
+    assert toks_fifo == toks_one
+    np.testing.assert_array_equal(lg_fifo, lg_one)
+
+
+def test_lane_budget_below_bucket_rejected():
+    cfg = tiny_config()
+    with pytest.raises(ValueError, match="cannot carry even one full"):
+        _engine(cfg, step_token_budget=4)            # max bucket is 8
+    with pytest.raises(ValueError, match="must include 1"):
+        _engine(cfg, step_token_budget=16, chunk_lane_configs=(2,))
+    # configs the packer can never fill would make admission_capacity
+    # over-reserve prompts' pages — rejected at construction
+    with pytest.raises(ValueError, match="exceed the"):
+        _engine(cfg, chunk_lane_configs=(1, 4))      # budget 0: FIFO only
+    with pytest.raises(ValueError, match="exceed the"):
+        _engine(cfg, step_token_budget=16, chunk_lane_configs=(1, 8))
+    # a budget without chunked admission is contradictory: sync prefill
+    # has no lanes, and capacity > 1 would drain the scheduler's arrival
+    # queue in one tick
+    with pytest.raises(ValueError, match="requires chunked_prefill"):
+        _engine(cfg, chunked_prefill=False, step_token_budget=16)
+
+
 def test_mixed_step_kernel_validated():
     cfg = tiny_config()
     with pytest.raises(AssertionError):

@@ -93,7 +93,7 @@ def test_prefill_state_continues_decode(rng):
 # Zeroing dt makes a position's state transition an exact identity
 # (decay exp(0·a) = 1, update dt·B·x = 0) — the property that lets
 # right-padded chunk rows ride the serving mixed step without polluting
-# the recurrence (see docs/serving.md, "Masked-dt SSM chunking").
+# the recurrence (see docs/kernels.md, "ssd_scan" masked-dt contract).
 
 
 @settings(max_examples=20, deadline=None)

@@ -1,6 +1,8 @@
 """Scheduler/engine invariants from Algorithm 1: early stop at exactly M,
-phase-1 pruning capped at beta per round, and suspend/resume round-tripping
-SSM state bit-exactly."""
+phase-1 pruning capped at beta per round, suspend/resume round-tripping
+SSM state bit-exactly, and the token-budget chunk-lane packer (budget
+never exceeded, bounded starvation, O(buckets x lane-configs) compiles —
+see docs/scheduling.md)."""
 import jax
 import numpy as np
 import pytest
@@ -11,8 +13,11 @@ from repro.data import tokenizer as tk
 from repro.data.tasks import extract_answer
 from repro.models import Model
 from repro.serving import Engine, EngineConfig, SamplingParams
+from repro.serving.engine import (ChunkedPrefillState, derive_lane_configs,
+                                  pack_chunk_lanes)
 from repro.serving.simulator import (SimEngine, SimEngineConfig, SimPRM,
-                                     SimTask, SimWorkload)
+                                     SimTask, SimWorkload,
+                                     run_sim_experiment)
 
 from conftest import tiny_config
 
@@ -151,6 +156,162 @@ def test_ssm_requests_admit_async_through_scheduler(family_kw):
     assert len(eng._prefill_cache) == 0          # exact path never used
     assert eng.allocator.used_pages == 0
     assert all(s is None for s in eng.slots)
+
+
+# --------------------------------------------------- token-budget chunk lanes
+
+
+def _pending(*remainings):
+    """ChunkedPrefillStates with given remaining token counts (packer only
+    reads ``remaining`` and ``passed_over``)."""
+    return [ChunkedPrefillState(prompt=[0] * r, blocks=None)
+            for r in remainings]
+
+
+def _bucket_for(buckets):
+    def f(st):
+        n = min(8, st.remaining)            # prefill_chunk = 8
+        for b in buckets:
+            if b >= n:
+                return b
+        raise AssertionError(n)
+    return f
+
+
+def test_lane_packer_budget_never_exceeded():
+    """Randomized packer invariants: padded chunk rows never exceed the
+    budget, lane counts come from the allowed configs, selection is an
+    oldest-first subsequence of the queue."""
+    rng = np.random.default_rng(0)
+    buckets = (4, 8)
+    for _ in range(300):
+        budget = int(rng.choice([8, 12, 16, 24, 32, 64]))
+        configs = derive_lane_configs((), budget, buckets[-1])
+        pending = _pending(*(int(r) for r in
+                             rng.integers(1, 30, size=rng.integers(1, 9))))
+        for st in pending:                  # arbitrary starvation history
+            st.passed_over = int(rng.integers(0, 6))
+        selected, bucket = pack_chunk_lanes(
+            pending, budget=budget, chunk_bucket=_bucket_for(buckets),
+            lane_configs=configs, starvation_bound=4)
+        assert selected, "budget >= max bucket always fits the oldest"
+        assert bucket * len(selected) <= budget
+        assert len(selected) in configs
+        assert bucket == max(_bucket_for(buckets)(st) for st in selected)
+        idx = [pending.index(st) for st in selected]
+        assert idx == sorted(idx), "selection must keep queue order"
+        assert all(st.passed_over == 0 for st in selected)
+
+
+def test_lane_packer_starvation_bound_honored():
+    """A request's chunk that doesn't fit the remaining budget may be
+    overtaken by smaller chunks behind it — but only ``starvation_bound``
+    times; then nothing behind it packs until it is served."""
+    buckets, bound = (4, 8), 3
+    # budget 8: A (bucket 4) + C (bucket 4) pack together; B's bucket-8
+    # chunk never fits beside A, so C keeps overtaking B — until B starves
+    pending = _pending(4, 8, 4)
+    a, b, c = pending
+    for i in range(bound):
+        selected, bucket = pack_chunk_lanes(
+            pending, budget=8, chunk_bucket=_bucket_for(buckets),
+            lane_configs=(1, 2), starvation_bound=bound)
+        assert selected == [a, c] and bucket == 4   # C overtakes B
+        assert b.passed_over == i + 1
+    # B is starved now: the packer refuses to pack past it, reserving the
+    # next step's budget — C no longer overtakes
+    selected, bucket = pack_chunk_lanes(
+        pending, budget=8, chunk_bucket=_bucket_for(buckets),
+        lane_configs=(1, 2), starvation_bound=bound)
+    assert selected == [a] and c not in selected
+    # once A drains, the starved B is served immediately
+    pending.remove(a)
+    selected, bucket = pack_chunk_lanes(
+        pending, budget=8, chunk_bucket=_bucket_for(buckets),
+        lane_configs=(1, 2), starvation_bound=bound)
+    assert selected == [b] and bucket == 8
+
+
+def test_lane_packer_compile_count_stays_bucketed():
+    """Engine-level acceptance: ragged prompts admitted through multi-lane
+    packing trace at most len(buckets) x len(lane_configs) mixed-step
+    shapes, each within the token budget."""
+    cfg = tiny_config()
+    model = Model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    eng = Engine(model, params, EngineConfig(
+        page_size=4, num_pages=512, max_slots=2, max_pages_per_branch=24,
+        eos_id=1, prefill_chunk=8, step_token_budget=16))
+    rng = np.random.default_rng(0)
+    sts = [eng.begin_prefill([int(t) for t in
+                              rng.integers(2, cfg.vocab_size, size=s)])
+           for s in range(3, 19)]          # 16 distinct ragged lengths
+    while any(not st.done for st in sts):
+        eng.decode_step()
+    bound = len(eng._buckets) * len(eng._lane_configs)
+    assert eng.prefill_compile_count <= bound
+    for bucket, lanes in eng._buckets_used:
+        assert bucket * lanes <= 16, "a traced shape exceeded the budget"
+        assert lanes in eng._lane_configs
+    for st in sts:
+        eng.release_prefix(st.blocks)
+    assert eng.allocator.used_pages == 0
+
+
+def test_lane_budget_never_exceeded_through_sim_engine():
+    """SimEngine mirror: per decode step, at most budget // chunk pending
+    prefills advance."""
+    ec = SimEngineConfig(max_slots=8, page_size=8, num_pages=4096,
+                         prefill_chunk=8, step_token_budget=24)
+    eng = SimEngine(ec, SimWorkload(prompt_len=40), seed=0)
+    assert eng.admission_capacity == 3
+    sts = [eng.begin_prefill([0] * 40) for _ in range(6)]
+    while any(not st.done for st in sts):
+        before = eng.prefill_chunk_steps
+        eng.decode_step()
+        assert eng.prefill_chunk_steps - before <= 24 // 8
+    for st in sts:
+        eng.release_prefix(st.blocks)
+    assert eng.allocator.used_pages == 0
+
+
+def test_lane_budget_one_chunk_is_bit_exact_with_legacy_sim():
+    """Acceptance: step_token_budget = one chunk reproduces the legacy
+    single-lane FIFO run metric-for-metric (same seeds, bursty
+    arrivals)."""
+    w = SimWorkload(mean_len=100, sigma_len=0.5, prompt_len=128)
+    times = [0, 0, 0, 20, 20, 40, 40, 40, 40, 60]
+    runs = []
+    for budget in (0, 64):
+        ec = SimEngineConfig(max_slots=32, page_size=16, num_pages=65536,
+                             prefill_chunk=64, step_token_budget=budget)
+        m, acc = run_sim_experiment("sart", 4, num_requests=10, workload=w,
+                                    engine_cfg=ec, window=50, seed=3,
+                                    arrival_times=times)
+        runs.append((m, acc))
+    (m0, a0), (m1, a1) = runs
+    assert a0 == a1 and m0["clock"] == m1["clock"]
+    for r0, r1 in zip(m0["requests"], m1["requests"]):
+        assert r0 == r1, "budget=one-chunk diverged from legacy FIFO"
+
+
+def test_lane_multi_beats_single_ttfb_under_bursts():
+    """The tentpole claim at sim scale: under Poisson-burst arrivals,
+    multi-lane token-budget packing strictly improves median
+    time-to-first-branch over the single FIFO lane."""
+    from repro.core.scheduler import percentile_latency
+    from repro.serving.simulator import poisson_burst_arrivals
+    w = SimWorkload(mean_len=400, sigma_len=0.6, prompt_len=512)
+    times = poisson_burst_arrivals(24, burst_gap=30, burst_mean=5)
+    ttfb = {}
+    for name, budget in (("single", 64), ("multi", 256)):
+        ec = SimEngineConfig(max_slots=128, num_pages=500000,
+                             prefill_chunk=64, step_token_budget=budget)
+        m, _ = run_sim_experiment("sart", 4, num_requests=24, workload=w,
+                                  engine_cfg=ec, window=100, seed=0,
+                                  arrival_times=times)
+        ttfb[name] = percentile_latency(m, 50, "ttfb")
+    assert ttfb["multi"] < ttfb["single"]
 
 
 @pytest.mark.parametrize("family_kw", [
