@@ -8,7 +8,10 @@ arrivals for single-lane vs token-budget multi-lane chunk scheduling
 (``SimEngineConfig.step_token_budget`` — see docs/scheduling.md): under
 bursty admission the single FIFO chunk lane serializes prompts one chunk
 per decode step, so the lane budget is what bounds time-to-first-branch at
-high arrival rates."""
+high arrival rates. The burst prompts share a few-shot header, and each
+lane configuration additionally runs with the radix prefix cache on
+(``SimEngineConfig.prefix_cache`` — ``*_cached`` rows with their hit
+rate): warm admissions skip the cached header's chunk steps entirely."""
 from __future__ import annotations
 
 import numpy as np
@@ -21,9 +24,14 @@ from repro.serving.simulator import (SimEngineConfig, SimWorkload,
 
 def run_burst(quick: bool = False, seed: int = 0):
     """ttfb under Poisson-burst arrivals: step_token_budget set to one
-    chunk (bit-exact legacy single-lane FIFO) vs multi-lane packing."""
+    chunk (bit-exact legacy single-lane FIFO) vs multi-lane packing, each
+    with the radix prefix cache off vs on. The burst prompts share a
+    few-shot header (``SimWorkload.prompt_tail`` distinct tokens per
+    request), so warm admissions skip the cached header's chunk steps —
+    the cache rows report the hit rate alongside ttfb."""
     w = SimWorkload(mean_len=200 if quick else 400, sigma_len=0.6,
-                    overthink_p=0.12, correct_p=0.55, prompt_len=512)
+                    overthink_p=0.12, correct_p=0.55, prompt_len=512,
+                    prompt_tail=64)
     nreq = 12 if quick else 24
     chunk = 64
     # high arrival rate: bursts of ~6 prompts every 30 steps; each prompt
@@ -31,17 +39,23 @@ def run_burst(quick: bool = False, seed: int = 0):
     times = poisson_burst_arrivals(nreq, burst_gap=30, burst_mean=5)
     rows = []
     for lanes_name, budget in [("single", chunk), ("multi4", 4 * chunk)]:
-        ec = SimEngineConfig(max_slots=128, num_pages=500000,
-                             prefill_chunk=chunk, step_token_budget=budget)
-        m, acc = run_sim_experiment(
-            "sart", 4, num_requests=nreq, workload=w, engine_cfg=ec,
-            window=100, seed=seed, arrival_times=times)
-        rows.append({
-            "lanes": lanes_name, "budget": budget, "accuracy": acc,
-            "p50": percentile_latency(m, 50),
-            "ttfb50": percentile_latency(m, 50, "ttfb"),
-            "ttfb97": percentile_latency(m, 97, "ttfb"),
-        })
+        for cached in (False, True):
+            ec = SimEngineConfig(max_slots=128, num_pages=500000,
+                                 prefill_chunk=chunk,
+                                 step_token_budget=budget,
+                                 prefix_cache=cached)
+            m, acc = run_sim_experiment(
+                "sart", 4, num_requests=nreq, workload=w, engine_cfg=ec,
+                window=100, seed=seed, arrival_times=times)
+            pc = m.get("prefix_cache")
+            rows.append({
+                "lanes": lanes_name, "budget": budget, "accuracy": acc,
+                "cached": cached,
+                "hit_rate": pc["hit_rate"] if pc else 0.0,
+                "p50": percentile_latency(m, 50),
+                "ttfb50": percentile_latency(m, 50, "ttfb"),
+                "ttfb97": percentile_latency(m, 97, "ttfb"),
+            })
     return rows
 
 
@@ -92,16 +106,29 @@ def main(quick: bool = False):
                   f"acc_delta={sa['accuracy'] - sc['accuracy']:+.2f}")
     burst = run_burst(quick=quick)
     for r in burst:
-        print(f"fig5_burst_{r['lanes']}_budget{r['budget']},"
+        cache_tag = "_cached" if r["cached"] else ""
+        print(f"fig5_burst_{r['lanes']}_budget{r['budget']}{cache_tag},"
               f"{r['ttfb50']:.0f},ttfb97={r['ttfb97']:.0f};"
-              f"p50={r['p50']:.0f};acc={r['accuracy']:.2f}")
-    # always print the acceptance row — a 0/NaN denominator is itself a
+              f"p50={r['p50']:.0f};acc={r['accuracy']:.2f};"
+              f"hit_rate={r['hit_rate']:.2f}")
+    # always print the acceptance rows — a 0/NaN denominator is itself a
     # signal and must not silently drop the headline metric
-    single, multi = burst[0], burst[1]
+    by = {(r["lanes"], r["cached"]): r for r in burst}
+    single, multi = by[("single", False)], by[("multi4", False)]
     speedup = (single["ttfb50"] / multi["ttfb50"] if multi["ttfb50"] > 0
                else float("inf") if single["ttfb50"] > 0 else float("nan"))
     print(f"fig5_burst_ttfb50_speedup_multi_vs_single,{speedup:.2f},"
           f"budget={multi['budget']}")
+    # prefix-cache acceptance: cached vs uncached ttfb50 on the shared-
+    # few-shot-header burst (single lane, where admission throughput is
+    # the bottleneck the cache relieves)
+    cached = by[("single", True)]
+    cache_speedup = (single["ttfb50"] / cached["ttfb50"]
+                     if cached["ttfb50"] > 0
+                     else float("inf") if single["ttfb50"] > 0
+                     else float("nan"))
+    print(f"fig5_burst_ttfb50_speedup_cached_vs_uncached,"
+          f"{cache_speedup:.2f},hit_rate={cached['hit_rate']:.2f}")
 
 
 if __name__ == "__main__":

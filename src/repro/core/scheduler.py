@@ -248,9 +248,13 @@ class Scheduler:
         families (attention, ssm, hybrid — ssm/hybrid chunks ride the
         masked-dt mixed step): admission allocates the prompt's pages and
         enqueues its chunks; they piggyback on decode steps instead of
-        stalling the batch. Only engines explicitly configured with
-        ``chunked_prefill=False`` return an already-done state and keep the
-        seed's one-tick synchronous accounting."""
+        stalling the batch. With the engine's prefix cache enabled,
+        ``begin_prefill`` serves the longest cached page-aligned prompt
+        prefix from shared pages, so the state arrives with ``next_pos``
+        already past the cached tokens and fewer chunks to drain. Only
+        engines explicitly configured with ``chunked_prefill=False``
+        return an already-done state and keep the seed's one-tick
+        synchronous accounting."""
         req.prefill_state = self.engine.begin_prefill(req.prompt)
         if req.prefill_state.done:
             req.first_service = self.clock    # seed-exact sync accounting
@@ -463,9 +467,18 @@ class Scheduler:
                 "answer": req.final_answer,
                 "response_lengths": [len(t) for t, _ in req.completed],
             })
-        return {"requests": recs, "timeline": self.timeline,
-                "clock": self.clock,
-                "decode_steps": self.engine.decode_steps_executed}
+        out = {"requests": recs, "timeline": self.timeline,
+               "clock": self.clock,
+               "decode_steps": self.engine.decode_steps_executed}
+        # radix prefix-cache counters (hit rate, evictions, ...) when the
+        # engine serves admission through one — cached-prefix admission is
+        # part of the scheduling story (warm hits skip chunk steps), so
+        # the metrics dict carries it next to the latency percentiles
+        stats = getattr(self.engine, "prefix_cache_stats", None)
+        pc = stats() if callable(stats) else None
+        if pc is not None:
+            out["prefix_cache"] = pc
+        return out
 
 
 def percentile_latency(metrics: Dict, q: float, key: str = "e2e") -> float:

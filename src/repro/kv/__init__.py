@@ -1,3 +1,5 @@
 from .paged import BranchBlocks, OutOfPagesError, PageAllocator
+from .prefix_cache import CacheNode, PrefixCache, default_page_hash
 
-__all__ = ["BranchBlocks", "OutOfPagesError", "PageAllocator"]
+__all__ = ["BranchBlocks", "OutOfPagesError", "PageAllocator",
+           "CacheNode", "PrefixCache", "default_page_hash"]

@@ -28,6 +28,15 @@ here):
     (including a trailing partial page); writers must ``cow_last_page``
     (or let ``append_token`` do it) before writing into a shared partial
     page. Release is eager and idempotent on an emptied block list.
+  * **Decref-to-LRU vs decref-to-free**: with a ``PrefixCache`` attached
+    (``attach_cache``), a cache-tracked page whose refcount drops to 0 is
+    parked on the cache's LRU free-list — K/V resident, resurrectable on
+    hash hit — instead of the free list; releasing a ``BranchBlocks``
+    holding shared prefix pages therefore never recycles (and lets the
+    engine overwrite) pages the cache still references. The partition
+    invariant becomes live + free + LRU == all pages, and ``free_pages``
+    counts LRU pages as reclaimable because ``alloc`` evicts them under
+    pressure.
 """
 from __future__ import annotations
 
@@ -59,19 +68,36 @@ class PageAllocator:
         self.page_size = page_size
         self._free: List[int] = list(range(num_pages - 1, -1, -1))
         self._refs: Dict[int, int] = {}
+        self._cache = None                 # optional PrefixCache
+
+    def attach_cache(self, cache) -> None:
+        """Attach a ``PrefixCache`` (called by its constructor): decrefs
+        of tracked pages park on the cache's LRU free-list, and ``alloc``
+        evicts from it when the true free list runs dry."""
+        assert self._cache is None, "allocator already has a prefix cache"
+        self._cache = cache
 
     # ----------------------------------------------------------- primitives
     @property
     def free_pages(self) -> int:
-        return len(self._free)
+        """Pages an allocation can draw on: the free list plus the prefix
+        cache's refcount-0 LRU pages, which ``alloc`` evicts on demand."""
+        return len(self._free) + \
+            (self._cache.evictable if self._cache is not None else 0)
 
     @property
     def used_pages(self) -> int:
-        return self.num_pages - len(self._free)
+        """Pages referenced by live block tables (cached-idle LRU pages
+        are warm *free* capacity, not usage — a drained system reports 0
+        even while the cache keeps pages resident)."""
+        return self.num_pages - self.free_pages
 
     def alloc(self) -> int:
         if not self._free:
-            raise OutOfPagesError("KV pool exhausted")
+            if self._cache is not None and self._cache.evictable:
+                self._cache.evict_one()    # LRU page -> self._free
+            else:
+                raise OutOfPagesError("KV pool exhausted")
         pid = self._free.pop()
         self._refs[pid] = 1
         return pid
@@ -84,7 +110,31 @@ class PageAllocator:
         assert self._refs[pid] >= 0, f"page {pid} double-free"
         if self._refs[pid] == 0:
             del self._refs[pid]
+            # decref-to-LRU vs decref-to-free: a cache-tracked page keeps
+            # its K/V resident for resurrection; recycling it through the
+            # free list would let the next allocation overwrite state the
+            # cache still maps
+            if self._cache is not None and self._cache.retain(pid):
+                return
             self._free.append(pid)
+
+    def resurrect(self, pid: int) -> None:
+        """Revive a refcount-0 cached page off the cache's LRU list (hash
+        hit): it re-enters the live set with one reference, K/V intact —
+        the zero-recompute, zero-rewrite path warm admission hits. (No
+        free-list membership assert here: that would be an O(num_pages)
+        scan on the warm path; ``check_invariants`` covers the partition.)
+        """
+        assert pid not in self._refs, f"page {pid} already live"
+        self._refs[pid] = 1
+
+    def reclaim(self, pid: int) -> None:
+        """Return an unreferenced cache-evicted page to the free list
+        (the write half of the cache's eviction valve — symmetric with
+        ``resurrect``, so the free list is only ever grown through
+        allocator methods that can assert the page is dead)."""
+        assert pid not in self._refs, f"page {pid} still referenced"
+        self._free.append(pid)
 
     def refcount(self, pid: int) -> int:
         return self._refs.get(pid, 0)
@@ -169,8 +219,11 @@ class PageAllocator:
 
     def release(self, b: BranchBlocks) -> None:
         """Eagerly release a terminated branch's pages (shared pages only
-        drop a reference; freed once all siblings terminate)."""
-        for pid in b.pages:
+        drop a reference; freed once all siblings terminate). Pages are
+        decref'd leaf-first so cache-tracked chains idle onto the LRU list
+        deepest-page-first — eviction then reclaims leaves before their
+        parents and keeps surviving chains walkable."""
+        for pid in reversed(b.pages):
             self.decref(pid)
         b.pages = []
         b.length = 0
@@ -180,7 +233,12 @@ class PageAllocator:
     def check_invariants(self) -> None:
         live = set(self._refs)
         free = set(self._free)
+        lru = set(self._cache.lru_pages) if self._cache is not None else set()
         assert not (live & free), "page both live and free"
+        assert not (live & lru), "page both live and cached-idle"
+        assert not (free & lru), "page both free and cached-idle"
         assert len(free) == len(self._free), "duplicate free pages"
-        assert live | free == set(range(self.num_pages)), "page leak"
+        assert live | free | lru == set(range(self.num_pages)), "page leak"
         assert all(r > 0 for r in self._refs.values())
+        if self._cache is not None:
+            self._cache.check_invariants()

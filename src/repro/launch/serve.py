@@ -72,7 +72,7 @@ def serve(policy: str, n: int, num_requests: int, rate_gap: int,
           ckpt: Optional[str], prm_kind: str, window: int, max_tokens: int,
           max_slots: int, seed: int, temperature: float,
           arch: str = "dense", mixed_step_kernel: str = "fused",
-          step_token_budget: int = 0) -> dict:
+          step_token_budget: int = 0, prefix_cache: bool = False) -> dict:
     import numpy as np
 
     from ..core import OraclePRM, RewardHeadPRM, Scheduler, SchedulerConfig
@@ -87,7 +87,7 @@ def serve(policy: str, n: int, num_requests: int, rate_gap: int,
         max_pages_per_branch=32, eos_id=tk.EOS,
         sampling=SamplingParams(temperature=temperature, top_p=0.95),
         seed=seed, mixed_step_kernel=mixed_step_kernel,
-        step_token_budget=step_token_budget),
+        step_token_budget=step_token_budget, prefix_cache=prefix_cache),
         prm_params=prm_head)
     if prm_kind == "head" and prm_head is not None:
         prm = RewardHeadPRM(engine)
@@ -130,6 +130,10 @@ def serve(policy: str, n: int, num_requests: int, rate_gap: int,
         "chunk_lanes_per_mixed_step": (
             engine.prefill_chunk_steps / engine.mixed_steps_executed
             if engine.mixed_steps_executed else 0.0),
+        # radix prefix-cache counters (None with --prefix-cache off):
+        # hit_rate > 0 under shared-header workloads means warm admission
+        # skipped those tokens' chunk compute and K/V writes entirely
+        "prefix_cache": engine.prefix_cache_stats(),
     }
     return out
 
@@ -157,6 +161,10 @@ def main():
                     help="max chunk-row tokens per mixed step, drawn from "
                          "multiple in-flight prefills (token-budget lane "
                          "scheduling); 0 = legacy one-FIFO-chunk-per-step")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="radix page-hash prompt prefix cache: admission "
+                         "reuses cached page-aligned prefixes (shared "
+                         "headers) instead of recomputing them")
     ap.add_argument("--prm", default="oracle", choices=["oracle", "head"])
     ap.add_argument("--window", type=int, default=8)
     ap.add_argument("--max-tokens", type=int, default=96)
@@ -167,7 +175,8 @@ def main():
     out = serve(args.policy, args.n, args.requests, args.rate_gap,
                 args.ckpt, args.prm, args.window, args.max_tokens,
                 args.slots, args.seed, args.temperature, args.arch,
-                args.mixed_step_kernel, args.step_token_budget)
+                args.mixed_step_kernel, args.step_token_budget,
+                args.prefix_cache)
     print(json.dumps(out, indent=2))
 
 

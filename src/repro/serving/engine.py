@@ -39,6 +39,17 @@ docs/scheduling.md, which deep-link here):
     K/V page writes and the ``slot_valid`` mask freezes per-slot SSM rows,
     so empty slots, suspended branches and standalone chunk draining leave
     live state bit-identical.
+  * **Prefix-cache admission skips served tokens**: with
+    ``EngineConfig.prefix_cache``, ``begin_prefill`` increfs the longest
+    cached page-aligned prefix into the request's block list and chunks
+    from the first uncached token; warm hits write zero K/V bytes and
+    burn zero prefill FLOPs for shared tokens, and cache-on vs cache-off
+    stays bit-exact on tokens/logits (docs/scheduling.md
+    "Prefix caching").
+  * **One page dispatch per step**: the step's CoW page copies and all
+    lanes' chunk K/V writes execute inside the single jit'd step program
+    (fused gather/scatter with OOB-sentinel padding) — no separate
+    host-issued device copies, whatever the lane count.
 """
 from __future__ import annotations
 
@@ -52,7 +63,8 @@ import numpy as np
 
 from ..kernels.flash_prefill.ops import paged_flash_prefill
 from ..kernels.paged_attention.ops import paged_attention
-from ..kv import BranchBlocks, OutOfPagesError, PageAllocator
+from ..kv import (BranchBlocks, OutOfPagesError, PageAllocator,
+                  PrefixCache)
 from ..models.attention import _project_qkv, _rotate
 from ..models.config import ModelConfig
 from ..models.layers import (apply_mlp, apply_norm, embed_tokens,
@@ -108,6 +120,16 @@ class EngineConfig:
     # no younger request overtakes it again; it then waits only on older
     # requests draining (oldest-first, bounded overtaking).
     prefill_starvation_bound: int = 4
+    # Radix page-hash prompt prefix cache (docs/scheduling.md "Prefix
+    # caching"): admission looks up the longest cached page-aligned prefix
+    # of the prompt, increfs those pages into the request's BranchBlocks
+    # and starts chunking at the first uncached token — warm hits skip
+    # both the prefill compute and the K/V page writes for shared tokens
+    # (few-shot headers, shared system prompts). Refcount-0 cached pages
+    # park on an LRU free-list and are evicted only under page pressure.
+    # Off by default: enabling changes admission *timing* (fewer chunk
+    # steps on hits), though tokens/logits stay bit-exact.
+    prefix_cache: bool = False
 
 
 @dataclasses.dataclass(eq=False)    # identity equality: the admission
@@ -121,7 +143,10 @@ class ChunkedPrefillState:
     running per-layer (conv, ssd) state between chunks; it ends up holding
     exactly what the exact-length path returns. ``harvested`` flips in
     ``finish_prefill`` — from then on the pages belong to the caller and
-    ``abort_prefill`` must not release them."""
+    ``abort_prefill`` must not release them. With the prefix cache,
+    ``next_pos`` starts at the cached page-aligned boundary
+    (``cached_tokens``) and ``ssm_snaps`` collects (conv, ssd) snapshots
+    at page-aligned chunk boundaries for cache insertion."""
     prompt: List[int]
     blocks: BranchBlocks
     next_pos: int = 0                # prompt tokens written so far
@@ -130,6 +155,8 @@ class ChunkedPrefillState:
     done: bool = False
     harvested: bool = False
     passed_over: int = 0             # consecutive packer skips (starvation)
+    cached_tokens: int = 0           # prefix tokens served from the cache
+    ssm_snaps: Optional[dict] = None  # {token boundary: (conv, ssd)}
 
     @property
     def remaining(self) -> int:
@@ -314,6 +341,13 @@ class Engine:
         self._lane_configs = derive_lane_configs(
             cfg.chunk_lane_configs, cfg.step_token_budget, buckets[-1])
         self.mixed_steps_executed = 0     # decode steps carrying >= 1 lane
+        if cfg.prefix_cache and not cfg.chunked_prefill:
+            raise ValueError(
+                "prefix_cache requires chunked_prefill=True — the exact-"
+                "length path writes every page via the dense scatter and "
+                "has no chunk-start offset to resume from")
+        self.prefix_cache = (PrefixCache(self.allocator)
+                             if cfg.prefix_cache else None)
 
     # ------------------------------------------------------------------ util
     @property
@@ -370,25 +404,49 @@ class Engine:
             ssm_state = (cache["conv"], cache["ssd"])  # [L,1,...]
         return blocks, logits, ssm_state
 
-    def _alloc_prompt_pages(self, s: int) -> BranchBlocks:
+    def _check_prompt_width(self, s: int) -> None:
         assert self.allocator.pages_for(max(s, 1)) <= \
             self.cfg.max_pages_per_branch, "prompt exceeds block-table width"
+
+    def _alloc_prompt_pages(self, s: int) -> BranchBlocks:
+        self._check_prompt_width(s)
         return self.allocator.alloc_prefix(s)
 
     # ------------------------------------------------- chunked prefill (new)
     def _new_chunked_state(self, prompt: List[int]) -> ChunkedPrefillState:
         """Allocate a prompt's pages and, for ssm/hybrid configs, the
-        zero-initialized per-layer running (conv, ssd) state its chunks
-        thread through the mixed step."""
-        st = ChunkedPrefillState(
-            prompt=list(prompt),
-            blocks=self._alloc_prompt_pages(len(prompt)))
+        per-layer running (conv, ssd) state its chunks thread through the
+        mixed step. With the prefix cache, the longest cached page-aligned
+        prefix is increfed into the block list and chunking starts at the
+        first uncached token (ssm/hybrid reuse is gated on a cached
+        boundary state to seed the recurrence); an OutOfPagesError on the
+        tail allocation rolls the acquired references back, so admission
+        stays all-or-nothing."""
         mc = self.model.cfg
+        cached, cached_ssm = 0, None
+        if self.prefix_cache is None:
+            blocks = self._alloc_prompt_pages(len(prompt))
+        else:
+            # width check BEFORE acquire: an oversized prompt must fail
+            # without acquiring references it would then leak
+            self._check_prompt_width(len(prompt))
+            blocks, cached_ssm = self.prefix_cache.admit(
+                prompt, need_state=mc.uses_ssm)
+            cached = blocks.num_shared * self.cfg.page_size
+        st = ChunkedPrefillState(prompt=list(prompt), blocks=blocks,
+                                 next_pos=cached, cached_tokens=cached)
+        if self.prefix_cache is not None:
+            st.ssm_snaps = {}
         if mc.uses_ssm:
-            conv, ssd = init_mamba2_state(mc, 1, self.model.dtype)
-            L = mc.num_layers
-            st.ssm_state = (jnp.zeros((L,) + conv.shape, self.model.dtype),
-                            jnp.zeros((L,) + ssd.shape, self.model.dtype))
+            if cached_ssm is not None:
+                st.ssm_state = cached_ssm
+                st.ssm_snaps[cached] = cached_ssm
+            else:
+                conv, ssd = init_mamba2_state(mc, 1, self.model.dtype)
+                L = mc.num_layers
+                st.ssm_state = (
+                    jnp.zeros((L,) + conv.shape, self.model.dtype),
+                    jnp.zeros((L,) + ssd.shape, self.model.dtype))
         return st
 
     def begin_prefill(self, prompt: List[int]) -> ChunkedPrefillState:
@@ -430,6 +488,12 @@ class Engine:
     @property
     def has_pending_prefill(self) -> bool:
         return bool(self._pending_prefills)
+
+    def prefix_cache_stats(self) -> Optional[Dict]:
+        """Radix-cache hit/eviction counters, or None with the cache off
+        (surfaced by the serve CLI and ``Scheduler.metrics``)."""
+        return (self.prefix_cache.stats()
+                if self.prefix_cache is not None else None)
 
     @property
     def prefill_compile_count(self) -> int:
@@ -494,20 +558,25 @@ class Engine:
                 idx.astype(np.int32), chunk_len)
 
     def _advance_chunks(self, sts: List[ChunkedPrefillState],
-                        piggyback: bool, bucket: int = 0):
+                        piggyback: bool, bucket: int = 0,
+                        cows: Sequence[tuple] = ()):
         """Run one chunk of each state in ``sts`` through the step program
         as concurrent lanes (``sts`` comes from ``pack_chunk_lanes``; the
         legacy path passes a single state). With ``piggyback`` the caller
-        (``decode_step``) supplies the live decode rows; standalone
-        draining pads with inert rows (sentinel block tables drop their
-        page writes, and the slot-validity mask freezes the per-slot SSM
-        states) so active branches are never advanced.
+        (``decode_step``) supplies the live decode rows plus the step's
+        CoW page copies (``cows``, folded into the same dispatch as the
+        chunk K/V writes — see ``_cow_arrays``); standalone draining pads
+        with inert rows (sentinel block tables drop their page writes,
+        and the slot-validity mask freezes the per-slot SSM states) so
+        active branches are never advanced.
 
         ssm/hybrid configs thread each lane's running per-layer (conv,
         ssd) state through the step (``chunk_*`` keys, stacked along a
         lane axis) and get it back advanced by exactly that lane's chunk
         length — pad rows are identity transitions under the masked-dt
-        scan."""
+        scan. With the prefix cache, each lane snapshots its SSM state at
+        page-aligned chunk boundaries and a finished prompt's full pages
+        are inserted into the radix."""
         cfg, mc = self.cfg, self.model.cfg
         B = cfg.max_slots
         if not bucket:
@@ -532,6 +601,7 @@ class Engine:
                 "ssd": jnp.concatenate([st.ssm_state[1] for st in sts], 1)}
         lane_buckets = (bucket,) * len(sts)
         self._buckets_used.add((bucket, len(sts)))
+        cow_src, cow_dst = self._cow_arrays(cows)
         next_tokens, hidden, logits, new_state = self._step_jit(
             self.params, self.state,
             jnp.asarray(np.concatenate([d_tokens] + [ln[0] for ln in lanes])),
@@ -541,7 +611,8 @@ class Engine:
             jnp.asarray(np.concatenate([d_lengths]
                                        + [ln[3] for ln in lanes])),
             self._next_rng(), chunk_state, jnp.asarray(chunk_lens),
-            jnp.asarray(slot_valid), lane_buckets=lane_buckets)
+            jnp.asarray(slot_valid), cow_src, cow_dst,
+            lane_buckets=lane_buckets)
         new_state = dict(new_state)
         if mc.uses_ssm:
             c_conv = new_state.pop("chunk_conv")      # [L, n_lanes, ...]
@@ -551,14 +622,23 @@ class Engine:
         self.state.update(new_state)
         self.prefill_chunk_steps += len(sts)
         self.mixed_steps_executed += 1
+        ps = cfg.page_size
         for i, st in enumerate(sts):
             cl = int(chunk_lens[i])
             st.next_pos += cl
+            if (mc.uses_ssm and st.ssm_snaps is not None
+                    and st.next_pos % ps == 0):
+                # a chunk boundary on a page boundary: this state can seed
+                # a future request resuming at exactly next_pos tokens
+                st.ssm_snaps[st.next_pos] = st.ssm_state
             if st.next_pos >= len(st.prompt):
                 st.done = True
                 st.last_logits = logits[B + i * bucket + cl - 1]
                 if st in self._pending_prefills:
                     self._pending_prefills.remove(st)
+                if self.prefix_cache is not None:
+                    self.prefix_cache.insert(st.prompt, st.blocks.pages,
+                                             st.ssm_snaps)
         return next_tokens, hidden
 
     def _make_prefill(self, s_pad: int):
@@ -726,9 +806,21 @@ class Engine:
         self.allocator.release(prefix_blocks)
 
     # ----------------------------------------------------------------- decode
+    def _cow_arrays(self, cows: Sequence[tuple]):
+        """Pack a step's (old, new) CoW page pairs into the fixed-shape
+        [max_slots] index arrays ``_step_fn`` consumes (each decode slot
+        CoWs at most once per step). Unused entries hold the OOB sentinel:
+        the fused gather/scatter drops them, so the pure-decode and mixed
+        shapes stay identical whether or not any copy happens."""
+        src = np.full((self.cfg.max_slots,), self.cfg.num_pages, np.int32)
+        dst = np.full((self.cfg.max_slots,), self.cfg.num_pages, np.int32)
+        for j, (old, new) in enumerate(cows):
+            src[j], dst[j] = old, new
+        return jnp.asarray(src), jnp.asarray(dst)
+
     def _step_fn(self, params, state, tokens, positions, block_tables,
                  lengths, rng, chunk_state, chunk_lens, slot_valid,
-                 lane_buckets: tuple = ()):
+                 cow_src, cow_dst, lane_buckets: tuple = ()):
         """One batched token step, generic in row count and lane count.
 
         Rows 0..max_slots-1 are the decode slots; any extra rows are the
@@ -762,10 +854,27 @@ class Engine:
         ``slot_valid`` masks the per-slot SSM state update of decode rows
         the same way, so inert rows (standalone chunk draining, empty
         slots) never perturb suspended or future occupants.
+
+        ``cow_src``/``cow_dst`` ([max_slots], OOB-sentinel padded) are the
+        step's copy-on-write page pairs, applied as ONE fused
+        gather/scatter inside this program before any K/V write — so a
+        mixed step's chunk page writes and its CoW copies all ride a
+        single device dispatch, however many lanes it carries (the
+        batching mirror of the old host-side ``cows`` loop).
         """
         model, mc, cfg = self.model, self.model.cfg, self.cfg
         B = tokens.shape[0]
         nS = cfg.max_slots
+        if mc.uses_attention:
+            # CoW before any write: sentinel dst rows drop (mode="drop");
+            # their src gathers clamp to a resident page (explicitly — OOB
+            # gather is backend-defined) and the garbage is discarded
+            src = jnp.minimum(cow_src, cfg.num_pages - 1)
+            state = dict(state)
+            state["k_pages"] = state["k_pages"].at[:, :, cow_dst].set(
+                state["k_pages"][:, :, src], mode="drop")
+            state["v_pages"] = state["v_pages"].at[:, :, cow_dst].set(
+                state["v_pages"][:, :, src], mode="drop")
         # static: lane row offsets into the step's row axis
         lane_off = []
         off = nS
@@ -934,32 +1043,29 @@ class Engine:
                 if cow is not None:
                     cows.append(cow)
                 self._refresh_block_table(h)
-            if cows:
-                old = jnp.asarray([c[0] for c in cows], jnp.int32)
-                new = jnp.asarray([c[1] for c in cows], jnp.int32)
-                self.state["k_pages"] = self.state["k_pages"].at[
-                    :, :, new].set(self.state["k_pages"][:, :, old])
-                self.state["v_pages"] = self.state["v_pages"].at[
-                    :, :, new].set(self.state["v_pages"][:, :, old])
         else:
+            cows = []
             for h in self.slots:
                 if h is not None:
                     h.blocks.length += 1
 
         # pack only after the page accounting above: an OutOfPagesError
         # abort must not charge skipped prefills' starvation counters for
-        # a step that never ran
+        # a step that never ran. The step's CoW copies ride the step
+        # program itself (one fused gather/scatter batched with the chunk
+        # K/V writes — no separate host dispatch, whatever the lane count)
         lanes, bucket = self._pack_lanes()
         if lanes:
             next_tokens, hidden = self._advance_chunks(
-                lanes, piggyback=True, bucket=bucket)
+                lanes, piggyback=True, bucket=bucket, cows=cows)
         else:
+            cow_src, cow_dst = self._cow_arrays(cows)
             next_tokens, hidden, _, new_state = self._step_jit(
                 self.params, self.state, jnp.asarray(self._tokens),
                 jnp.asarray(self._positions), jnp.asarray(self._block_tables),
                 jnp.asarray(self._lengths), self._next_rng(), {},
                 jnp.zeros((0,), jnp.int32), jnp.asarray(self._active),
-                lane_buckets=())
+                cow_src, cow_dst, lane_buckets=())
             self.state.update(new_state)
         self._last_hidden = hidden[:cfg.max_slots]
         self.decode_steps_executed += 1

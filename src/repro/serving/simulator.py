@@ -24,7 +24,8 @@ from typing import Callable, Dict, List, Optional
 import numpy as np
 
 from ..data import tokenizer as tk
-from ..kv import BranchBlocks, OutOfPagesError, PageAllocator
+from ..kv import (BranchBlocks, OutOfPagesError, PageAllocator,
+                  PrefixCache)
 from .engine import (BranchHandle, ChunkedPrefillState, derive_lane_configs,
                      pack_chunk_lanes)
 
@@ -40,6 +41,10 @@ class SimWorkload:
     prm_drift: float = 3.0            # reward drift magnitude (discriminability)
     prm_noise: float = 0.12
     prompt_len: int = 64
+    # Last ``prompt_tail`` prompt tokens are request-distinct (the rest is
+    # a shared few-shot header) — the workload shape prefix caching
+    # exploits. 0 keeps the legacy identical prompts.
+    prompt_tail: int = 0
     # NOTE: correctness is sampled independently of length (paper Obs. 1)
 
 
@@ -58,6 +63,11 @@ class SimEngineConfig:
     # at most step_token_budget // prefill_chunk.
     step_token_budget: int = 0
     prefill_starvation_bound: int = 4
+    # Radix page-hash prompt prefix cache, mirroring EngineConfig: warm
+    # admission skips the cached page-aligned prefix's chunk steps (and
+    # pages), so ttfb under shared-header workloads improves. Off by
+    # default (timing-identical to the seed).
+    prefix_cache: bool = False
 
 
 @dataclasses.dataclass
@@ -99,6 +109,11 @@ class SimEngine:
                              "(mirror of the Engine contract)")
         self._lane_configs = derive_lane_configs(
             (), cfg.step_token_budget, cfg.prefill_chunk)
+        if cfg.prefix_cache and not cfg.chunked_prefill:
+            raise ValueError("prefix_cache requires chunked_prefill "
+                             "(mirror of the Engine contract)")
+        self.prefix_cache = (PrefixCache(self.allocator)
+                             if cfg.prefix_cache else None)
 
     # ----------------------------------------------------- engine interface
     @property
@@ -120,10 +135,19 @@ class SimEngine:
     def begin_prefill(self, prompt: List[int]) -> ChunkedPrefillState:
         """Mirror of Engine.begin_prefill: allocate the prompt's pages up
         front, then account one ``prefill_chunk``-token chunk per decode
-        step. With chunking disabled the state completes immediately (the
-        scheduler then charges the legacy synchronous prefill tick)."""
-        blocks = self.allocator.alloc_prefix(len(prompt))
-        st = ChunkedPrefillState(prompt=list(prompt), blocks=blocks)
+        step. With the prefix cache, the longest cached page-aligned
+        prefix is increfed into the block list and chunk accounting starts
+        at the first uncached token (warm hits skip those chunk steps and
+        pages). With chunking disabled the state completes immediately
+        (the scheduler then charges the legacy synchronous prefill
+        tick)."""
+        if self.prefix_cache is None:
+            blocks, cached = self.allocator.alloc_prefix(len(prompt)), 0
+        else:
+            blocks, _ = self.prefix_cache.admit(prompt)
+            cached = blocks.num_shared * self.cfg.page_size
+        st = ChunkedPrefillState(prompt=list(prompt), blocks=blocks,
+                                 next_pos=cached, cached_tokens=cached)
         if not self.cfg.chunked_prefill:
             st.next_pos = len(prompt)
             st.done = True
@@ -156,6 +180,11 @@ class SimEngine:
         can carry under the token budget (1 = legacy FIFO)."""
         return self._lane_configs[-1]
 
+    def prefix_cache_stats(self):
+        """Mirror of Engine.prefix_cache_stats (None with the cache off)."""
+        return (self.prefix_cache.stats()
+                if self.prefix_cache is not None else None)
+
     def _advance_pending_prefill(self) -> None:
         """Account the chunk lanes riding this decode step: the same
         ``pack_chunk_lanes`` the live engine uses selects which pending
@@ -175,6 +204,8 @@ class SimEngine:
             if st.next_pos >= len(st.prompt):
                 st.done = True
                 self._pending_prefills.remove(st)
+                if self.prefix_cache is not None:
+                    self.prefix_cache.insert(st.prompt, st.blocks.pages)
 
     def _sample_spec(self) -> _BranchSpec:
         w = self.workload
@@ -348,8 +379,13 @@ def run_sim_experiment(policy: str, n: int, *, num_requests: int = 40,
     rng = np.random.default_rng(seed + 1)
     for i in range(num_requests):
         task = SimTask(answer=int(rng.integers(0, 10)))
-        prompt = [tk.BOS] + [tk.digit(0)] * (workload.prompt_len - 2) \
-            + [tk.EQUALS]
+        # shared few-shot header + (optionally) a request-distinct tail —
+        # the prefix-caching workload shape; prompt_tail=0 keeps the
+        # legacy identical prompts
+        tail = min(workload.prompt_tail, workload.prompt_len - 2)
+        prompt = [tk.BOS] \
+            + [tk.digit(0)] * (workload.prompt_len - 2 - tail) \
+            + [tk.digit(i % 10)] * tail + [tk.EQUALS]
         arrival = (arrival_times[i] if arrival_times is not None
                    else i * arrival_gap)
         req = sch.submit(prompt, payload=task, arrival=arrival)

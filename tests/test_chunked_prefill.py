@@ -8,6 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.kv import OutOfPagesError
 from repro.models import Model
 from repro.serving import Engine, EngineConfig, SamplingParams
 
@@ -350,6 +351,215 @@ def test_lane_budget_below_bucket_rejected():
     # queue in one tick
     with pytest.raises(ValueError, match="requires chunked_prefill"):
         _engine(cfg, chunked_prefill=False, step_token_budget=16)
+
+
+# ------------------------------------------------------ radix prefix cache
+
+
+def _drain(eng, prompt):
+    """Admit + drain one prompt; returns (state, steps_taken)."""
+    st = eng.begin_prefill(prompt)
+    steps = 0
+    while not st.done:
+        eng.decode_step()
+        steps += 1
+    eng.finish_prefill(st)
+    return st, steps
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_prefix_cache_bit_exact_on_vs_off(family):
+    """Acceptance: cache-on must reproduce cache-off bit-exactly — same
+    greedy branch tokens, same harvested logits, same final K/V page
+    contents and SSM state — while serving the shared header from cached
+    pages (fewer chunk steps, hit_tokens > 0)."""
+    cfg = tiny_config(**FAMILIES[family])
+    rng = np.random.default_rng(3)
+    header = [int(t) for t in rng.integers(2, cfg.vocab_size, size=10)]
+    prompts = [header + [3, 7, 2, 9], header + [5, 2, 8, 4, 6]]
+
+    def run(cache):
+        _, _, eng = _engine(cfg, temperature=0.0, prefix_cache=cache)
+        outs, steps = [], []
+        for p in prompts:
+            st, n = _drain(eng, p)
+            steps.append(n)
+            kv = (_gather_prefix(eng, st.blocks, len(p))
+                  if cfg.uses_attention else None)
+            outs.append((np.asarray(st.last_logits), st.ssm_state, kv))
+        return eng, outs, steps
+
+    eng_off, outs_off, steps_off = run(False)
+    eng_on, outs_on, steps_on = run(True)
+    assert sum(steps_on) < sum(steps_off), "warm admission saved no steps"
+    assert eng_on.prefix_cache.stats()["hit_tokens"] > 0
+    for (lg_a, ssm_a, kv_a), (lg_b, ssm_b, kv_b) in zip(outs_off, outs_on):
+        np.testing.assert_array_equal(lg_a, lg_b)
+        assert (ssm_a is None) == (ssm_b is None)
+        if ssm_a is not None:
+            for got, want in zip(ssm_a, ssm_b):
+                np.testing.assert_array_equal(np.asarray(got),
+                                              np.asarray(want))
+        if kv_a is not None:
+            np.testing.assert_array_equal(kv_a[0], kv_b[0])
+            np.testing.assert_array_equal(kv_a[1], kv_b[1])
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_prefix_cache_greedy_decode_matches(family):
+    """Branches spawned off a warm-hit prefix decode the same greedy
+    tokens as off a cold prefill (the cached pages and seeded SSM state
+    are a faithful KV substrate, not just matching logits)."""
+    cfg = tiny_config(**FAMILIES[family])
+    header = [2, 5, 9, 13, 7, 3, 11, 4]         # 2 pages (page_size 4)
+    prompt = header + [8, 6, 10]
+
+    def gen(cache, warm):
+        _, _, eng = _engine(cfg, temperature=0.0, prefix_cache=cache)
+        if warm:                                 # populate + idle the cache
+            st, _ = _drain(eng, header + [12, 2])
+            eng.release_prefix(st.blocks)
+            assert eng.prefix_cache.evictable > 0
+        st, _ = _drain(eng, prompt)
+        assert (st.cached_tokens > 0) == warm
+        h = eng.spawn_branch(0, st.blocks, st.last_logits, st.ssm_state,
+                             len(prompt))
+        for _ in range(8):
+            eng.decode_step()
+        toks = list(h.tokens)
+        eng.free_branch(h)
+        eng.release_prefix(st.blocks)
+        assert eng.allocator.used_pages == 0
+        eng.allocator.check_invariants()
+        return toks
+
+    assert gen(cache=False, warm=False) == gen(cache=True, warm=True)
+
+
+def test_prefix_cache_resurrects_idle_pages_without_rewrite():
+    """decref-to-LRU at engine level: releasing every reference parks the
+    prompt's full pages on the cache LRU (used_pages drains to 0), and
+    re-admitting the same prompt resurrects them — identical logits with
+    only the capped tail recomputed and zero K/V rewrites for the rest."""
+    cfg = tiny_config()
+    _, _, eng = _engine(cfg, prefix_cache=True)
+    prompt = [2, 5, 9, 13, 7, 3, 11, 4, 8, 6, 10, 12, 3, 7]   # 14 tokens
+    st1, _ = _drain(eng, prompt)
+    lg1 = np.asarray(st1.last_logits)
+    eng.release_prefix(st1.blocks)
+    assert eng.allocator.used_pages == 0
+    assert eng.prefix_cache.evictable == 3      # 3 full pages parked
+    st2, steps2 = _drain(eng, prompt)
+    # capped reuse: (14-1)//4 = 3 pages = 12 tokens; 2-token tail recomputed
+    assert st2.cached_tokens == 12 and steps2 == 1
+    assert eng.prefix_cache.stats()["resurrections"] == 3
+    np.testing.assert_array_equal(lg1, np.asarray(st2.last_logits))
+    eng.release_prefix(st2.blocks)
+    eng.allocator.check_invariants()
+
+
+def test_prefix_cache_evicts_under_page_pressure_only():
+    """A full pool reclaims idle cached pages instead of raising; pages
+    still referenced by live branches are never victims; truly exhausted
+    pools still raise OutOfPagesError with nothing allocated."""
+    cfg = tiny_config()
+    _, _, eng = _engine(cfg, num_pages=8, prefix_cache=True)
+    st1, _ = _drain(eng, [2, 5, 9, 13, 7, 3, 11, 4])   # 2 pages, both full
+    eng.release_prefix(st1.blocks)                      # -> LRU
+    assert eng.prefix_cache.evictable == 2
+    # 7 pages of new prompt force evictions of the idle pages
+    st2, _ = _drain(eng, [6] * 26)
+    assert eng.prefix_cache.stats()["evictions"] >= 1
+    eng.allocator.check_invariants()
+    # live pages are not reclaimable: an oversized prompt still fails fast
+    with pytest.raises(OutOfPagesError):
+        eng.begin_prefill([7] * 32)
+    assert not eng.has_pending_prefill
+    eng.allocator.check_invariants()
+    eng.release_prefix(st2.blocks)
+    assert eng.allocator.used_pages == 0
+
+
+def test_prefix_cache_ssm_reuse_gated_on_boundary_state():
+    """ssm/hybrid reuse is truncated to the deepest page boundary with a
+    stored (conv, ssd) snapshot — page boundaries between chunk
+    boundaries have attention K/V but no seedable recurrence state."""
+    cfg = tiny_config(**FAMILIES["hybrid"])
+    _, _, eng = _engine(cfg, prefix_cache=True)   # chunk 8, page 4
+    prompt = [2, 5, 9, 13, 7, 3, 11, 4, 8, 6, 10, 12, 3, 7]   # 14 tokens
+    st1, _ = _drain(eng, prompt)
+    eng.release_prefix(st1.blocks)
+    st2, _ = _drain(eng, prompt)
+    # dense would reuse 12 tokens (3 pages); the hybrid resumes at the
+    # page-aligned chunk boundary 8 where a snapshot exists
+    assert st2.cached_tokens == 8
+    np.testing.assert_array_equal(np.asarray(st1.last_logits),
+                                  np.asarray(st2.last_logits))
+    eng.release_prefix(st2.blocks)
+    eng.allocator.check_invariants()
+
+
+def test_prefix_cache_single_page_dispatch_per_mixed_step():
+    """Acceptance pin: chunk K/V writes AND the step's CoW page copies
+    execute inside the one jit'd step program — after every decode_step
+    (any lane count, CoWs pending or not) the engine's page arrays are
+    exactly the objects that single dispatch returned; no host-side copy
+    ever touches them."""
+    cfg = tiny_config()
+    _, _, eng = _engine(cfg, temperature=0.0, step_token_budget=16)
+    blocks, lg, ssm = eng.prefill([2, 5, 9])    # 3 tokens: partial page
+    h1 = eng.spawn_branch(0, blocks, lg, ssm, 3)
+    h2 = eng.spawn_branch(0, blocks, lg, ssm, 3)   # shared partial -> CoW
+    sts = [eng.begin_prefill([3 + i] * 13) for i in range(2)]
+
+    captured = []
+    orig = eng._step_jit
+
+    def spy(*args, **kw):
+        out = orig(*args, **kw)
+        captured.append(out[3])                 # the step's new state
+        return out
+
+    eng._step_jit = spy
+    saw_multi_lane = False
+    while any(not st.done for st in sts):
+        before = eng.prefill_chunk_steps
+        eng.decode_step()
+        saw_multi_lane |= eng.prefill_chunk_steps - before > 1
+        assert len(captured) == eng.decode_steps_executed, \
+            "a decode step issued more than one device dispatch"
+        assert eng.state["k_pages"] is captured[-1]["k_pages"]
+        assert eng.state["v_pages"] is captured[-1]["v_pages"]
+    assert saw_multi_lane, "no mixed step ever carried 2 lanes"
+    for st in sts:
+        eng.release_prefix(st.blocks)
+    eng.free_branch(h1)
+    eng.free_branch(h2)
+    eng.release_prefix(blocks)
+    assert eng.allocator.used_pages == 0
+
+
+def test_prefix_cache_oversized_prompt_acquires_nothing():
+    """Regression: a prompt exceeding the block-table width must fail
+    BEFORE acquiring cached-prefix references — an assert after acquire
+    would leak increfed pages no release path ever returns."""
+    cfg = tiny_config()
+    _, _, eng = _engine(cfg, prefix_cache=True)
+    st, _ = _drain(eng, [2] * 12)               # populate the cache
+    eng.release_prefix(st.blocks)
+    idle = eng.prefix_cache.evictable
+    assert idle > 0
+    with pytest.raises(AssertionError, match="block-table width"):
+        eng.begin_prefill([2] * 200)            # shares the cached prefix
+    assert eng.prefix_cache.evictable == idle   # nothing acquired
+    assert eng.allocator.used_pages == 0
+    eng.allocator.check_invariants()
+
+
+def test_prefix_cache_requires_chunked_prefill():
+    cfg = tiny_config()
+    with pytest.raises(ValueError, match="prefix_cache requires"):
+        _engine(cfg, chunked_prefill=False, prefix_cache=True)
 
 
 def test_mixed_step_kernel_validated():

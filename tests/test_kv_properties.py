@@ -1,12 +1,18 @@
 """Property tests for the paged KV allocator: random interleavings of
 alloc_prefix / extend / fork / append_token / release never leak pages or
 double-free, and refcounts always equal the number of block tables holding
-each page (refcount conservation). Runs under hypothesis when installed,
-else under prop.py's pure-random fallback generator."""
+each page (refcount conservation). With the radix prefix cache attached,
+the same interleavings plus acquire/insert/evict (under degraded,
+collision-heavy hash functions) must conserve the live + free + LRU
+partition: every cached page has refcount >= 1 or sits on the LRU
+free-list, and releasing shared prefix pages parks them there instead of
+recycling them through the free list. Runs under hypothesis when
+installed, else under prop.py's pure-random fallback generator."""
 import pytest
 
 from prop import given, settings, st
-from repro.kv import OutOfPagesError, PageAllocator
+from repro.kv import (OutOfPagesError, PageAllocator, PrefixCache,
+                      default_page_hash)
 
 
 def _refcount_conservation(alloc: PageAllocator, live_blocks):
@@ -79,6 +85,155 @@ def test_extend_matches_incremental_appends(page_size, start_tokens, extra):
         tight.extend(tb, huge)
     assert (list(tb.pages), tb.length, tight.free_pages) == before
     tight.check_invariants()
+
+
+# degraded hash functions inject collisions: the cache must verify tokens
+# + parent identity, so collisions degrade to misses, never wrong pages
+_HASH_FNS = (default_page_hash,
+             lambda p, t: default_page_hash(p, t) % 13,
+             lambda p, t: 7)
+
+
+def _admit_through_cache(alloc, cache, prompt):
+    """The engines' admission dance (PrefixCache.admit: acquire the
+    cached prefix, reserve the tail all-or-nothing with rollback), then
+    insert the full pages as a completed prefill would."""
+    b, _ = cache.admit(prompt)
+    cache.insert(prompt, b.pages)
+    return b
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 4),                       # page_size
+       st.integers(6, 48),                      # num_pages
+       st.integers(0, 2),                       # hash degradation level
+       st.lists(st.integers(0, 100_000), min_size=1, max_size=80))
+def test_prefix_cache_interleavings_conserve_pages(page_size, num_pages,
+                                                   degrade, ops):
+    """Random admit(acquire+extend+insert) / fork / append / release /
+    evict sequences — including under colliding hashes — keep the
+    live + free + LRU partition and refcount conservation intact, and
+    draining every branch plus the LRU returns the pool to empty."""
+    alloc = PageAllocator(num_pages, page_size)
+    cache = PrefixCache(alloc, hash_fn=_HASH_FNS[degrade])
+    live = []
+    for op in ops:
+        action = op % 6
+        pick = (op // 6) % max(len(live), 1)
+        size = op % (4 * page_size) + 1
+        # tiny token alphabet + constant-prefix prompts force prefix
+        # sharing (and, degraded, hash collisions) across admissions
+        prompt = [(op // 24) % 3] * size
+        try:
+            if action == 0:                     # admit via the cache
+                live.append(_admit_through_cache(alloc, cache, prompt))
+            elif action == 1 and live:          # branch fork
+                live.append(alloc.fork(live[pick]))
+            elif action == 2 and live:          # decode one token
+                alloc.append_token(live[pick])
+            elif action == 3 and live:          # branch terminates
+                alloc.release(live.pop(pick))
+            elif action == 4 and cache.evictable:   # memory pressure
+                cache.evict_one()
+            elif action == 5:                   # bare lookup + drop: the
+                pages, _ = cache.acquire(prompt)  # resurrect/re-idle path
+                for pid in reversed(pages):
+                    alloc.decref(pid)
+        except OutOfPagesError:
+            pass                                # pool pressure is legal
+        alloc.check_invariants()                # includes cache invariants
+        _refcount_conservation(alloc, live)
+    for b in live:
+        alloc.release(b)
+    alloc.check_invariants()
+    assert alloc.used_pages == 0, "pages still live after releasing all"
+    cache.drop()                                # evict the whole LRU
+    alloc.check_invariants()
+    assert cache.evictable == 0 and len(alloc._free) == num_pages
+
+
+def test_release_shared_prefix_decrefs_to_lru_not_free():
+    """Regression (decref-to-LRU vs decref-to-free): releasing a
+    BranchBlocks holding cache-tracked prefix pages must park them on the
+    cache's LRU free-list — NOT the allocator free list, where the next
+    allocation would recycle them and let the engine overwrite K/V the
+    cache still maps. Untracked pages (the partial tail) free normally."""
+    alloc = PageAllocator(8, 2)
+    cache = PrefixCache(alloc)
+    prompt = [1, 2, 3, 4, 5]                    # 2 full pages + 1-token tail
+    b = _admit_through_cache(alloc, cache, prompt)
+    tracked = list(b.pages[:2])
+    free_before = len(alloc._free)
+    alloc.release(b)
+    # decref-to-LRU: the 2 tracked pages idle on the cache's list ...
+    assert cache.evictable == 2
+    assert sorted(cache.lru_pages) == sorted(tracked)
+    # ... decref-to-free: only the untracked tail page hits the free list
+    assert len(alloc._free) == free_before + 1
+    assert not set(tracked) & set(alloc._free)
+    alloc.check_invariants()
+    # allocation never hands out an LRU page while true-free pages remain
+    held = [alloc.alloc() for _ in range(len(alloc._free))]
+    assert not set(held) & set(tracked)
+    assert cache.evictable == 2
+    # a hash hit resurrects the parked pages with their refcount restored
+    pages, _ = cache.acquire(prompt)
+    assert pages == tracked
+    assert all(alloc.refcount(p) == 1 for p in pages)
+    assert cache.evictable == 0
+    alloc.check_invariants()
+    # exhausting the pool now evicts nothing that is still referenced
+    with pytest.raises(OutOfPagesError):
+        for _ in range(alloc.num_pages):
+            alloc.alloc()
+
+
+def test_prefix_cache_eviction_is_lru_and_pressure_only():
+    """Idle cached pages are reclaimed oldest-idled-first, and only when
+    the free list runs dry — a warm pool never evicts."""
+    alloc = PageAllocator(6, 2)
+    cache = PrefixCache(alloc)
+    b1 = _admit_through_cache(alloc, cache, [1, 1, 1, 1])   # pages 0..1
+    b2 = _admit_through_cache(alloc, cache, [2, 2])         # page 2
+    alloc.release(b1)                           # idles first (older)
+    alloc.release(b2)
+    assert cache.evictable == 3 and alloc.free_pages == 6
+    # 3 true-free pages serve without evicting
+    blocks = alloc.alloc_prefix(3 * 2)
+    assert cache.evictable == 3 and cache.stats()["evictions"] == 0
+    # the 4th page forces one eviction — the oldest-idled (b1's leaf-first
+    # release order means its deepest page idled first)
+    alloc.extend(blocks, 4 * 2)
+    assert cache.evictable == 2 and cache.stats()["evictions"] == 1
+    alloc.check_invariants()
+    # evicted chains are misses now; survivors still hit
+    pages, _ = cache.acquire([2, 2, 9])
+    assert len(pages) == 1
+    alloc.release(blocks)
+    for pid in reversed(pages):
+        alloc.decref(pid)
+    alloc.check_invariants()
+    assert alloc.used_pages == 0
+
+
+def test_prefix_cache_collisions_never_alias():
+    """A constant hash function maps every page to one bucket; lookups
+    must still return only true token matches (verification by tokens +
+    parent identity)."""
+    alloc = PageAllocator(16, 2)
+    cache = PrefixCache(alloc, hash_fn=lambda p, t: 7)
+    b1 = _admit_through_cache(alloc, cache, [1, 2, 3, 4])
+    b2 = _admit_through_cache(alloc, cache, [5, 6, 7, 8])
+    pages, _ = cache.acquire([5, 6, 9, 9, 9])
+    assert pages == [b2.pages[0]] and pages != [b1.pages[0]]
+    for pid in pages:
+        alloc.decref(pid)
+    pages, _ = cache.acquire([9, 9, 9, 9, 9])
+    assert pages == []                          # collision != match
+    alloc.release(b1)
+    alloc.release(b2)
+    alloc.check_invariants()
+    assert alloc.used_pages == 0
 
 
 @settings(max_examples=40, deadline=None)

@@ -314,6 +314,63 @@ def test_lane_multi_beats_single_ttfb_under_bursts():
     assert ttfb["multi"] < ttfb["single"]
 
 
+def test_prefix_cache_improves_shared_header_burst_ttfb():
+    """Prefix caching at sim scale: on a shared-few-shot-header Poisson
+    burst, warm admissions skip the cached header's chunk steps, so
+    single-lane median time-to-first-branch strictly improves and the
+    metrics dict reports the hit rate."""
+    from repro.core.scheduler import percentile_latency
+    from repro.serving.simulator import poisson_burst_arrivals
+    w = SimWorkload(mean_len=200, sigma_len=0.6, prompt_len=512,
+                    prompt_tail=64)
+    times = poisson_burst_arrivals(12, burst_gap=30, burst_mean=5)
+    ttfb, hit_rate = {}, {}
+    for cached in (False, True):
+        ec = SimEngineConfig(max_slots=128, num_pages=500000,
+                             prefill_chunk=64, step_token_budget=64,
+                             prefix_cache=cached)
+        m, _ = run_sim_experiment("sart", 4, num_requests=12, workload=w,
+                                  engine_cfg=ec, window=100, seed=0,
+                                  arrival_times=times)
+        ttfb[cached] = percentile_latency(m, 50, "ttfb")
+        pc = m.get("prefix_cache")
+        hit_rate[cached] = pc["hit_rate"] if pc else None
+    assert hit_rate[False] is None and hit_rate[True] > 0.5
+    assert ttfb[True] < ttfb[False]
+
+
+def test_prefix_cache_sim_conserves_pages_end_to_end():
+    """A full scheduler run over a caching SimEngine drains to zero live
+    pages with the allocator + cache invariants intact (release parks
+    shared prefixes on the cache's LRU free-list instead of freeing
+    them — they are warm capacity, not leaks)."""
+    workload = SimWorkload(mean_len=60, sigma_len=0.4, prompt_len=64,
+                           prm_drift=6.0, prm_noise=0.05)
+    engine = SimEngine(SimEngineConfig(max_slots=16, page_size=8,
+                                       num_pages=4096, prefill_chunk=16,
+                                       step_token_budget=32,
+                                       prefix_cache=True),
+                       workload, seed=1)
+    cfg = SchedulerConfig(policy="sart", n=4, m=2, window=10,
+                          max_tokens=1 << 20)
+    sch = Scheduler(engine, SimPRM(engine), cfg, answer_fn=extract_answer)
+    rng = np.random.default_rng(2)
+    for i in range(8):
+        task = SimTask(answer=int(rng.integers(0, 10)))
+        prompt = [tk.BOS] + [tk.digit(0)] * 56 \
+            + [tk.digit(i % 3)] * 6 + [tk.EQUALS]
+        req = sch.submit(prompt, payload=task, arrival=i * 5)
+        engine.tasks[req.request_id] = task
+    m = sch.run(max_steps=500_000)
+    assert len(m["requests"]) == 8
+    assert m["prefix_cache"]["hit_tokens"] > 0
+    engine.allocator.check_invariants()
+    assert engine.allocator.used_pages == 0, \
+        "live pages leaked (cached-idle LRU pages must not count as used)"
+    assert engine.prefix_cache.evictable == \
+        engine.prefix_cache.tracked_pages
+
+
 @pytest.mark.parametrize("family_kw", [
     dict(arch_type="ssm", d_ff=0, ssm_state=16, ssm_head_dim=32, ssm_chunk=8),
     dict(arch_type="hybrid", ssm_state=16, ssm_head_dim=32, ssm_chunk=8),
