@@ -5,6 +5,9 @@
 from .early_stop import (empirical_mth_completion, expected_speedup,
                          order_statistic_cdf, order_statistic_expectation)
 from .ensemble import best_of_n, majority_vote, weighted_vote
+from .policies import (ADMISSION_POLICIES, AdmissionPolicy, ComposedPolicy,
+                       EdfPolicy, FifoPolicy, LpmPolicy, PriorityPolicy,
+                       make_policy, select_next)
 from .prm import (PRM, OraclePRM, RewardHeadPRM, init_prm_head,
                   reward_from_hidden)
 from .pruning import PruningConfig, RequestMeta, TwoPhasePruner
@@ -20,4 +23,7 @@ __all__ = [
     "PruningConfig", "RequestMeta", "TwoPhasePruner",
     "POLICIES", "Request", "Scheduler", "SchedulerConfig",
     "percentile_latency",
+    "ADMISSION_POLICIES", "AdmissionPolicy", "ComposedPolicy",
+    "EdfPolicy", "FifoPolicy", "LpmPolicy", "PriorityPolicy",
+    "make_policy", "select_next",
 ]

@@ -4,14 +4,17 @@ from __future__ import annotations
 from collections import Counter
 from typing import Callable, List, Optional, Sequence, Tuple
 
-CompletedBranch = Tuple[List[int], float]  # (generated tokens, reward)
+# (generated tokens, reward[, truncated]) — the scheduler appends a
+# truncation flag (force-eviction / max-token cap); selection ignores
+# trailing fields so older 2-tuples keep working
+CompletedBranch = Tuple[List[int], float]
 
 
 def best_of_n(completed: Sequence[CompletedBranch],
               answer_fn: Callable) -> Optional[object]:
     """SART's default: answer of the highest-reward completed branch."""
     best = None
-    for tokens, reward in completed:
+    for tokens, reward, *_ in completed:
         ans = answer_fn(tokens)
         if ans is None:
             continue
@@ -25,7 +28,7 @@ def majority_vote(completed: Sequence[CompletedBranch],
     """Self-Consistency: most frequent extracted answer; reward breaks ties."""
     votes = Counter()
     best_reward = {}
-    for tokens, reward in completed:
+    for tokens, reward, *_ in completed:
         ans = answer_fn(tokens)
         if ans is None:
             continue
@@ -41,7 +44,7 @@ def weighted_vote(completed: Sequence[CompletedBranch],
                   answer_fn: Callable) -> Optional[object]:
     """Reward-weighted voting (beyond-paper variant)."""
     mass = {}
-    for tokens, reward in completed:
+    for tokens, reward, *_ in completed:
         ans = answer_fn(tokens)
         if ans is None:
             continue

@@ -28,6 +28,7 @@ class RequestMeta:
     max_num_pruned: int = 0           # β in phase 1, N-1 in phase 2
     num_completed: int = 0
     num_pruned: int = 0
+    num_truncated: int = 0            # force-evicted / max-token cut-offs
 
     @property
     def terminal(self) -> bool:
@@ -53,9 +54,20 @@ class TwoPhasePruner:
                            threshold=self.cfg.alpha,
                            max_num_pruned=min(beta, n - 1))
 
-    def on_completion(self, meta: RequestMeta, reward: float) -> None:
-        """Algorithm 1 lines 24-27: first completion flips to exploitation."""
+    def on_completion(self, meta: RequestMeta, reward: float,
+                      truncated: bool = False) -> None:
+        """Algorithm 1 lines 24-27: first completion flips to exploitation.
+
+        ``truncated`` completions (force-evicted under memory pressure, or
+        cut at the max-token cap) still count toward the early-stop M, but
+        they must NOT flip the phase or set the α′ threshold: a cut-off
+        branch's reward is not evidence that a *finished* answer at that
+        quality exists, and letting it seed α′ would prune live branches
+        against a phantom baseline."""
         meta.num_completed += 1
+        if truncated:
+            meta.num_truncated += 1
+            return
         if meta.phase == "explore":
             meta.phase = "exploit"
             meta.threshold = reward       # α′

@@ -28,8 +28,15 @@ docs/scheduling.md, which deep-link here):
     ``engine.admission_capacity`` prefills in flight (1 for legacy
     single-lane engines); ``_poll_prefills`` harvests finished prefills
     every tick and, when the engine packs multiple lanes, tops the
-    in-flight set back up from the arrival queue (oldest-first — the
-    scheduler half of token-budget lane scheduling).
+    in-flight set back up from the arrival queue (the scheduler half of
+    token-budget lane scheduling).
+  * **Admission order is a pluggable policy**: each admission
+    opportunity, ``_arrived`` hands the *whole* arrived set to the
+    configured ``AdmissionPolicy`` (``repro.core.policies``) — ``fifo``
+    (default, legacy order), ``lpm`` (longest cached prompt prefix
+    first, probed non-mutatingly via ``probe_cached_tokens``), ``edf``
+    (earliest ``Request.deadline``), ``priority``, and compositions —
+    under a starvation bound so no request is passed over unboundedly.
   * **Eager release**: completions, prunes and early stops free engine
     slots and pages the moment they happen; ``metrics()`` is only valid
     because ``_finalize`` releases the request's prefix exactly once.
@@ -45,6 +52,7 @@ import numpy as np
 from ..kv import OutOfPagesError
 from ..serving.engine import BranchHandle, Engine
 from .ensemble import best_of_n, majority_vote
+from .policies import make_policy, select_next
 from .pruning import PruningConfig, RequestMeta, TwoPhasePruner
 from .prm import PRM
 
@@ -65,6 +73,14 @@ class SchedulerConfig:
                                   # suspend the weakest running branch to
                                   # admit a waiting request's prefill
                                   # (the paper lists this as future work)
+    # Admission-ordering policy over the arrived set ("fifo", "lpm",
+    # "edf", "priority", or compositions like "priority+lpm" — see
+    # repro.core.policies). "fifo" is bit-exact legacy behavior.
+    admission_policy: str = "fifo"
+    # Pass-overs by younger requests a waiting request tolerates before
+    # it preempts the policy ordering (mirrors the chunk-lane packer's
+    # prefill_starvation_bound, one layer up).
+    admission_starvation_bound: int = 4
 
     def resolve(self) -> "SchedulerConfig":
         n, m = self.n, self.m
@@ -83,7 +99,10 @@ class Request:
     prompt: List[int]
     arrival: int
     payload: object = None        # task object (answer key, oracle grader)
+    deadline: Optional[int] = None  # absolute clock the SLO wants finish by
+    priority: int = 0             # tier (higher = more urgent)
     # runtime state
+    passed_over: int = 0          # admissions of younger requests ahead of us
     meta: Optional[RequestMeta] = None
     prefill_state: object = None  # ChunkedPrefillState while chunks pend
     prefix_blocks: object = None
@@ -91,6 +110,7 @@ class Request:
     ssm_state: object = None
     live: Dict[int, BranchHandle] = dataclasses.field(default_factory=dict)
     pending: int = 0              # branches awaiting a slot
+    cached_tokens: int = 0        # prompt tokens served warm at admission
     completed: List = dataclasses.field(default_factory=list)
     first_service: int = -1
     first_branch: int = -1        # clock when the first branch was seated
@@ -126,6 +146,7 @@ class Scheduler:
         self.pruner = TwoPhasePruner(PruningConfig(
             alpha=self.cfg.alpha, beta=self.cfg.beta,
             enabled=self.cfg.policy == "sart"))
+        self.admission = make_policy(self.cfg.admission_policy)
         self.request_queue: deque = deque()
         self.branch_queue: deque = deque()   # requests with pending spawns
         self.prefilling: List[Request] = []  # admitted, chunks still pending
@@ -136,9 +157,13 @@ class Scheduler:
         self._next_request_id = 0
 
     # ---------------------------------------------------------------- intake
-    def submit(self, prompt: List[int], payload=None,
-               arrival: int = 0) -> Request:
-        req = Request(self._next_request_id, list(prompt), arrival, payload)
+    def submit(self, prompt: List[int], payload=None, arrival: int = 0,
+               deadline: Optional[int] = None, priority: int = 0) -> Request:
+        """Queue a request. ``deadline`` is an absolute clock tick the SLO
+        wants ``finish`` by (drives ``edf`` ordering and the SLO-attainment
+        metrics); ``priority`` is the tier for ``priority`` ordering."""
+        req = Request(self._next_request_id, list(prompt), arrival, payload,
+                      deadline=deadline, priority=priority)
         self._next_request_id += 1
         self.requests[req.request_id] = req
         self.request_queue.append(req)
@@ -159,14 +184,29 @@ class Scheduler:
     def _all_done(self) -> bool:
         return all(r.done for r in self.requests.values())
 
+    def probe_cached_tokens(self, req: Request) -> int:
+        """Non-mutating prefix-cache probe for LPM ordering: how many of
+        ``req``'s prompt tokens a warm admission would serve from cache
+        right now. 0 for engines without a cache (LPM degrades to FIFO).
+        The probe takes no page references and pollutes no hit counters —
+        only actual admission does."""
+        probe = getattr(self.engine, "match_cached_tokens", None)
+        return probe(req.prompt) if probe is not None else 0
+
     def _arrived(self) -> Optional[Request]:
-        for _ in range(len(self.request_queue)):
-            req = self.request_queue[0]
-            if req.arrival <= self.clock:
-                self.request_queue.popleft()
-                return req
-            break
-        return None
+        """Select the next request to admit from the *whole* arrived set
+        (the seed peeked only the queue head, so an arrived request parked
+        behind a future-arrival head was never admitted). The configured
+        admission policy orders the set; the starvation bound caps how
+        often a request may be passed over (under ``fifo`` the choice is
+        always the oldest arrived request — legacy order, bit-exact)."""
+        arrived = [r for r in self.request_queue if r.arrival <= self.clock]
+        if not arrived:
+            return None
+        chosen = select_next(self.admission, arrived, self,
+                             self.cfg.admission_starvation_bound)
+        self.request_queue.remove(chosen)
+        return chosen
 
     # --------------------------------------------------------- batch filling
     def _fill_batch(self):
@@ -217,6 +257,14 @@ class Scheduler:
                    and len(self.requests[h.request_id].live) > 1]
         if not victims:
             return
+        # never-scored candidates default last_reward=0.0 and would tie
+        # below every scored branch — score them first so a strong branch
+        # that simply hasn't hit a scoring window isn't the victim
+        for h in victims:
+            if not h.scored:
+                h.last_reward = self.prm.score(
+                    self.requests[h.request_id], [h])[0]
+                h.scored = True
         victim = min(victims, key=lambda h: h.last_reward)
         self.engine.suspend_branch(victim)
         self.suspended.append(victim)
@@ -269,6 +317,10 @@ class Scheduler:
         have actually been served — so queueing delay keeps its meaning."""
         if req.first_service < 0:
             req.first_service = self.clock
+        # prompt tokens the admission actually served from the prefix
+        # cache — recorded once per request (unlike the cache's lookup
+        # counters, which also see rolled-back OutOfPages retries)
+        req.cached_tokens = getattr(req.prefill_state, "cached_tokens", 0)
         blocks, logits, ssm_state = self.engine.finish_prefill(
             req.prefill_state)
         req.prefill_state = None
@@ -361,9 +413,13 @@ class Scheduler:
 
     def _complete_branch(self, req: Request, h: BranchHandle,
                          truncated: bool = False):
+        """Record a branch completion. ``truncated`` (force-eviction or
+        max-token cap) rides the completion tuple and is excluded from the
+        pruner's phase-2 α′ threshold — a cut-off branch's reward is not
+        evidence a finished answer exists at that quality."""
         reward = self.prm.score(req, [h])[0]
-        self.pruner.on_completion(req.meta, reward)
-        req.completed.append((list(h.tokens), reward))
+        self.pruner.on_completion(req.meta, reward, truncated=truncated)
+        req.completed.append((list(h.tokens), reward, truncated))
         del req.live[h.branch_id]
         self.engine.free_branch(h)
 
@@ -385,6 +441,7 @@ class Scheduler:
                 by_id = {h.branch_id: r for h, r in zip(handles, rewards)}
                 for h, r in zip(handles, rewards):
                     h.last_reward = r
+                    h.scored = True
                 for bid in self.pruner.select_prunes(req.meta, by_id):
                     h = req.live.pop(bid)
                     self.engine.free_branch(h)
@@ -421,6 +478,7 @@ class Scheduler:
         rewards = np.asarray(self.prm.score(req, handles))
         for h, r in zip(handles, rewards):
             h.last_reward = float(r)
+            h.scored = True
         # cull leaves far below the best (soft budget reallocation)
         if len(handles) > 1:
             weights = np.exp((rewards - rewards.max()) / self.cfg.rebase_temp)
@@ -446,30 +504,56 @@ class Scheduler:
 
     # ---------------------------------------------------------------- metrics
     def metrics(self) -> Dict:
+        """Per-request records + aggregates. Requests still live when the
+        run stops (``max_steps`` overload) are emitted with
+        ``finish=None`` and null latencies instead of being dropped —
+        omitting them survivorship-biases every percentile optimistic
+        exactly when the system is saturated. ``percentile_latency``
+        skips the null fields explicitly."""
         recs = []
         for req in self.requests.values():
-            if not req.done:
-                continue
+            done = req.done
             recs.append({
                 "request_id": req.request_id,
                 "arrival": req.arrival,
-                "first_service": req.first_service,
-                "finish": req.finish,
-                "e2e": req.finish - req.arrival,
+                "first_service": (req.first_service
+                                  if req.first_service >= 0 else None),
+                "finish": req.finish if done else None,
+                "e2e": req.finish - req.arrival if done else None,
                 "queue": (req.first_service - req.arrival
                           if req.first_service >= 0 else None),
                 "ttfb": (req.first_branch - req.arrival
                          if req.first_branch >= 0 else None),
                 "inference": (req.finish - req.first_service
-                              if req.first_service >= 0 else None),
+                              if done and req.first_service >= 0 else None),
                 "num_completed": req.meta.num_completed if req.meta else 0,
                 "num_pruned": req.meta.num_pruned if req.meta else 0,
+                "num_truncated": req.meta.num_truncated if req.meta else 0,
+                "prompt_tokens": len(req.prompt),
+                "cached_tokens": req.cached_tokens,
+                "deadline": req.deadline,
+                # None without a deadline; an unfinished deadline is a miss
+                "deadline_met": (None if req.deadline is None
+                                 else done and req.finish <= req.deadline),
                 "answer": req.final_answer,
-                "response_lengths": [len(t) for t, _ in req.completed],
+                "response_lengths": [len(t) for t, *_ in req.completed],
             })
+        slo = [r for r in recs if r["deadline"] is not None]
+        met = sum(1 for r in slo if r["deadline_met"])
         out = {"requests": recs, "timeline": self.timeline,
                "clock": self.clock,
-               "decode_steps": self.engine.decode_steps_executed}
+               "decode_steps": self.engine.decode_steps_executed,
+               "completed_requests": sum(1 for r in recs
+                                         if r["finish"] is not None),
+               "unfinished_requests": sum(1 for r in recs
+                                          if r["finish"] is None),
+               "admission_policy": self.admission.name,
+               "slo": {
+                   "with_deadline": len(slo),
+                   "deadline_met": met,
+                   "deadline_missed": len(slo) - met,
+                   "attainment": met / len(slo) if slo else None,
+               }}
         # radix prefix-cache counters (hit rate, evictions, ...) when the
         # engine serves admission through one — cached-prefix admission is
         # part of the scheduling story (warm hits skip chunk steps), so
@@ -482,6 +566,11 @@ class Scheduler:
 
 
 def percentile_latency(metrics: Dict, q: float, key: str = "e2e") -> float:
+    """Percentile over finished measurements only: unfinished requests
+    carry ``None`` for every latency field (``metrics()`` emits them so
+    overload runs are visible, not silently optimistic) and are skipped
+    explicitly here. Check ``metrics["unfinished_requests"]`` before
+    trusting a percentile from a saturated run."""
     vals = [r[key] for r in metrics["requests"] if r[key] is not None]
     if not vals:
         return float("nan")

@@ -136,6 +136,23 @@ class PrefixCache:
     def lru_pages(self):
         return self._lru.keys()
 
+    def match_tokens(self, prompt: Sequence[int],
+                     need_state: bool = False) -> int:
+        """Non-mutating probe: how many of ``prompt``'s leading tokens an
+        ``acquire`` would serve from cache *right now*. Same match rule as
+        ``acquire`` — page-aligned, capped so the last prompt token is
+        always recomputed, truncated to a seedable SSM boundary when
+        ``need_state`` — but takes **no** page references, leaves the LRU
+        order untouched, and pollutes no hit/lookup counters. This is the
+        lookup the LPM admission policy runs over every queued request
+        each admission opportunity, so it must be observationally free."""
+        matched = self._walk(prompt, max(0, (len(prompt) - 1))
+                             // self.page_size)
+        if need_state:
+            while matched and matched[-1].ssm_state is None:
+                matched.pop()
+        return len(matched) * self.page_size
+
     def acquire(self, prompt: Sequence[int], need_state: bool = False
                 ) -> Tuple[List[int], object]:
         """Look up the longest cached page-aligned prefix of ``prompt`` and

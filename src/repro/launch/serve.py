@@ -72,7 +72,9 @@ def serve(policy: str, n: int, num_requests: int, rate_gap: int,
           ckpt: Optional[str], prm_kind: str, window: int, max_tokens: int,
           max_slots: int, seed: int, temperature: float,
           arch: str = "dense", mixed_step_kernel: str = "fused",
-          step_token_budget: int = 0, prefix_cache: bool = False) -> dict:
+          step_token_budget: int = 0, prefix_cache: bool = False,
+          admission_policy: str = "fifo",
+          deadline: Optional[int] = None) -> dict:
     import numpy as np
 
     from ..core import OraclePRM, RewardHeadPRM, Scheduler, SchedulerConfig
@@ -96,14 +98,18 @@ def serve(policy: str, n: int, num_requests: int, rate_gap: int,
 
     sch = Scheduler(engine, prm,
                     SchedulerConfig(policy=policy, n=n, window=window,
-                                    max_tokens=max_tokens),
+                                    max_tokens=max_tokens,
+                                    admission_policy=admission_policy),
                     answer_fn=tasks.extract_answer)
     rng = np.random.default_rng(seed + 2)
     problems = []
     for i in range(num_requests):
         prob = tasks.gen_problem(rng)
         problems.append(prob)
-        sch.submit(prob.prompt_tokens(), payload=prob, arrival=i * rate_gap)
+        arrival = i * rate_gap
+        sch.submit(prob.prompt_tokens(), payload=prob, arrival=arrival,
+                   deadline=(arrival + deadline
+                             if deadline is not None else None))
     metrics = sch.run(max_steps=2_000_000)
     correct = sum(
         1 for r, prob in zip(metrics["requests"], problems)
@@ -134,6 +140,12 @@ def serve(policy: str, n: int, num_requests: int, rate_gap: int,
         # hit_rate > 0 under shared-header workloads means warm admission
         # skipped those tokens' chunk compute and K/V writes entirely
         "prefix_cache": engine.prefix_cache_stats(),
+        # admission ordering + SLO attainment (deadline_met fraction among
+        # requests carrying a --deadline; None without deadlines)
+        "admission_policy": metrics["admission_policy"],
+        "slo": metrics["slo"],
+        "completed_requests": metrics["completed_requests"],
+        "unfinished_requests": metrics["unfinished_requests"],
     }
     return out
 
@@ -165,6 +177,16 @@ def main():
                     help="radix page-hash prompt prefix cache: admission "
                          "reuses cached page-aligned prefixes (shared "
                          "headers) instead of recomputing them")
+    ap.add_argument("--admission-policy", default="fifo",
+                    help="admission ordering over the arrived set: fifo "
+                         "(legacy, bit-exact), lpm (longest cached prefix "
+                         "first; pair with --prefix-cache), edf (earliest "
+                         "--deadline first), priority, or compositions "
+                         "like priority+lpm")
+    ap.add_argument("--deadline", type=int, default=None,
+                    help="per-request SLO: finish within this many decode "
+                         "steps of arrival (drives edf ordering and the "
+                         "slo attainment metrics)")
     ap.add_argument("--prm", default="oracle", choices=["oracle", "head"])
     ap.add_argument("--window", type=int, default=8)
     ap.add_argument("--max-tokens", type=int, default=96)
@@ -176,7 +198,7 @@ def main():
                 args.ckpt, args.prm, args.window, args.max_tokens,
                 args.slots, args.seed, args.temperature, args.arch,
                 args.mixed_step_kernel, args.step_token_budget,
-                args.prefix_cache)
+                args.prefix_cache, args.admission_policy, args.deadline)
     print(json.dumps(out, indent=2))
 
 

@@ -268,6 +268,7 @@ class BranchHandle:
     prompt_len: int
     done: bool = False
     last_reward: float = 0.0
+    scored: bool = False              # has the PRM ever scored this branch?
     saved_ssm: object = None          # host snapshot while suspended
 
 
@@ -494,6 +495,16 @@ class Engine:
         (surfaced by the serve CLI and ``Scheduler.metrics``)."""
         return (self.prefix_cache.stats()
                 if self.prefix_cache is not None else None)
+
+    def match_cached_tokens(self, prompt: List[int]) -> int:
+        """Non-mutating probe for LPM admission ordering: prompt tokens a
+        warm admission would serve from the radix cache right now (0 with
+        the cache off). Applies the same SSM-boundary gating a real
+        ``begin_prefill`` would, so the probe never over-promises."""
+        if self.prefix_cache is None:
+            return 0
+        return self.prefix_cache.match_tokens(
+            prompt, need_state=self.model.cfg.uses_ssm)
 
     @property
     def prefill_compile_count(self) -> int:

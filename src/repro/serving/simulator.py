@@ -185,6 +185,13 @@ class SimEngine:
         return (self.prefix_cache.stats()
                 if self.prefix_cache is not None else None)
 
+    def match_cached_tokens(self, prompt: List[int]) -> int:
+        """Mirror of Engine.match_cached_tokens: non-mutating LPM probe
+        (the sim plays back traces, so no SSM gating applies)."""
+        if self.prefix_cache is None:
+            return 0
+        return self.prefix_cache.match_tokens(prompt)
+
     def _advance_pending_prefill(self) -> None:
         """Account the chunk lanes riding this decode step: the same
         ``pack_chunk_lanes`` the live engine uses selects which pending
@@ -353,18 +360,84 @@ def poisson_burst_arrivals(num_requests: int, *, burst_gap: int,
     return sorted(times[:num_requests])
 
 
+def adversarial_shared_header_mix(num_warm: int = 6, num_cold: int = 8, *,
+                                  prompt_len: int = 512,
+                                  header_len: int = 448,
+                                  burst_at: int = 160, seed: int = 0):
+    """Workload for cache-aware admission studies: ``(prompts, arrivals)``.
+
+    A seeder request (arrival 0) plants a shared few-shot header in the
+    radix prefix cache; once it finishes, its pages idle on the cache's
+    LRU free-list. Then one burst arrives in which ``num_cold`` fully
+    distinct prompts are *submitted ahead of* the ``num_warm``
+    header-sharing ones — adversarial for FIFO admission under page
+    pressure: the colds' prompt allocations drain the free list and evict
+    the idle header pages before the warms are admitted, so the warms
+    miss. LPM ordering probes the cache, admits the warm matches first,
+    and thereby *pins* the header pages (increfed = not evictable) while
+    the colds queue behind. Size ``num_pages`` tight enough that the
+    colds actually force eviction (see ``benchmarks/fig5_e2e.py``).
+    """
+    rng = np.random.default_rng(seed + 0x11A)
+    tail = prompt_len - header_len
+    hdr = [tk.BOS] + [tk.digit(0)] * (header_len - 1)
+    prompts = [hdr + [tk.digit(9)] * (tail - 1) + [tk.EQUALS]]   # seeder
+    times = [0]
+    for _ in range(num_cold):
+        prompts.append([tk.BOS] + [tk.digit(int(d)) for d in
+                                   rng.integers(0, 10, size=prompt_len - 2)]
+                       + [tk.EQUALS])
+        times.append(burst_at)
+    for i in range(num_warm):
+        prompts.append(hdr + [tk.digit(1 + i % 8)] * (tail - 1)
+                       + [tk.EQUALS])
+        times.append(burst_at)
+    return prompts, times
+
+
+def mixed_deadline_workload(num_loose: int = 6, num_tight: int = 4, *,
+                            loose_slack: int = 800, tight_slack: int = 100,
+                            tight_lag: int = 2):
+    """Workload for SLO-aware admission studies: ``(arrivals, deadlines)``.
+
+    ``num_loose`` requests with a generous deadline arrive first (and are
+    submitted first), then ``num_tight`` urgent requests arrive
+    ``tight_lag`` ticks later with a tight absolute deadline. Under
+    serialized admission (single chunk lane), FIFO serves the loose
+    backlog first and the tight requests blow their deadlines waiting;
+    EDF reorders the arrived set by deadline and meets them."""
+    times = [0] * num_loose + [tight_lag] * num_tight
+    deadlines = [t + loose_slack for t in times[:num_loose]] + \
+                [t + tight_slack for t in times[num_loose:]]
+    return times, deadlines
+
+
 def run_sim_experiment(policy: str, n: int, *, num_requests: int = 40,
                        arrival_gap: int = 0, workload: SimWorkload = None,
                        engine_cfg: SimEngineConfig = None, window: int = 400,
                        max_tokens: int = 1 << 30, seed: int = 0,
                        m: int = 0, alpha: float = 0.5, beta: int = 0,
-                       arrival_times: Optional[List[int]] = None):
+                       arrival_times: Optional[List[int]] = None,
+                       admission_policy: str = "fifo",
+                       deadlines: Optional[List[Optional[int]]] = None,
+                       priorities: Optional[List[int]] = None,
+                       prompts: Optional[List[List[int]]] = None,
+                       max_steps: int = 200_000_000):
     """One simulated serving run; returns (metrics, accuracy).
 
     ``arrival_gap`` is the decode-step gap between request arrivals (the
     decode-step analogue of the paper's 1 vs 4 requests/second rates).
     ``arrival_times`` overrides it with an explicit per-request arrival
     clock (e.g. Poisson bursts for the chunk-lane ttfb experiments).
+
+    ``admission_policy`` selects the ordering over the arrived set
+    (``repro.core.policies``); ``deadlines`` (absolute clocks) and
+    ``priorities`` annotate requests for edf/priority ordering and the
+    SLO-attainment metrics. ``prompts`` overrides the built-in
+    shared-header prompt builder with explicit per-request token lists
+    (e.g. adversarial warm/cold mixes for cache-aware policy studies).
+    Accuracy counts only finished requests but divides by all submitted,
+    so an overload run (``max_steps``) scores what it actually served.
     """
     from ..core import OraclePRM, Scheduler, SchedulerConfig
     from ..data.tasks import extract_answer
@@ -374,23 +447,29 @@ def run_sim_experiment(policy: str, n: int, *, num_requests: int = 40,
     engine = SimEngine(engine_cfg, workload, seed=seed)
     prm = SimPRM(engine)
     cfg = SchedulerConfig(policy=policy, n=n, m=m, alpha=alpha, beta=beta,
-                          window=window, max_tokens=max_tokens)
+                          window=window, max_tokens=max_tokens,
+                          admission_policy=admission_policy)
     sch = Scheduler(engine, prm, cfg, answer_fn=extract_answer)
     rng = np.random.default_rng(seed + 1)
     for i in range(num_requests):
         task = SimTask(answer=int(rng.integers(0, 10)))
-        # shared few-shot header + (optionally) a request-distinct tail —
-        # the prefix-caching workload shape; prompt_tail=0 keeps the
-        # legacy identical prompts
-        tail = min(workload.prompt_tail, workload.prompt_len - 2)
-        prompt = [tk.BOS] \
-            + [tk.digit(0)] * (workload.prompt_len - 2 - tail) \
-            + [tk.digit(i % 10)] * tail + [tk.EQUALS]
+        if prompts is not None:
+            prompt = list(prompts[i])
+        else:
+            # shared few-shot header + (optionally) a request-distinct
+            # tail — the prefix-caching workload shape; prompt_tail=0
+            # keeps the legacy identical prompts
+            tail = min(workload.prompt_tail, workload.prompt_len - 2)
+            prompt = [tk.BOS] \
+                + [tk.digit(0)] * (workload.prompt_len - 2 - tail) \
+                + [tk.digit(i % 10)] * tail + [tk.EQUALS]
         arrival = (arrival_times[i] if arrival_times is not None
                    else i * arrival_gap)
-        req = sch.submit(prompt, payload=task, arrival=arrival)
+        req = sch.submit(prompt, payload=task, arrival=arrival,
+                         deadline=deadlines[i] if deadlines else None,
+                         priority=priorities[i] if priorities else 0)
         engine.tasks[req.request_id] = task
-    metrics = sch.run(max_steps=200_000_000)
+    metrics = sch.run(max_steps=max_steps)
     correct = sum(
         1 for r in metrics["requests"]
         if r["answer"] is not None

@@ -8,7 +8,9 @@ import numpy as np
 import pytest
 
 from repro.core import OraclePRM, Scheduler, SchedulerConfig
-from repro.core.pruning import TwoPhasePruner
+from repro.core.policies import make_policy, select_next
+from repro.core.pruning import PruningConfig, TwoPhasePruner
+from repro.core.scheduler import Request, percentile_latency
 from repro.data import tokenizer as tk
 from repro.data.tasks import extract_answer
 from repro.models import Model
@@ -17,6 +19,9 @@ from repro.serving.engine import (ChunkedPrefillState, derive_lane_configs,
                                   pack_chunk_lanes)
 from repro.serving.simulator import (SimEngine, SimEngineConfig, SimPRM,
                                      SimTask, SimWorkload,
+                                     adversarial_shared_header_mix,
+                                     mixed_deadline_workload,
+                                     poisson_burst_arrivals,
                                      run_sim_experiment)
 
 from conftest import tiny_config
@@ -369,6 +374,316 @@ def test_prefix_cache_sim_conserves_pages_end_to_end():
         "live pages leaked (cached-idle LRU pages must not count as used)"
     assert engine.prefix_cache.evictable == \
         engine.prefix_cache.tracked_pages
+
+
+# ------------------------------------------- admission policies + accounting
+
+
+def test_policy_parse_and_compose():
+    assert make_policy("fifo").name == "fifo"
+    assert make_policy("lpm").name == "lpm"
+    # every separator spelling builds the same composition
+    for spec in ("priority+lpm", "priority-then-lpm", "priority,lpm"):
+        p = make_policy(spec)
+        assert p.name == "priority+lpm"
+    with pytest.raises(ValueError):
+        make_policy("sjf")
+    with pytest.raises(ValueError):
+        make_policy("")
+
+
+def test_policy_select_next_starvation_bound():
+    """A request may be passed over by policy-preferred younger requests
+    only ``starvation_bound`` times; then it preempts the ordering."""
+    bound = 3
+    policy = make_policy("priority")
+    old = Request(0, [tk.BOS], arrival=0, priority=0)
+    for i in range(bound):
+        urgent = Request(1 + i, [tk.BOS], arrival=0, priority=5)
+        chosen = select_next(policy, [old, urgent], None, bound)
+        assert chosen is urgent
+        assert old.passed_over == i + 1
+    # old is starved now: it wins despite the lower priority tier
+    urgent = Request(99, [tk.BOS], arrival=0, priority=5)
+    chosen = select_next(policy, [old, urgent], None, bound)
+    assert chosen is old and old.passed_over == 0
+    # under fifo the oldest request always wins and nothing accrues
+    fifo = make_policy("fifo")
+    a, b = Request(3, [tk.BOS], arrival=0), Request(7, [tk.BOS], arrival=0)
+    assert select_next(fifo, [b, a], None, bound) is a
+    assert b.passed_over == 0
+
+
+def test_policy_out_of_order_arrival_not_head_blocked():
+    """Seed bug: ``_arrived`` peeked only the queue head, so an arrived
+    request submitted behind a future-arrival head waited for the head's
+    arrival clock. Admission must select over the whole arrived set."""
+    w = SimWorkload(mean_len=40, sigma_len=0.4, prompt_len=16,
+                    prm_drift=6.0, prm_noise=0.05)
+    ec = SimEngineConfig(max_slots=16, page_size=8, num_pages=4096,
+                         prefill_chunk=8)
+    m, _ = run_sim_experiment("sart", 4, num_requests=2, workload=w,
+                              engine_cfg=ec, window=20, seed=0,
+                              arrival_times=[500, 0])
+    late, early = m["requests"][0], m["requests"][1]
+    assert early["first_service"] is not None and early["first_service"] < 500
+    assert late["first_service"] >= 500
+    assert m["unfinished_requests"] == 0
+
+
+def _burst_digest(m, acc):
+    recs = tuple(
+        (r["request_id"], r["arrival"], r["first_service"], r["ttfb"],
+         r["finish"], r["e2e"], r["num_completed"], r["num_pruned"],
+         tuple(r["response_lengths"]))
+        for r in m["requests"])
+    pc = m.get("prefix_cache")
+    return (m["clock"], m["decode_steps"], round(acc, 6),
+            pc["hit_tokens"] if pc else None, recs)
+
+
+# Captured from the pre-PR scheduler (before the admission-policy layer)
+# on the fig5 burst workloads — policy="fifo" must stay bit-exact.
+_GOLDEN_FIFO = {
+    "single": (500, 500, 0.916667, None, (
+        (0, 0, 8, 8, 200, 200, 1, 3, (96,)),
+        (1, 0, 16, 16, 200, 200, 1, 3, (131,)),
+        (2, 0, 24, 24, 200, 200, 1, 3, (112,)),
+        (3, 0, 32, 32, 500, 500, 1, 3, (451,)),
+        (4, 0, 40, 40, 138, 138, 2, 1, (95, 99)),
+        (5, 0, 48, 48, 300, 300, 1, 3, (156,)),
+        (6, 0, 56, 56, 500, 500, 1, 3, (368,)),
+        (7, 30, 64, 34, 200, 170, 1, 3, (130,)),
+        (8, 30, 72, 42, 214, 184, 2, 2, (107, 143)),
+        (9, 30, 80, 50, 334, 304, 2, 2, (129, 255)),
+        (10, 30, 88, 58, 421, 391, 2, 2, (217, 334)),
+        (11, 30, 96, 66, 300, 270, 1, 3, (110,)))),
+    "multi_cached": (499, 499, 1.0, 3584, (
+        (0, 0, 8, 8, 225, 225, 2, 2, (96, 218)),
+        (1, 0, 8, 8, 200, 200, 1, 3, (131,)),
+        (2, 0, 8, 8, 286, 286, 2, 2, (112, 279)),
+        (3, 0, 8, 8, 499, 499, 2, 2, (451, 492)),
+        (4, 0, 10, 10, 108, 108, 2, 1, (95, 99)),
+        (5, 0, 10, 10, 165, 165, 2, 1, (56, 156)),
+        (6, 0, 12, 12, 400, 400, 1, 3, (368,)),
+        (7, 30, 32, 2, 200, 170, 1, 3, (143,)),
+        (8, 30, 32, 2, 200, 170, 1, 3, (129,)),
+        (9, 30, 32, 2, 300, 270, 1, 3, (187,)),
+        (10, 30, 31, 1, 200, 170, 1, 3, (130,)),
+        (11, 30, 32, 2, 100, 70, 1, 3, (51,)))),
+}
+
+
+def test_policy_fifo_bit_exact_with_pre_policy_scheduler():
+    """Acceptance: admission_policy="fifo" reproduces the pre-policy-layer
+    scheduler metric-for-metric on the fig5 burst workloads (single-lane
+    uncached and multi-lane cached), pinned by golden digests."""
+    w = SimWorkload(mean_len=200, sigma_len=0.6, overthink_p=0.12,
+                    correct_p=0.55, prompt_len=512, prompt_tail=64)
+    times = poisson_burst_arrivals(12, burst_gap=30, burst_mean=5)
+    for tag, budget, cached in (("single", 64, False),
+                                ("multi_cached", 256, True)):
+        ec = SimEngineConfig(max_slots=128, num_pages=500000,
+                             prefill_chunk=64, step_token_budget=budget,
+                             prefix_cache=cached)
+        m, acc = run_sim_experiment("sart", 4, num_requests=12, workload=w,
+                                    engine_cfg=ec, window=100, seed=0,
+                                    arrival_times=times,
+                                    admission_policy="fifo")
+        assert _burst_digest(m, acc) == _GOLDEN_FIFO[tag], tag
+
+
+def test_policy_lpm_without_cache_degrades_to_fifo():
+    """LPM's probe returns 0 for every request on a cache-less engine, so
+    the request_id tiebreak makes it bit-exact with fifo."""
+    w = SimWorkload(mean_len=100, sigma_len=0.5, prompt_len=128)
+    runs = []
+    for pol in ("fifo", "lpm"):
+        ec = SimEngineConfig(max_slots=32, page_size=16, num_pages=65536,
+                             prefill_chunk=64)
+        m, acc = run_sim_experiment("sart", 4, num_requests=10, workload=w,
+                                    engine_cfg=ec, window=50, seed=3,
+                                    arrival_times=[0, 0, 0, 20, 20, 40, 40,
+                                                   40, 40, 60],
+                                    admission_policy=pol)
+        runs.append(_burst_digest(m, acc))
+    assert runs[0] == runs[1]
+
+
+def test_policy_lpm_beats_fifo_warm_hit_rate():
+    """Tentpole acceptance at sim scale: on the adversarial shared-header
+    burst under page pressure (cold prompts submitted ahead of warm ones,
+    num_pages tight enough that cold admissions evict the idle header),
+    LPM ordering strictly improves the warm-hit token rate — it admits
+    cached-prefix matches first, pinning the header pages."""
+    prompts, times = adversarial_shared_header_mix()
+    w = SimWorkload(mean_len=80, sigma_len=0.5, overthink_p=0.1,
+                    correct_p=0.55, prompt_len=512)
+    ec = SimEngineConfig(max_slots=128, num_pages=280, prefill_chunk=64,
+                         step_token_budget=256, prefix_cache=True)
+    rate = {}
+    for pol in ("fifo", "lpm"):
+        m, _ = run_sim_experiment(
+            "sart", 4, num_requests=len(prompts), workload=w, engine_cfg=ec,
+            window=100, seed=0, arrival_times=times, prompts=prompts,
+            admission_policy=pol)
+        recs = m["requests"]
+        assert m["unfinished_requests"] == 0
+        rate[pol] = (sum(r["cached_tokens"] for r in recs)
+                     / sum(r["prompt_tokens"] for r in recs))
+    assert rate["lpm"] > rate["fifo"]
+
+
+def test_policy_edf_beats_fifo_deadline_attainment():
+    """Tentpole acceptance at sim scale: on the mixed-deadline workload
+    over a serialized single chunk lane, EDF strictly improves SLO
+    attainment — fifo drains the loose-deadline backlog first and the
+    late-arriving tight requests miss."""
+    times, deadlines = mixed_deadline_workload()
+    w = SimWorkload(mean_len=40, sigma_len=0.5, overthink_p=0.1,
+                    correct_p=0.55, prompt_len=512)
+    ec = SimEngineConfig(max_slots=64, num_pages=500000, prefill_chunk=64,
+                         step_token_budget=64)
+    att = {}
+    for pol in ("fifo", "edf"):
+        m, _ = run_sim_experiment(
+            "sart", 4, num_requests=len(times), workload=w, engine_cfg=ec,
+            window=100, seed=0, arrival_times=times, admission_policy=pol,
+            deadlines=deadlines)
+        slo = m["slo"]
+        assert slo["with_deadline"] == len(times)
+        assert slo["deadline_met"] + slo["deadline_missed"] == len(times)
+        att[pol] = slo["attainment"]
+    assert att["edf"] > att["fifo"]
+
+
+def test_prefix_cache_probe_is_non_mutating():
+    """``match_tokens`` (the LPM probe, run over every queued request each
+    admission opportunity) must be observationally free: no references
+    taken, no LRU reorder, no hit/lookup counter movement."""
+    eng = SimEngine(SimEngineConfig(max_slots=4, page_size=8, num_pages=64,
+                                    prefill_chunk=8, prefix_cache=True),
+                    SimWorkload(prompt_len=32), seed=0)
+    prompt = [tk.BOS] + [tk.digit(0)] * 30 + [tk.EQUALS]
+    st = eng.begin_prefill(prompt)
+    while not st.done:
+        eng.decode_step()
+    blocks, _, _ = eng.finish_prefill(st)
+    eng.release_prefix(blocks)          # park the pages on the cache's LRU
+    cache = eng.prefix_cache
+    before = cache.stats()
+    lru_before = list(cache.lru_pages)
+    refs_before = [eng.allocator.refcount(p) for p in lru_before]
+    # warm probe: matches the cached pages, capped so the last prompt
+    # token is always recomputed ((32 - 1) // 8 = 3 pages)
+    assert eng.match_cached_tokens(prompt) == 24
+    # cold probe: no match
+    assert eng.match_cached_tokens([tk.digit(3)] * 32) == 0
+    assert cache.stats() == before
+    assert list(cache.lru_pages) == lru_before
+    assert [eng.allocator.refcount(p) for p in lru_before] == refs_before
+
+
+def test_truncated_completion_keeps_pruning_threshold():
+    """Satellite bugfix: a truncated completion (force-eviction or
+    max-token cap) counts toward early stop but must not flip the pruner
+    to phase 2 or seed the α′ threshold with a phantom reward."""
+    pruner = TwoPhasePruner(PruningConfig(alpha=0.5))
+    meta = pruner.new_meta(8, 4)
+    pruner.on_completion(meta, 0.95, truncated=True)
+    assert meta.phase == "explore"
+    assert meta.threshold == 0.5            # still α, not the phantom 0.95
+    assert meta.num_completed == 1 and meta.num_truncated == 1
+    # a genuine completion then flips the phase with ITS reward as α′
+    pruner.on_completion(meta, 0.7)
+    assert meta.phase == "exploit" and meta.threshold == 0.7
+    assert meta.max_num_pruned == meta.n - 1
+    assert meta.num_completed == 2 and meta.num_truncated == 1
+
+
+def test_truncated_completions_surface_in_metrics():
+    """max-token-capped branches count as truncated in the per-request
+    record; capped runs finish instead of spinning."""
+    w = SimWorkload(mean_len=120, sigma_len=0.4, prompt_len=16,
+                    prm_drift=6.0, prm_noise=0.05)
+    ec = SimEngineConfig(max_slots=16, page_size=8, num_pages=4096,
+                         prefill_chunk=8)
+    m, _ = run_sim_experiment("sart", 4, num_requests=4, workload=w,
+                              engine_cfg=ec, window=20, seed=0,
+                              max_tokens=20)
+    assert m["unfinished_requests"] == 0
+    assert sum(r["num_truncated"] for r in m["requests"]) > 0
+    for r in m["requests"]:
+        assert r["num_truncated"] <= r["num_completed"]
+
+
+class _FixedPRM:
+    """PRM stub with per-branch canned rewards (records nothing else)."""
+
+    def __init__(self, rewards):
+        self.rewards = rewards
+
+    def score(self, request, handles):
+        return [self.rewards[h.branch_id] for h in handles]
+
+
+def test_preemption_scores_unscored_victims():
+    """Satellite bugfix: victim selection must not default an unscored
+    branch's reward to 0.0 — a strong branch that simply hasn't hit a
+    scoring window yet would always be the victim."""
+    engine = SimEngine(SimEngineConfig(max_slots=2, page_size=8,
+                                       num_pages=1024, prefill_chunk=8),
+                       SimWorkload(mean_len=500, prompt_len=8), seed=0)
+    cfg = SchedulerConfig(policy="sart", n=2, m=2, preempt=True, window=4,
+                          max_tokens=1 << 20)
+    prm = _FixedPRM({0: 0.2, 1: 0.9})
+    sch = Scheduler(engine, prm, cfg, answer_fn=extract_answer)
+    req0 = sch.submit([tk.BOS] * 8)
+    req1 = sch.submit([tk.BOS] * 8)
+    blocks, lg, ssm = engine.prefill(req0.prompt)
+    weak = engine.spawn_branch(req0.request_id, blocks, lg, ssm, 8)
+    strong = engine.spawn_branch(req0.request_id, blocks, lg, ssm, 8)
+    req0.live = {weak.branch_id: weak, strong.branch_id: strong}
+    req0.prefix_blocks = blocks
+    # the weak branch was scored at a pruning window; the strong one never
+    weak.last_reward = 0.2
+    weak.scored = True
+    # a waiting branch spawn justifies preempting (both slots are taken)
+    blocks1, lg1, ssm1 = engine.prefill(req1.prompt)
+    req1.prefix_blocks, req1.last_logits = blocks1, lg1
+    req1.ssm_state, req1.pending = ssm1, 1
+    sch.branch_queue.append(req1)
+    sch._maybe_preempt()
+    # seed bug: strong (unscored, last_reward 0.0) was the victim; fixed
+    # selection scores it first (0.9) and suspends the weak branch
+    assert sch.suspended and sch.suspended[0] is weak
+    assert weak.slot == -1
+    assert strong.scored and strong.slot >= 0
+    assert req1.pending == 0                 # the waiting spawn got the slot
+
+
+def test_metrics_emit_unfinished_requests():
+    """Satellite bugfix: a run stopped at max_steps must report still-live
+    requests (finish=None) instead of silently dropping them — omitting
+    them survivorship-biases percentiles exactly under overload."""
+    w = SimWorkload(mean_len=60, sigma_len=0.4, prompt_len=16,
+                    prm_drift=6.0, prm_noise=0.05)
+    ec = SimEngineConfig(max_slots=16, page_size=8, num_pages=4096,
+                         prefill_chunk=8)
+    m, _ = run_sim_experiment("sart", 4, num_requests=6, workload=w,
+                              engine_cfg=ec, window=20, seed=0,
+                              arrival_times=[0, 0, 100, 100, 5000, 5000],
+                              max_steps=300)
+    assert len(m["requests"]) == 6
+    assert m["completed_requests"] + m["unfinished_requests"] == 6
+    assert m["unfinished_requests"] >= 2     # the t=5000 pair never arrived
+    for r in m["requests"]:
+        if r["finish"] is None:
+            assert r["e2e"] is None and r["inference"] is None
+        else:
+            assert r["e2e"] == r["finish"] - r["arrival"]
+    # percentiles skip the None fields instead of crashing or zeroing
+    assert np.isfinite(percentile_latency(m, 50))
 
 
 @pytest.mark.parametrize("family_kw", [
