@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# Run the repo's static-analysis gate locally (mirrors CI's `lint` job).
+#
+#   scripts/lint.sh               # reprolint (src tests) + mypy strict set
+#   scripts/lint.sh --json        # flags pass through to reprolint
+#
+# reprolint is stdlib-only and always runs; the mypy lane is skipped with
+# a warning when mypy is not installed (it is not baked into the dev
+# container — CI installs it from requirements-dev.txt).
+# See docs/analysis.md for the rule catalog and the baseline workflow.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+python -m tools.reprolint src tests "$@"
+
+if python -c "import mypy" 2>/dev/null; then
+  python -m mypy src/repro/kv src/repro/core/policies.py
+else
+  echo "lint.sh: mypy not installed — skipping the typing lane" \
+       "(pip install -r requirements-dev.txt to enable)" >&2
+fi

@@ -39,7 +39,10 @@ gives in-flight prefills (``pack_chunk_lanes``), applied one layer up.
 from __future__ import annotations
 
 import math
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import (Any, List, Sequence, Tuple, Union, TYPE_CHECKING)
+
+if TYPE_CHECKING:  # pragma: no cover - import cycle guard, types only
+    from .scheduler import Request, Scheduler
 
 ADMISSION_POLICIES = ("fifo", "lpm", "edf", "priority")
 
@@ -52,13 +55,13 @@ class AdmissionPolicy:
 
     name = "fifo"
 
-    def key(self, req, sched) -> Tuple:
+    def key(self, req: "Request", sched: "Scheduler") -> Tuple[Any, ...]:
         """Sort key for ``req`` (lower = admitted earlier). ``sched`` is
         the driving ``Scheduler`` — policies read clock/cache through it
         so ``Engine`` and ``SimEngine`` go through one code path."""
         return ()
 
-    def __repr__(self):
+    def __repr__(self) -> str:
         return f"{type(self).__name__}({self.name!r})"
 
 
@@ -72,7 +75,8 @@ class LpmPolicy(AdmissionPolicy):
     without a prefix cache probe as 0 everywhere — pure FIFO."""
     name = "lpm"
 
-    def key(self, req, sched) -> Tuple:
+    def key(self, req: "Request", sched: "Scheduler") -> Tuple[Any, ...]:
+        """Negated cached-token count: hotter prompts sort earlier."""
         return (-sched.probe_cached_tokens(req),)
 
 
@@ -80,7 +84,8 @@ class EdfPolicy(AdmissionPolicy):
     """Earliest absolute deadline first; deadline-less requests last."""
     name = "edf"
 
-    def key(self, req, sched) -> Tuple:
+    def key(self, req: "Request", sched: "Scheduler") -> Tuple[Any, ...]:
+        """Absolute deadline clock; ``inf`` parks deadline-less last."""
         return (req.deadline if req.deadline is not None else math.inf,)
 
 
@@ -88,7 +93,8 @@ class PriorityPolicy(AdmissionPolicy):
     """Higher priority tier first (default tier 0)."""
     name = "priority"
 
-    def key(self, req, sched) -> Tuple:
+    def key(self, req: "Request", sched: "Scheduler") -> Tuple[Any, ...]:
+        """Negated tier: higher-priority requests sort earlier."""
         return (-req.priority,)
 
 
@@ -96,12 +102,13 @@ class ComposedPolicy(AdmissionPolicy):
     """Lexicographic composition: earlier parts dominate, later parts
     break their ties (e.g. priority-then-lpm)."""
 
-    def __init__(self, parts: Sequence[AdmissionPolicy]):
+    def __init__(self, parts: Sequence[AdmissionPolicy]) -> None:
         self.parts = tuple(parts)
         self.name = "+".join(p.name for p in self.parts)
 
-    def key(self, req, sched) -> Tuple:
-        out: Tuple = ()
+    def key(self, req: "Request", sched: "Scheduler") -> Tuple[Any, ...]:
+        """Concatenation of the parts' keys, in composition order."""
+        out: Tuple[Any, ...] = ()
         for p in self.parts:
             out += p.key(req, sched)
         return out
@@ -115,7 +122,7 @@ _REGISTRY = {
 }
 
 
-def make_policy(spec) -> AdmissionPolicy:
+def make_policy(spec: Union[str, AdmissionPolicy]) -> AdmissionPolicy:
     """Build a policy from a config string (``"fifo"``, ``"lpm"``,
     ``"edf"``, ``"priority"``, or compositions like ``"priority+lpm"`` /
     ``"priority-then-lpm"``). Policy instances pass through unchanged."""
@@ -136,8 +143,8 @@ def make_policy(spec) -> AdmissionPolicy:
     return parts[0] if len(parts) == 1 else ComposedPolicy(parts)
 
 
-def select_next(policy: AdmissionPolicy, arrived: List, sched,
-                starvation_bound: int):
+def select_next(policy: AdmissionPolicy, arrived: List["Request"],
+                sched: "Scheduler", starvation_bound: int) -> "Request":
     """Pick the next request to admit from the arrived set.
 
     Starved requests (passed over ``starvation_bound`` times by younger

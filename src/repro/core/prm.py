@@ -39,6 +39,8 @@ def init_prm_head(key, d_model: int, hidden_dim: int = 64) -> dict:
 
 
 def reward_logit(params: dict, hidden) -> jax.Array:
+    """Pre-sigmoid reward head output for ``hidden [..., D] -> [...]``;
+    dispatches on the param pytree shape (MLP vs legacy linear head)."""
     if "w1" in params:
         h = jax.nn.tanh(hidden @ params["w1"] + params["b1"])
         return h @ params["w2"] + params["b2"]
@@ -66,6 +68,7 @@ class PRM:
     """Scores live branches of a request. Higher = more right-thinking."""
 
     def score(self, request, handles: Sequence) -> List[float]:
+        """Reward in [0, 1] per handle, aligned with ``handles`` order."""
         raise NotImplementedError
 
 
@@ -76,6 +79,8 @@ class RewardHeadPRM(PRM):
         self.engine = engine
 
     def score(self, request, handles) -> List[float]:
+        """Index the engine's per-slot reward vector by handle slot (one
+        host sync per pruning round, not per handle)."""
         rewards = self.engine.score_slots()  # [max_slots]
         return [float(rewards[h.slot]) for h in handles]
 
@@ -93,6 +98,8 @@ class OraclePRM(PRM):
         self._rng = np.random.default_rng(seed)
 
     def score(self, request, handles) -> List[float]:
+        """Grade each handle's partial token stream, clipping the noised
+        reward back into [0, 1]."""
         out = []
         for h in handles:
             r = float(self.grader(request, h.tokens))

@@ -49,6 +49,9 @@ class TwoPhasePruner:
         self.cfg = cfg
 
     def new_meta(self, n: int, m: int) -> RequestMeta:
+        """Fresh per-request pruning state in the explore phase, with the
+        phase-1 prune cap resolved (beta<=0 -> N//2, capped at n-1 so at
+        least one branch always survives to completion)."""
         beta = self.cfg.beta if self.cfg.beta > 0 else max(n // 2, 1)
         return RequestMeta(n=n, m=m, phase="explore",
                            threshold=self.cfg.alpha,

@@ -83,6 +83,9 @@ class SchedulerConfig:
     admission_starvation_bound: int = 4
 
     def resolve(self) -> "SchedulerConfig":
+        """Normalized copy with policy-dependent defaults applied:
+        vanilla forces n=m=1, sc/rebase keep all n branches, and m<=0
+        becomes the paper's N//2 early-stop default (clamped to [1, n])."""
         n, m = self.n, self.m
         if self.policy == "vanilla":
             n, m = 1, 1
@@ -93,7 +96,10 @@ class SchedulerConfig:
         return dataclasses.replace(self, n=n, m=max(min(m, n), 1))
 
 
-@dataclasses.dataclass
+# eq=False: scheduler queues (prefilling, waiting) test membership and
+# remove by identity — two requests with equal fields are still distinct
+# requests (reprolint REP004)
+@dataclasses.dataclass(eq=False)
 class Request:
     request_id: int
     prompt: List[int]
@@ -119,6 +125,7 @@ class Request:
 
     @property
     def done(self) -> bool:
+        """True once the scheduler stamped a finish clock (terminal)."""
         return self.finish >= 0
 
 
@@ -128,7 +135,8 @@ class Timeline:
     live_branches: List[int] = dataclasses.field(default_factory=list)
     live_tokens: List[int] = dataclasses.field(default_factory=list)
 
-    def record(self, step, branches, tokens):
+    def record(self, step: int, branches: int, tokens: int) -> None:
+        """Append one sample of the live-branch/live-token occupancy."""
         self.steps.append(step)
         self.live_branches.append(branches)
         self.live_tokens.append(tokens)

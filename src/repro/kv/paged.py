@@ -41,11 +41,16 @@ here):
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple, TYPE_CHECKING
+
+if TYPE_CHECKING:  # pragma: no cover - import cycle guard, types only
+    from .prefix_cache import PrefixCache
 
 
 class OutOfPagesError(RuntimeError):
-    pass
+    """Raised when an allocation cannot be covered by free + evictable
+    pages. Acquiring paths must leave refcounts unchanged when it
+    propagates (the all-or-nothing contract; reprolint REP002)."""
 
 
 @dataclasses.dataclass
@@ -56,21 +61,23 @@ class BranchBlocks:
     length: int = 0               # valid tokens
 
     def copy(self) -> "BranchBlocks":
+        """Shallow copy: a new page list, the same page ids. Refcounts are
+        untouched — use ``PageAllocator.fork`` to share pages."""
         return BranchBlocks(list(self.pages), self.num_shared, self.length)
 
 
 class PageAllocator:
     """Ref-counted page allocator (host-side)."""
 
-    def __init__(self, num_pages: int, page_size: int):
+    def __init__(self, num_pages: int, page_size: int) -> None:
         assert num_pages > 0 and page_size > 0
         self.num_pages = num_pages
         self.page_size = page_size
         self._free: List[int] = list(range(num_pages - 1, -1, -1))
         self._refs: Dict[int, int] = {}
-        self._cache = None                 # optional PrefixCache
+        self._cache: Optional["PrefixCache"] = None
 
-    def attach_cache(self, cache) -> None:
+    def attach_cache(self, cache: "PrefixCache") -> None:
         """Attach a ``PrefixCache`` (called by its constructor): decrefs
         of tracked pages park on the cache's LRU free-list, and ``alloc``
         evicts from it when the true free list runs dry."""
@@ -93,6 +100,9 @@ class PageAllocator:
         return self.num_pages - self.free_pages
 
     def alloc(self) -> int:
+        """Take one fresh page at refcount 1, evicting a cache-idle LRU
+        page if the free list is dry. Raises ``OutOfPagesError`` (state
+        unchanged) when neither source can supply a page."""
         if not self._free:
             if self._cache is not None and self._cache.evictable:
                 self._cache.evict_one()    # LRU page -> self._free
@@ -103,9 +113,15 @@ class PageAllocator:
         return pid
 
     def incref(self, pid: int) -> None:
+        """Add one reference to a *live* page (KeyError on a dead one —
+        sharing can only extend lifetimes, never revive; reviving a cached
+        refcount-0 page is ``resurrect``'s job)."""
         self._refs[pid] += 1
 
     def decref(self, pid: int) -> None:
+        """Drop one reference; at zero the page leaves the live set — to
+        the prefix cache's LRU list if the cache tracks it (K/V stay
+        resident for resurrection), else to the free list."""
         self._refs[pid] -= 1
         assert self._refs[pid] >= 0, f"page {pid} double-free"
         if self._refs[pid] == 0:
@@ -137,10 +153,12 @@ class PageAllocator:
         self._free.append(pid)
 
     def refcount(self, pid: int) -> int:
+        """Current reference count; 0 for free and cached-idle pages."""
         return self._refs.get(pid, 0)
 
     # ------------------------------------------------------- branch helpers
     def pages_for(self, num_tokens: int) -> int:
+        """Pages needed to hold ``num_tokens`` (ceiling division)."""
         return -(-num_tokens // self.page_size)
 
     def alloc_prefix(self, num_tokens: int) -> BranchBlocks:
@@ -165,7 +183,16 @@ class PageAllocator:
         n = self.pages_for(new_length) - len(b.pages)
         if n > self.free_pages:
             raise OutOfPagesError(f"need {n} pages, {self.free_pages} free")
-        new = [self.alloc() for _ in range(max(n, 0))]
+        new: List[int] = []
+        try:
+            for _ in range(max(n, 0)):
+                new.append(self.alloc())
+        except OutOfPagesError:
+            # all-or-nothing structurally, not just via the pre-check:
+            # return the pages already taken before re-raising
+            for pid in reversed(new):
+                self.decref(pid)
+            raise
         b.pages.extend(new)
         b.length = new_length
         return new
@@ -177,6 +204,8 @@ class PageAllocator:
         the engine performs copy-on-write when a branch needs to append into
         a shared partial page (see ``needs_cow``).
         """
+        # reprolint REP002 is baselined here: incref on a live parent page
+        # cannot raise OutOfPagesError, so the loop cannot partially fail
         for pid in parent.pages:
             self.incref(pid)
         return BranchBlocks(pages=list(parent.pages),
@@ -190,7 +219,7 @@ class PageAllocator:
         last_idx = len(b.pages) - 1
         return last_idx < b.num_shared and self.refcount(b.pages[last_idx]) > 1
 
-    def cow_last_page(self, b: BranchBlocks) -> tuple:
+    def cow_last_page(self, b: BranchBlocks) -> Tuple[int, int]:
         """Copy-on-write the trailing shared partial page.
 
         Returns (old_pid, new_pid) so the engine can copy device data.
@@ -202,7 +231,7 @@ class PageAllocator:
         b.num_shared = len(b.pages) - 1
         return old, new
 
-    def append_token(self, b: BranchBlocks) -> Optional[tuple]:
+    def append_token(self, b: BranchBlocks) -> Optional[Tuple[int, int]]:
         """Account for one more token; allocates a page on boundary.
 
         Returns (old_pid, new_pid) if a CoW copy is required, else None.
@@ -231,6 +260,9 @@ class PageAllocator:
 
     # ------------------------------------------------------------ invariants
     def check_invariants(self) -> None:
+        """Assert the pool partition: live + free + cached-idle LRU pages
+        cover every page exactly once, and all refcounts are positive.
+        O(num_pages); tests call it after every mutation."""
         live = set(self._refs)
         free = set(self._free)
         lru = set(self._cache.lru_pages) if self._cache is not None else set()

@@ -51,9 +51,10 @@ from __future__ import annotations
 
 import dataclasses
 from collections import OrderedDict
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import (Callable, Dict, KeysView, List, Optional, Sequence,
+                    Tuple)
 
-from .paged import BranchBlocks, OutOfPagesError
+from .paged import BranchBlocks, OutOfPagesError, PageAllocator
 
 # rolling-hash seed for the radix root (any constant works; the chain is
 # (seed, page0) -> (h0, page1) -> ...)
@@ -61,6 +62,9 @@ _ROOT_HASH = 0x9E3779B9
 
 
 def default_page_hash(parent_hash: int, tokens: tuple) -> int:
+    """Rolling page hash: chain the parent's hash with this page's
+    tokens. Pluggable (collisions are verified away by ``_match_child``,
+    so a weak hash degrades to misses, never wrong pages)."""
     return hash((parent_hash, tokens))
 
 
@@ -80,7 +84,9 @@ class CacheNode:                           # legally share (hash, tokens)
 class PrefixCache:
     """Radix page-hash cache; attaches itself to a ``PageAllocator``."""
 
-    def __init__(self, allocator, hash_fn: Callable = default_page_hash):
+    def __init__(self, allocator: PageAllocator,
+                 hash_fn: Callable[[int, tuple], int] = default_page_hash
+                 ) -> None:
         self.allocator = allocator
         self.page_size = allocator.page_size
         self.hash_fn = hash_fn
@@ -108,7 +114,8 @@ class PrefixCache:
                 return cand
         return None
 
-    def _walk(self, prompt: Sequence[int], max_pages: int):
+    def _walk(self, prompt: Sequence[int],
+              max_pages: int) -> List[CacheNode]:
         """Longest chain of cached nodes covering ``prompt``'s pages."""
         matched: List[CacheNode] = []
         h, node = _ROOT_HASH, None
@@ -130,10 +137,13 @@ class PrefixCache:
 
     @property
     def tracked_pages(self) -> int:
+        """Pages the radix tree currently maps (live + idle)."""
         return len(self._by_page)
 
     @property
-    def lru_pages(self):
+    def lru_pages(self) -> "KeysView[int]":
+        """Ids of refcount-0 cached pages, oldest-idled first (a live
+        view — the allocator's partition check iterates it)."""
         return self._lru.keys()
 
     def match_tokens(self, prompt: Sequence[int],
@@ -180,14 +190,27 @@ class PrefixCache:
         if need_state:
             while matched and matched[-1].ssm_state is None:
                 matched.pop()
-        for node in matched:
-            pid = node.page_id
-            if self.allocator.refcount(pid) == 0:
-                self._lru.pop(pid)
-                self.allocator.resurrect(pid)
-                self.resurrections += 1
-            else:
-                self.allocator.incref(pid)
+        taken: List[int] = []
+        try:
+            for node in matched:
+                pid = node.page_id
+                if self.allocator.refcount(pid) == 0:
+                    # resurrect BEFORE the LRU pop: if it raises, the
+                    # page is still parked (live/free/LRU partition
+                    # intact) instead of stranded in neither set
+                    self.allocator.resurrect(pid)
+                    self._lru.pop(pid)
+                    self.resurrections += 1
+                else:
+                    self.allocator.incref(pid)
+                taken.append(pid)
+        except Exception:
+            # all-or-nothing like admit: give back the references already
+            # taken (decref re-idles resurrected pages onto the LRU via
+            # retain, so conservation holds) before propagating
+            for pid in reversed(taken):
+                self.allocator.decref(pid)
+            raise
         if matched:
             self.hits += 1
             self.hit_tokens += len(matched) * self.page_size
@@ -293,6 +316,9 @@ class PrefixCache:
 
     # ------------------------------------------------------------ diagnostics
     def stats(self) -> Dict[str, float]:
+        """Counter snapshot for the serve CLI and benchmarks: lookups,
+        hits, token-weighted hit rate, insert/evict/resurrect totals, and
+        current tracked/LRU page counts."""
         return {
             "lookups": self.lookups,
             "hits": self.hits,

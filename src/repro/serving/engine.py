@@ -160,6 +160,7 @@ class ChunkedPrefillState:
 
     @property
     def remaining(self) -> int:
+        """Prompt tokens still to prefill (0 once the state is done)."""
         return len(self.prompt) - self.next_pos
 
 
@@ -349,14 +350,18 @@ class Engine:
                 "has no chunk-start offset to resume from")
         self.prefix_cache = (PrefixCache(self.allocator)
                              if cfg.prefix_cache else None)
+        # cached no-CoW (src, dst) sentinel pair (see _cow_arrays)
+        self._cow_sentinel: Optional[tuple] = None
 
     # ------------------------------------------------------------------ util
     @property
     def free_slots(self) -> List[int]:
+        """Unoccupied decode-slot indices, ascending."""
         return [i for i, s in enumerate(self.slots) if s is None]
 
     @property
     def num_active(self) -> int:
+        """Occupied decode slots (forces the host-side active mask)."""
         return int(self._active.sum())
 
     def live_tokens(self) -> int:
@@ -488,6 +493,7 @@ class Engine:
 
     @property
     def has_pending_prefill(self) -> bool:
+        """True while any admitted prompt still has chunks to run."""
         return bool(self._pending_prefills)
 
     def prefix_cache_stats(self) -> Optional[Dict]:
@@ -822,7 +828,17 @@ class Engine:
         [max_slots] index arrays ``_step_fn`` consumes (each decode slot
         CoWs at most once per step). Unused entries hold the OOB sentinel:
         the fused gather/scatter drops them, so the pure-decode and mixed
-        shapes stay identical whether or not any copy happens."""
+        shapes stay identical whether or not any copy happens.
+
+        Most steps CoW nothing, so the all-sentinel pair is built and
+        transferred once and reused — no per-step host->device copy for
+        the common case."""
+        if not cows:
+            if self._cow_sentinel is None:
+                empty = np.full((self.cfg.max_slots,), self.cfg.num_pages,
+                                np.int32)
+                self._cow_sentinel = (jnp.asarray(empty), jnp.asarray(empty))
+            return self._cow_sentinel
         src = np.full((self.cfg.max_slots,), self.cfg.num_pages, np.int32)
         dst = np.full((self.cfg.max_slots,), self.cfg.num_pages, np.int32)
         for j, (old, new) in enumerate(cows):
@@ -1047,6 +1063,9 @@ class Engine:
                 raise OutOfPagesError(
                     "decode step needs more pages than are free")
             cows = []
+            # reprolint REP002 baselined: the pages_needed_for_step
+            # pre-check above reserves this loop's worst case, so
+            # append_token cannot raise mid-way
             for h in self.slots:
                 if h is None:
                     continue
@@ -1082,7 +1101,10 @@ class Engine:
         self.decode_steps_executed += 1
 
         out: Dict[int, int] = {}
-        toks = np.asarray(next_tokens)
+        # the one mandated sync per step: sampled tokens drive host-side
+        # branch bookkeeping (EOS detection, page accounting) before the
+        # next dispatch can be built
+        toks = np.asarray(next_tokens)  # reprolint: disable=REP005
         for slot, h in enumerate(self.slots):
             if h is None:
                 continue

@@ -17,6 +17,8 @@ class SamplingParams:
 
 
 def apply_top_k(logits, k: int):
+    """Mask all but the k highest logits to NEG_INF (no-op for k<=0 or
+    k >= vocab)."""
     if k <= 0 or k >= logits.shape[-1]:
         return logits
     kth = jnp.sort(logits, axis=-1)[..., -k][..., None]
@@ -24,6 +26,8 @@ def apply_top_k(logits, k: int):
 
 
 def apply_top_p(logits, p: float):
+    """Nucleus filtering: mask logits outside the smallest set whose
+    probability mass reaches p (top-1 always kept; no-op for p >= 1)."""
     if p >= 1.0:
         return logits
     sorted_logits = jnp.sort(logits, axis=-1)[..., ::-1]

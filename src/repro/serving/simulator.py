@@ -118,16 +118,22 @@ class SimEngine:
     # ----------------------------------------------------- engine interface
     @property
     def free_slots(self) -> List[int]:
+        """Unoccupied decode-slot indices, ascending."""
         return [i for i, s in enumerate(self.slots) if s is None]
 
     @property
     def num_active(self) -> int:
+        """Occupied decode slots."""
         return sum(s is not None for s in self.slots)
 
     def live_tokens(self) -> int:
+        """Total tokens resident in the KV pool (paper Fig. 3)."""
         return sum(s.blocks.length for s in self.slots if s is not None)
 
     def prefill(self, prompt: List[int]):
+        """Legacy synchronous prefill: allocate the prompt's pages in one
+        shot. Returns ``(blocks, last_logits, ssm_state)`` — the latter two
+        are None (the sim plays back traces, no model runs)."""
         blocks = self.allocator.alloc_prefix(len(prompt))
         return blocks, None, None
 
@@ -156,6 +162,9 @@ class SimEngine:
         return st
 
     def finish_prefill(self, st: ChunkedPrefillState):
+        """Harvest a completed chunked prefill: ownership of its pages
+        passes to the branches forked off it (mirror of
+        ``Engine.finish_prefill``)."""
         assert st.done, "prefill still has pending chunks"
         st.harvested = True
         return st.blocks, st.last_logits, st.ssm_state
@@ -172,6 +181,7 @@ class SimEngine:
 
     @property
     def has_pending_prefill(self) -> bool:
+        """True while any admitted prompt still has chunks to account."""
         return bool(self._pending_prefills)
 
     @property
@@ -227,6 +237,9 @@ class SimEngine:
     def spawn_branch(self, request_id: int, prefix_blocks: BranchBlocks,
                      last_logits, ssm_state, prompt_len: int
                      ) -> Optional[BranchHandle]:
+        """Seat a new branch sharing the request's prefix pages, sampling
+        its destiny (length/correctness/quality) from the workload.
+        Returns None when no decode slot is free."""
         free = self.free_slots
         if not free:
             return None
@@ -241,6 +254,9 @@ class SimEngine:
         return h
 
     def fork_branch(self, parent: BranchHandle) -> Optional[BranchHandle]:
+        """Seat a copy-on-write child of a live branch (rebase expansion):
+        shares all parent pages, inherits its tokens, resamples the
+        remaining destiny. Returns None when no slot is free."""
         free = self.free_slots
         if not free:
             return None
@@ -257,6 +273,9 @@ class SimEngine:
         return h
 
     def pages_needed_for_step(self) -> int:
+        """Worst-case fresh pages the next decode step may allocate
+        (boundary pages + CoW copies) — the admission-control pre-check
+        ``decode_step`` runs before touching the allocator."""
         ps = self.cfg.page_size
         need = 0
         for h in self.slots:
@@ -270,12 +289,18 @@ class SimEngine:
         return need
 
     def decode_step(self) -> Dict[int, int]:
+        """One simulated decode step: account a page per active branch,
+        advance pending prefill chunk lanes, and emit each branch's next
+        trace token. Returns {slot: token} (mirror of
+        ``Engine.decode_step``)."""
         if self.num_active == 0 and not self._pending_prefills:
             return {}
         if self.pages_needed_for_step() > self.allocator.free_pages:
             raise OutOfPagesError("sim KV pool exhausted")
         self._advance_pending_prefill()   # chunk piggybacks on this step
         out = {}
+        # reprolint REP002 baselined: the pages_needed_for_step pre-check
+        # above reserves this loop's worst case (mirror of Engine)
         for slot, h in enumerate(self.slots):
             if h is None:
                 continue
@@ -300,11 +325,14 @@ class SimEngine:
         return out
 
     def suspend_branch(self, h: BranchHandle) -> None:
+        """Vacate a branch's decode slot, keeping its pages (preemption);
+        ``resume_branch`` reseats it."""
         assert self.slots[h.slot] is h
         self.slots[h.slot] = None
         h.slot = -1
 
     def resume_branch(self, h: BranchHandle) -> bool:
+        """Reseat a suspended branch; False when no slot is free."""
         free = self.free_slots
         if not free:
             return False
@@ -313,6 +341,7 @@ class SimEngine:
         return True
 
     def free_branch(self, h: BranchHandle):
+        """Eagerly release a terminated branch's pages and its slot."""
         self.allocator.release(h.blocks)
         if h.slot >= 0:
             self.slots[h.slot] = None
@@ -320,10 +349,14 @@ class SimEngine:
         h.done = True
 
     def release_prefix(self, prefix_blocks: BranchBlocks):
+        """Drop the request's own reference on its prompt pages (the last
+        sibling's release then frees or LRU-parks them)."""
         self.allocator.release(prefix_blocks)
 
     # ------------------------------------------------------------ PRM model
     def reward_of(self, h: BranchHandle) -> float:
+        """Simulated PRM reward: drifts from 0.5 toward the branch's
+        latent quality as generation progresses, plus noise, in [0, 1]."""
         spec = self._specs.get(h.branch_id)
         if spec is None:
             return 0.5
@@ -344,6 +377,7 @@ class SimPRM:
         self.engine = engine
 
     def score(self, request, handles) -> List[float]:
+        """Reward per handle from the engine's simulated PRM model."""
         return [self.engine.reward_of(h) for h in handles]
 
 

@@ -1,0 +1,23 @@
+"""REP003 negative fixture: clamped index map, masked pad store, and a
+kernel with no pad path at all."""
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kv_index(b, i, bt):
+    return (jnp.minimum(bt[b, i], 1023), 0, 0)    # clamped: fine
+
+
+def build_spec():
+    return pl.BlockSpec((None, 64, 128), _kv_index)
+
+
+def masked_kernel(q_ref, valid_ref, out_ref):
+    acc = q_ref[...] * 2.0
+    num_valid = valid_ref[0]
+    row = 1
+    out_ref[...] = jnp.where(row < num_valid, acc, 0.0)   # gated: fine
+
+
+def no_pad_kernel(q_ref, out_ref):
+    out_ref[...] = q_ref[...]            # no validity name: not a pad path

@@ -1,0 +1,23 @@
+"""REP003 positive fixture: unclamped index map + unmasked pad store.
+
+The ``kernels`` path component activates the rule. Two findings: the
+raw ``bt[b, i]`` in ``_kv_index``'s return tuple, and ``pad_kernel``'s
+output store (the kernel mentions a validity name but the write has no
+``jnp.where`` gate).
+"""
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kv_index(b, i, bt):
+    return (bt[b, i], 0, 0)                       # REP003: no clamp
+
+
+def build_spec():
+    return pl.BlockSpec((None, 64, 128), _kv_index)
+
+
+def pad_kernel(q_ref, valid_ref, out_ref):
+    acc = q_ref[...] * 2.0
+    num_valid = valid_ref[0]
+    out_ref[...] = acc + num_valid * 0            # REP003: unmasked store

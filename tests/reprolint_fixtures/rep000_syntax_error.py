@@ -1,0 +1,3 @@
+# REP000 fixture: this file deliberately does not parse.
+def broken(:
+    pass

@@ -1,0 +1,19 @@
+"""REP001 negative fixture: the clean twins of rep001_pos."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def step(tokens, lengths):
+    return tokens
+
+
+def plain(xs):
+    return xs
+
+
+def drive(xs):
+    arr = jnp.asarray(xs)              # conversion of a name, not a list
+    a = step(arr, jnp.zeros((3,)))     # arrays across the boundary: fine
+    b = plain([1, 2, 3])               # not a jit target: fine
+    return a, b

@@ -1,0 +1,37 @@
+"""REP001 positive fixture: Python lists crossing jit boundaries.
+
+Four findings, all in ``drive``: two on ``step`` (decorated ``@jax.jit``,
+no static args), one on ``chunk_step`` (partial-jit; the list for the
+*non*-static param fires, the static kwarg does not), one on ``step_jit``
+(assignment-wrapped; positional args resolve against ``_fn``'s params).
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def step(tokens, lengths):
+    return tokens
+
+
+@functools.partial(jax.jit, static_argnames=("buckets",))
+def chunk_step(tokens, buckets):
+    return tokens
+
+
+def _fn(tokens, lengths):
+    return tokens
+
+
+step_jit = jax.jit(_fn, static_argnames=("lengths",))
+
+
+def drive(xs):
+    a = step([1, 2, 3], jnp.zeros((3,)))            # REP001: tokens
+    b = step(jnp.zeros((3,)), [x for x in xs])      # REP001: lengths
+    c = chunk_step([0], buckets=(1,))               # REP001: tokens
+    d = step_jit([1], jnp.ones((1,)))               # REP001: tokens
+    e = step_jit(jnp.ones((1,)), lengths=[1, 2])    # static: silent
+    return a, b, c, d, e

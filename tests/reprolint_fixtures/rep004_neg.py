@@ -1,0 +1,38 @@
+"""REP004 negative fixture: identity-eq dataclass queues and plain-value
+containers are both fine."""
+import dataclasses
+from typing import List
+
+
+@dataclasses.dataclass(eq=False)
+class IdentityJob:                 # identity equality: queue-safe
+    job_id: int
+
+
+@dataclasses.dataclass
+class HandEqJob:                   # hand-written __eq__ wins over the
+    job_id: int                    # generated one: also exempt
+
+    def __eq__(self, other):
+        return self is other
+
+    def __hash__(self):
+        return id(self)
+
+
+class Queue:
+    def __init__(self):
+        self.waiting: List[IdentityJob] = []
+        self.review: List[HandEqJob] = []
+        self.names: List[str] = []
+
+    def cancel(self, job: IdentityJob) -> None:
+        if job in self.waiting:
+            self.waiting.remove(job)
+
+    def unreview(self, job: HandEqJob) -> None:
+        self.review.remove(job)
+
+    def forget(self, name: str) -> None:
+        if name in self.names:             # str is not a dataclass
+            self.names.remove(name)

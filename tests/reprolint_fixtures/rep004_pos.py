@@ -1,0 +1,23 @@
+"""REP004 positive fixture: value-equality dataclass used on queues by
+membership/removal. Two findings — one per function touching the
+container (``cancel`` dedupes its ``in`` + ``.remove`` pair)."""
+import dataclasses
+from typing import List
+
+
+@dataclasses.dataclass
+class Job:                         # generated __eq__: value equality
+    job_id: int
+    prompt: List[int] = dataclasses.field(default_factory=list)
+
+
+class Queue:
+    def __init__(self):
+        self.waiting: List[Job] = []
+
+    def cancel(self, job: Job) -> None:
+        if job in self.waiting:            # REP004 (one per function)
+            self.waiting.remove(job)
+
+    def drop_first(self, job: Job) -> None:
+        self.waiting.remove(job)           # REP004

@@ -1,0 +1,14 @@
+"""REP001(b) negative fixture: conversions hoisted or of stable names."""
+import jax.numpy as jnp
+import numpy as np
+
+
+def cool_loop(items):
+    staged = np.zeros((len(items),), np.int32)   # batched host staging
+    for j, it in enumerate(items):
+        staged[j] = it
+    vec = jnp.asarray(staged)                    # one transfer, outside
+    once = jnp.asarray([0, 1, 2])                # list, but not in a loop
+    for it in items:
+        vec = vec + jnp.asarray(it)              # name, not a fresh list
+    return vec, once

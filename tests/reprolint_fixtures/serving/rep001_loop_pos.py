@@ -1,0 +1,17 @@
+"""REP001(b) positive fixture: per-iteration jnp.asarray(list) churn.
+
+The ``serving/`` path component is what activates pattern 2. Two
+findings, both in ``hot_loop``.
+"""
+import jax.numpy as jnp
+
+
+def hot_loop(items):
+    out = []
+    for it in items:
+        vec = jnp.asarray([it, it + 1])       # REP001: fresh list per step
+        out.append(vec)
+    while items:
+        items = items[:-1]
+        out.append(jnp.array([len(items)]))   # REP001: fresh list per step
+    return out

@@ -1,0 +1,11 @@
+"""REP005 negative fixture: device values stay on device; host-side
+numpy on untainted values is fine."""
+import numpy as np
+
+
+class MiniEngine:
+    def decode_loop(self, batch):
+        next_tokens = self._step_jit(0)
+        usable = next_tokens + 1                  # stays on device
+        staged = np.asarray(batch)                # not a jit-step result
+        return usable, staged

@@ -1,0 +1,16 @@
+"""REP005 positive fixture: host syncs on jit-step results in serving/.
+
+Three findings in ``decode_loop``: the np.asarray sink, the float() of a
+subscript (taint propagates through indexing), and the .item() method
+sink on the unpacked second result.
+"""
+import numpy as np
+
+
+class MiniEngine:
+    def decode_loop(self):
+        next_tokens, hidden = self._step_jit(0)
+        toks = np.asarray(next_tokens)            # REP005
+        first = float(next_tokens[0])             # REP005
+        score = hidden.item()                     # REP005
+        return toks, first, score

@@ -1,0 +1,11 @@
+"""Suppression fixture: the REP005 violation is real but carries an
+inline justification, so the run reports nothing."""
+import numpy as np
+
+
+class MiniEngine:
+    def decode_loop(self):
+        next_tokens = self._step_jit(0)
+        # the one mandated sync: tokens drive host bookkeeping
+        toks = np.asarray(next_tokens)  # reprolint: disable=REP005
+        return toks

@@ -1,0 +1,23 @@
+"""REP002 negative fixture: the PrefixCache.admit rollback shape, and a
+single acquisition (nothing to roll back if the only call raises)."""
+
+
+class MiniCache:
+    def __init__(self, allocator):
+        self.allocator = allocator
+
+    def admit(self, pages):
+        taken = []
+        try:
+            for pid in pages:
+                self.allocator.incref(pid)      # guarded: handler decrefs
+                taken.append(pid)
+        except RuntimeError:
+            for pid in reversed(taken):
+                self.allocator.decref(pid)
+            raise
+        return taken
+
+
+def single(allocator):
+    return allocator.alloc()                    # one call: exempt

@@ -1,0 +1,17 @@
+"""REP002 positive fixture: unguarded multi-page acquisition.
+
+The ``src/`` path component activates the rule. Two findings: one in
+``grow`` (acquisition in a comprehension = "many"), one in ``share``
+(the second of two single acquisitions is unguarded; the first is exempt
+because nothing is held yet when it raises).
+"""
+
+
+def grow(allocator, n):
+    return [allocator.alloc() for _ in range(n)]     # REP002
+
+
+def share(allocator, b):
+    first = allocator.alloc()
+    second = allocator.alloc()                       # REP002
+    return first, second

@@ -1,0 +1,20 @@
+"""REP006 negative fixture: documented public surface; private and
+nested helpers exempt."""
+
+
+class MiniStore:
+    """Keyed store."""
+
+    def put(self, key, value):
+        """Store ``value`` under ``key``, replacing any prior value."""
+        self.data[key] = value
+
+    def _internal(self):
+        pass
+
+
+def lookup(store, key):
+    """Return the stored value for ``key``, or None."""
+    def inner():                     # nested helper: exempt
+        return store.data
+    return inner().get(key)

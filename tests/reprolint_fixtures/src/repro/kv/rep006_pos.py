@@ -1,0 +1,17 @@
+"""REP006 positive fixture: the ``src/repro/kv`` path component
+activates the rule. Two findings: ``MiniStore.put`` and ``lookup`` lack
+docstrings (``_internal`` is private and exempt)."""
+
+
+class MiniStore:
+    """Keyed store."""
+
+    def put(self, key, value):                    # REP006
+        self.data[key] = value
+
+    def _internal(self):
+        pass
+
+
+def lookup(store, key):                           # REP006
+    return store.data.get(key)

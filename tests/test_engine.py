@@ -142,3 +142,21 @@ def test_live_tokens_accounting():
     eng.free_branch(h)
     assert eng.live_tokens() == 0
     eng.release_prefix(b1)
+
+
+def test_cow_arrays_reuses_sentinel_pair_when_no_cow():
+    """The common no-CoW step must reuse one cached (src, dst) sentinel
+    pair instead of re-staging two host arrays per decode step; real CoW
+    steps still build fresh index arrays."""
+    _, _, eng = _engine(tiny_config())
+    s1 = eng._cow_arrays([])
+    s2 = eng._cow_arrays([])
+    assert s1[0] is s2[0] and s1[1] is s2[1]
+    assert int(s1[0][0]) == eng.cfg.num_pages    # OOB sentinel everywhere
+    real = eng._cow_arrays([(3, 7)])
+    assert real[0] is not s1[0]
+    assert int(real[0][0]) == 3 and int(real[1][0]) == 7
+    assert int(real[0][1]) == eng.cfg.num_pages  # tail stays sentinel
+    # and the cached pair was not clobbered by the real-CoW call
+    again = eng._cow_arrays([])
+    assert again[0] is s1[0] and int(again[0][0]) == eng.cfg.num_pages

@@ -252,3 +252,83 @@ def test_fork_release_any_order_frees_everything(page_size, tokens, forks):
         alloc.release(b)
         alloc.check_invariants()
     assert alloc.used_pages == 0
+
+
+# --------------------------------------------------- error-path rollback
+# (reprolint REP002's fix shape: acquisition sequences must be
+# all-or-nothing even when a primitive fails mid-way)
+
+def test_extend_rolls_back_when_alloc_fails_mid_loop(monkeypatch):
+    """A mid-loop alloc failure inside extend must return the pages taken
+    so far — conservation can't depend on the free_pages pre-check
+    staying in sync with alloc's actual supply."""
+    alloc = PageAllocator(16, 2)
+    b = alloc.alloc_prefix(4)          # 2 pages held
+    real_alloc = PageAllocator.alloc
+    calls = {"n": 0}
+
+    def flaky_alloc(self):
+        calls["n"] += 1
+        if calls["n"] == 3:            # fail on the 3rd new page
+            raise OutOfPagesError("injected mid-loop failure")
+        return real_alloc(self)
+
+    monkeypatch.setattr(PageAllocator, "alloc", flaky_alloc)
+    with pytest.raises(OutOfPagesError):
+        alloc.extend(b, 12)            # needs 4 new pages; dies on #3
+    monkeypatch.undo()
+    # the 2 pages allocated before the failure were rolled back
+    assert alloc.used_pages == 2
+    assert b.length == 4 and len(b.pages) == 2
+    alloc.check_invariants()
+    _refcount_conservation(alloc, [b])
+    # and the branch is still usable: the retry succeeds cleanly
+    alloc.extend(b, 12)
+    assert len(b.pages) == 6
+    alloc.check_invariants()
+
+
+def test_prefix_cache_acquire_rolls_back_on_mid_loop_failure(monkeypatch):
+    """If taking references on the matched prefix fails part-way,
+    acquire must give back what it took (re-idling resurrected pages
+    onto the LRU), leaving the live/free/LRU partition intact."""
+    alloc = PageAllocator(32, 2)
+    cache = PrefixCache(alloc)
+    prompt = list(range(10))
+    b, _ = cache.admit(prompt)
+    cache.insert(prompt, b.pages)
+    alloc.release(b)                   # cached pages idle onto the LRU
+    assert cache.evictable == 5
+    real_incref = PageAllocator.incref
+    real_resurrect = PageAllocator.resurrect
+    calls = {"n": 0}
+
+    def count(self):
+        calls["n"] += 1
+        if calls["n"] == 3:
+            raise RuntimeError("injected mid-acquire failure")
+
+    def flaky_incref(self, pid):
+        count(self)
+        real_incref(self, pid)
+
+    def flaky_resurrect(self, pid):
+        count(self)
+        real_resurrect(self, pid)
+
+    monkeypatch.setattr(PageAllocator, "incref", flaky_incref)
+    monkeypatch.setattr(PageAllocator, "resurrect", flaky_resurrect)
+    with pytest.raises(RuntimeError, match="mid-acquire"):
+        cache.acquire(prompt)          # matches 4 pages; dies on the 3rd
+    monkeypatch.undo()
+    # the 2 references taken before the failure were rolled back: every
+    # cached page is refcount-0 and back on the LRU
+    assert alloc.used_pages == 0
+    assert cache.evictable == 5
+    alloc.check_invariants()
+    # the cache still serves the prefix afterwards
+    pages, _ = cache.acquire(prompt)
+    assert len(pages) == 4
+    for pid in pages:
+        assert alloc.refcount(pid) == 1
+    alloc.check_invariants()

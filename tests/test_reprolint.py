@@ -1,0 +1,245 @@
+"""reprolint: exact-finding fixture tests, baseline/suppression
+semantics, CLI exit codes, and the repo-is-clean gate.
+
+Each rule has a positive fixture (exact findings pinned: rule, symbol,
+count) and a negative twin that must stay silent — so a rule regression
+shows up as a diff here, not as CI noise. The fixtures live under
+``tests/reprolint_fixtures/`` and are excluded from normal runs; these
+tests lint them explicitly with ``excludes=()``.
+"""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+if str(REPO) not in sys.path:          # tools/ lives at the repo root
+    sys.path.insert(0, str(REPO))
+
+from tools.reprolint import Baseline, Finding, all_rules, run_paths  # noqa: E402
+
+FIX = REPO / "tests" / "reprolint_fixtures"
+BASELINE = REPO / "tools" / "reprolint" / "baseline.txt"
+
+
+def lint(*files, rules=None):
+    return run_paths([str(f) for f in files], excludes=(), rules=rules)
+
+
+def shapes(findings):
+    """(rule, symbol) per finding — the exact-match signature."""
+    return [(f.rule, f.symbol) for f in findings]
+
+
+# ------------------------------------------------------------- rule catalog
+def test_rule_catalog_complete():
+    codes = [r.code for r in all_rules()]
+    assert codes == ["REP001", "REP002", "REP003", "REP004", "REP005",
+                     "REP006"]
+    for r in all_rules():
+        assert r.summary and r.name != "unnamed"
+
+
+# ------------------------------------------------------------------- REP001
+def test_rep001_positive_exact():
+    fs = lint(FIX / "rep001_pos.py")
+    assert shapes(fs) == [("REP001", "drive")] * 4
+    # two patterns: non-static positional/keyword args, in source order
+    assert "tokens" in fs[0].message
+    assert "lengths" in fs[1].message
+    assert "tokens" in fs[2].message and "chunk_step" in fs[2].message
+    assert "tokens" in fs[3].message and "step_jit" in fs[3].message
+
+
+def test_rep001_negative_silent():
+    assert lint(FIX / "rep001_neg.py") == []
+
+
+def test_rep001_loop_positive_exact():
+    fs = lint(FIX / "serving" / "rep001_loop_pos.py")
+    assert shapes(fs) == [("REP001", "hot_loop")] * 2
+    assert all("loop" in f.message for f in fs)
+
+
+def test_rep001_loop_negative_silent():
+    assert lint(FIX / "serving" / "rep001_loop_neg.py") == []
+
+
+# ------------------------------------------------------------------- REP002
+def test_rep002_positive_exact():
+    fs = lint(FIX / "src" / "rep002_pos.py")
+    assert shapes(fs) == [("REP002", "grow"), ("REP002", "share")]
+    assert "inside a loop" in fs[0].message
+    assert "after earlier" in fs[1].message
+
+
+def test_rep002_negative_silent():
+    assert lint(FIX / "src" / "rep002_neg.py") == []
+
+
+def test_rep002_is_path_scoped():
+    # the same violations outside src/ (tests drive failure paths on
+    # purpose) must not fire
+    import shutil
+    import tempfile
+    with tempfile.TemporaryDirectory(dir=FIX) as tmp:
+        dst = Path(tmp) / "rep002_pos_copy.py"
+        shutil.copy(FIX / "src" / "rep002_pos.py", dst)
+        assert lint(dst) == []
+
+
+# ------------------------------------------------------------------- REP003
+def test_rep003_positive_exact():
+    fs = lint(FIX / "kernels" / "rep003_pos.py")
+    assert shapes(fs) == [("REP003", "_kv_index"),
+                          ("REP003", "pad_kernel")]
+    assert "clamp" in fs[0].message
+    assert "validity" in fs[1].message
+
+
+def test_rep003_negative_silent():
+    assert lint(FIX / "kernels" / "rep003_neg.py") == []
+
+
+# ------------------------------------------------------------------- REP004
+def test_rep004_positive_exact():
+    fs = lint(FIX / "rep004_pos.py")
+    assert shapes(fs) == [("REP004", "Queue.cancel"),
+                          ("REP004", "Queue.drop_first")]
+    assert all("eq=False" in f.message for f in fs)
+
+
+def test_rep004_negative_silent():
+    assert lint(FIX / "rep004_neg.py") == []
+
+
+def test_rep004_resolves_cross_file_dataclasses():
+    # the dataclass defined in the pos fixture is visible when linting
+    # both files together (ProjectContext pre-pass), and the neg file
+    # still reports nothing
+    fs = lint(FIX / "rep004_pos.py", FIX / "rep004_neg.py")
+    assert {f.path.rsplit("/", 1)[-1] for f in fs} == {"rep004_pos.py"}
+
+
+# ------------------------------------------------------------------- REP005
+def test_rep005_positive_exact():
+    fs = lint(FIX / "serving" / "rep005_pos.py")
+    assert shapes(fs) == [("REP005", "MiniEngine.decode_loop")] * 3
+    assert "np.asarray" in fs[0].message
+    assert "float" in fs[1].message
+    assert ".item()" in fs[2].message
+
+
+def test_rep005_negative_silent():
+    assert lint(FIX / "serving" / "rep005_neg.py") == []
+
+
+def test_rep005_inline_suppression():
+    assert lint(FIX / "serving" / "rep005_suppressed.py") == []
+
+
+# ------------------------------------------------------------------- REP006
+def test_rep006_positive_exact():
+    fs = lint(FIX / "src" / "repro" / "kv" / "rep006_pos.py")
+    assert shapes(fs) == [("REP006", "MiniStore.put"),
+                          ("REP006", "lookup")]
+
+
+def test_rep006_negative_silent():
+    assert lint(FIX / "src" / "repro" / "kv" / "rep006_neg.py") == []
+
+
+# ------------------------------------------------------------------- REP000
+def test_rep000_unparsable_file_is_a_finding_not_a_crash():
+    fs = lint(FIX / "rep000_syntax_error.py")
+    assert [f.rule for f in fs] == ["REP000"]
+    assert "parse" in fs[0].message
+
+
+# ----------------------------------------------------------------- baseline
+def test_baseline_is_a_multiset(tmp_path):
+    f1 = Finding(path="a.py", line=3, rule="REP002", message="m",
+                 symbol="f")
+    f2 = Finding(path="a.py", line=9, rule="REP002", message="m",
+                 symbol="f")
+    bl = tmp_path / "baseline.txt"
+    bl.write_text("# comment line\na.py::REP002::f  # justified once\n")
+    old, new = Baseline.load(bl).partition([f1, f2])
+    # one grandfathered, the SECOND same-shaped finding is new
+    assert old == [f1] and new == [f2]
+
+
+def test_baseline_key_ignores_line_numbers():
+    f = Finding(path="a.py", line=123, rule="REP004", message="m",
+                symbol="Queue.cancel")
+    assert f.baseline_key == "a.py::REP004::Queue.cancel"
+
+
+def test_committed_baseline_entries_all_justified():
+    body = BASELINE.read_text().splitlines()
+    entries = [ln for ln in body if ln.strip()
+               and not ln.lstrip().startswith("#")]
+    assert entries, "baseline exists and carries the intentional findings"
+    for i, ln in enumerate(body):
+        if ln.strip() and not ln.lstrip().startswith("#"):
+            # every entry has a justification comment directly above it
+            assert body[i - 1].lstrip().startswith("#"), \
+                f"baseline entry lacks a justification: {ln}"
+
+
+def test_reprolint_repo_clean():
+    """src/ and tests/ have zero non-baselined findings — the CI gate."""
+    findings = run_paths([str(REPO / "src"), str(REPO / "tests")])
+    _, new = Baseline.load(BASELINE).partition(findings)
+    assert new == [], "\n".join(f.render() for f in new)
+
+
+# ---------------------------------------------------------------------- CLI
+def _cli(*args):
+    return subprocess.run(
+        [sys.executable, "-m", "tools.reprolint", *args],
+        cwd=REPO, capture_output=True, text=True)
+
+
+def test_cli_clean_run_exits_zero():
+    res = _cli("src", "tests")
+    assert res.returncode == 0, res.stdout + res.stderr
+
+
+def test_cli_fresh_violation_fails_the_build():
+    # the CI-failure demonstration: a fresh (non-baselined) violation
+    # makes the exact command CI runs exit nonzero
+    res = _cli("tests/reprolint_fixtures/rep004_pos.py",
+               "--no-default-excludes")
+    assert res.returncode == 1
+    assert "REP004" in res.stdout
+
+
+def test_cli_json_output():
+    res = _cli("tests/reprolint_fixtures/serving/rep005_pos.py",
+               "--no-default-excludes", "--json")
+    assert res.returncode == 1
+    data = json.loads(res.stdout)
+    assert data["total"] == 3 and data["new"] == 3
+    assert all(f["rule"] == "REP005" and f["new"] for f in data["findings"])
+
+
+def test_cli_list_rules():
+    res = _cli("--list-rules")
+    assert res.returncode == 0
+    for code in ("REP001", "REP002", "REP003", "REP004", "REP005",
+                 "REP006"):
+        assert code in res.stdout
+
+
+def test_cli_write_baseline_round_trip(tmp_path):
+    bl = tmp_path / "bl.txt"
+    res = _cli("tests/reprolint_fixtures/rep004_pos.py",
+               "--no-default-excludes", "--write-baseline",
+               "--baseline", str(bl))
+    assert res.returncode == 0 and bl.exists()
+    res = _cli("tests/reprolint_fixtures/rep004_pos.py",
+               "--no-default-excludes", "--baseline", str(bl))
+    assert res.returncode == 0, res.stdout  # grandfathered -> clean

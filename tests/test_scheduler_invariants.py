@@ -722,3 +722,17 @@ def test_suspend_resume_roundtrips_ssm_state_bit_exactly(family_kw):
     eng.free_branch(h)
     eng.release_prefix(blocks)
     assert eng.allocator.used_pages == 0
+
+
+def test_request_queue_membership_is_by_identity():
+    """Request declares eq=False (reprolint REP004): two requests with
+    identical field values must not alias under the `in`/.remove queue
+    operations the scheduler's prefill poll relies on."""
+    a = Request(request_id=0, prompt=[1, 2, 3], arrival=0)
+    b = Request(request_id=0, prompt=[1, 2, 3], arrival=0)
+    assert a != b and a == a           # identity, not field equality
+    queue = [a, b]
+    assert queue.index(b) == 1         # not confused with a
+    queue.remove(b)
+    assert queue == [a]                # removed b itself, not a
+    assert hash(a) != hash(b) or a is b

@@ -1,0 +1,13 @@
+"""reprolint — repo-invariant static analysis for the SART serving stack.
+
+Run ``python -m tools.reprolint src/ tests/`` from the repo root. See
+docs/analysis.md for the rule catalog (REP001-REP006), the suppression
+and baseline workflow, and how to add a rule.
+"""
+from .framework import (Baseline, DEFAULT_EXCLUDES, FileContext, Finding,
+                        ProjectContext, REGISTRY, Rule, all_rules,
+                        register, repo_root, run_paths)
+
+__all__ = ["Baseline", "DEFAULT_EXCLUDES", "FileContext", "Finding",
+           "ProjectContext", "REGISTRY", "Rule", "all_rules", "register",
+           "repo_root", "run_paths"]

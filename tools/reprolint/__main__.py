@@ -1,0 +1,73 @@
+"""CLI: ``python -m tools.reprolint [paths...] [--json] ...``.
+
+Exit status: 0 when every finding is grandfathered in the baseline
+(or there are none), 1 when new findings exist, 2 on usage errors.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from .framework import (Baseline, DEFAULT_EXCLUDES, all_rules, render_json,
+                        repo_root, run_paths)
+
+DEFAULT_BASELINE = Path(__file__).resolve().parent / "baseline.txt"
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m tools.reprolint",
+        description="repo-invariant static analysis (see docs/analysis.md)")
+    p.add_argument("paths", nargs="*", default=["src", "tests"],
+                   help="files or directories to lint (default: src tests)")
+    p.add_argument("--json", action="store_true", dest="as_json",
+                   help="machine-readable output (all findings + new count)")
+    p.add_argument("--baseline", type=Path, default=DEFAULT_BASELINE,
+                   help="baseline file of grandfathered findings")
+    p.add_argument("--no-baseline", action="store_true",
+                   help="ignore the baseline: every finding fails")
+    p.add_argument("--write-baseline", action="store_true",
+                   help="rewrite the baseline from current findings "
+                        "(justifications must then be filled in by hand)")
+    p.add_argument("--list-rules", action="store_true",
+                   help="print the rule catalog and exit")
+    p.add_argument("--no-default-excludes", action="store_true",
+                   help="also lint paths matching the default excludes "
+                        "(e.g. tests/reprolint_fixtures — used by the "
+                        "fixture tests themselves)")
+    return p
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    if args.list_rules:
+        for rule in all_rules():
+            scope = ",".join(rule.path_filter) or "all files"
+            print(f"{rule.code}  {rule.name:22s} [{scope}]  {rule.summary}")
+        return 0
+    excludes = () if args.no_default_excludes else DEFAULT_EXCLUDES
+    findings = run_paths(args.paths, excludes=excludes)
+    if args.write_baseline:
+        args.baseline.write_text(Baseline.render(findings),
+                                 encoding="utf-8")
+        print(f"reprolint: wrote {len(findings)} baseline entries to "
+              f"{args.baseline}")
+        return 0
+    baseline = (Baseline() if args.no_baseline
+                else Baseline.load(args.baseline))
+    old, new = baseline.partition(findings)
+    if args.as_json:
+        print(render_json(findings, new))
+    else:
+        for f in new:
+            print(f.render())
+        root = repo_root()
+        print(f"reprolint: {len(findings)} finding(s) "
+              f"({len(old)} baselined, {len(new)} new) over "
+              f"{len(args.paths)} path(s) [root {root.name}]")
+    return 1 if new else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

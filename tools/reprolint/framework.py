@@ -1,0 +1,386 @@
+"""reprolint core: rule registry, AST pipeline, suppressions, baseline.
+
+The serving stack's correctness rests on invariants no type checker sees:
+page refcount conservation under error paths, O(buckets x lane-configs)
+compile counts, OOB-sentinel discipline inside Pallas index maps,
+identity-based queue membership. Three of the last six PRs fixed exactly
+these recurring bug classes by hand (see docs/analysis.md for the
+rule-by-rule history); this module is the machinery that checks them on
+every run:
+
+  * ``Rule`` subclasses register themselves via ``@register`` at import
+    time (``tools.reprolint.rules`` imports every rule module for the
+    side effect); each declares a code (``REP0xx``), a one-line summary
+    and an optional path filter, and yields ``Finding``s from its
+    ``check``.
+  * ``FileContext`` wraps one parsed file: source lines, AST, a
+    parent/qualname map (so findings can name their enclosing function —
+    the line-number-independent baseline key), and the inline
+    suppressions (``# reprolint: disable=REP0xx``).
+  * ``ProjectContext`` is the cross-file pre-pass: today it carries the
+    project-wide dataclass registry (name -> eq semantics) that
+    REP004 resolves imported queue element types against.
+  * ``Baseline`` grandfathers intentional findings: entries are
+    ``path::RULE::qualname`` (line numbers shift; enclosing symbols
+    rarely do), counted as a multiset so a *second* finding of the same
+    shape in the same function still fails the build. Every committed
+    entry carries a one-line justification after ``#``.
+
+Exact-finding fixtures live in ``tests/reprolint_fixtures/`` and
+``tests/test_reprolint.py`` pins each rule's positive/negative behavior.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import re
+from collections import Counter
+from pathlib import Path
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Tuple
+
+#: directory-name fragments never scanned unless --no-default-excludes:
+#: the lint fixtures are *deliberate* violations.
+DEFAULT_EXCLUDES = ("reprolint_fixtures", ".git", "__pycache__")
+
+_SUPPRESS_RE = re.compile(r"#\s*reprolint:\s*disable=([A-Za-z0-9_,\s]+)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at a specific line.
+
+    ``symbol`` is the enclosing function/class qualname ("<module>" at
+    top level) — together with path and rule code it forms the baseline
+    key, which survives unrelated line-number churn.
+    """
+    path: str            # repo-relative posix path
+    line: int
+    rule: str            # "REP002"
+    message: str
+    symbol: str = "<module>"
+
+    @property
+    def baseline_key(self) -> str:
+        return f"{self.path}::{self.rule}::{self.symbol}"
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line} · {self.rule} · {self.message}"
+
+    def to_json(self) -> Dict[str, object]:
+        return {"path": self.path, "line": self.line, "rule": self.rule,
+                "symbol": self.symbol, "message": self.message}
+
+
+class FileContext:
+    """One parsed source file plus the per-line lint metadata rules need."""
+
+    def __init__(self, path: str, source: str, tree: ast.Module):
+        self.path = path
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = tree
+        self._parents: Dict[ast.AST, ast.AST] = {}
+        self._qualnames: Dict[ast.AST, str] = {}
+        self._suppressed: Dict[int, set] = {}
+        self._index()
+
+    def _index(self) -> None:
+        for node in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(node):
+                self._parents[child] = node
+        for node in ast.walk(self.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                parts = [node.name]
+                cur = self._parents.get(node)
+                while cur is not None:
+                    if isinstance(cur, (ast.FunctionDef,
+                                        ast.AsyncFunctionDef, ast.ClassDef)):
+                        parts.append(cur.name)
+                    cur = self._parents.get(cur)
+                self._qualnames[node] = ".".join(reversed(parts))
+        for lineno, text in enumerate(self.lines, start=1):
+            m = _SUPPRESS_RE.search(text)
+            if m:
+                codes = {c.strip().upper() for c in m.group(1).split(",")
+                         if c.strip()}
+                self._suppressed[lineno] = codes
+
+    # ------------------------------------------------------------- helpers
+    def parent(self, node: ast.AST) -> Optional[ast.AST]:
+        return self._parents.get(node)
+
+    def ancestors(self, node: ast.AST) -> Iterator[ast.AST]:
+        """Walk from ``node``'s parent up to the module root."""
+        cur = self._parents.get(node)
+        while cur is not None:
+            yield cur
+            cur = self._parents.get(cur)
+
+    def enclosing_function(self, node: ast.AST
+                           ) -> Optional[ast.FunctionDef]:
+        for anc in self.ancestors(node):
+            if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                return anc
+        return None
+
+    def qualname(self, node: ast.AST) -> str:
+        """Qualname of the innermost function/class enclosing ``node``
+        (or of ``node`` itself when it is a def)."""
+        if node in self._qualnames:
+            return self._qualnames[node]
+        for anc in self.ancestors(node):
+            if anc in self._qualnames:
+                return self._qualnames[anc]
+        return "<module>"
+
+    def is_suppressed(self, finding: Finding) -> bool:
+        codes = self._suppressed.get(finding.line)
+        if codes is None:
+            return False
+        return finding.rule in codes or "ALL" in codes
+
+    def finding(self, node: ast.AST, rule: str, message: str) -> Finding:
+        return Finding(path=self.path, line=getattr(node, "lineno", 1),
+                       rule=rule, message=message,
+                       symbol=self.qualname(node))
+
+
+@dataclasses.dataclass
+class DataclassInfo:
+    """Cross-file record of one ``@dataclass`` definition (REP004)."""
+    name: str
+    path: str
+    line: int
+    identity_eq: bool      # eq=False (or frozen custom __eq__) declared
+
+
+class ProjectContext:
+    """Cross-file pre-pass state shared by every rule invocation."""
+
+    def __init__(self, files: Sequence[FileContext]):
+        self.files = list(files)
+        self.dataclasses: Dict[str, DataclassInfo] = {}
+        for ctx in self.files:
+            self._collect_dataclasses(ctx)
+
+    def _collect_dataclasses(self, ctx: FileContext) -> None:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            deco = _dataclass_decorator(node)
+            if deco is None:
+                continue
+            identity = _dataclass_opts_out_of_eq(deco) or any(
+                isinstance(b, (ast.FunctionDef, ast.AsyncFunctionDef))
+                and b.name == "__eq__" for b in node.body)
+            # last definition wins on bare-name collisions; the repo has
+            # none today and fixtures never collide with src names
+            self.dataclasses[node.name] = DataclassInfo(
+                name=node.name, path=ctx.path, line=node.lineno,
+                identity_eq=identity)
+
+
+def _dataclass_decorator(node: ast.ClassDef) -> Optional[ast.expr]:
+    for deco in node.decorator_list:
+        target = deco.func if isinstance(deco, ast.Call) else deco
+        if dotted_name(target) in ("dataclass", "dataclasses.dataclass"):
+            return deco
+    return None
+
+
+def _dataclass_opts_out_of_eq(deco: ast.expr) -> bool:
+    if not isinstance(deco, ast.Call):
+        return False
+    for kw in deco.keywords:
+        if kw.arg == "eq" and isinstance(kw.value, ast.Constant):
+            return kw.value.value is False
+    return False
+
+
+def dotted_name(node: ast.AST) -> str:
+    """Best-effort dotted name of an expression (``self.allocator.alloc``
+    -> "self.allocator.alloc"); "" for non-name shapes."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = dotted_name(node.value)
+        return f"{base}.{node.attr}" if base else node.attr
+    return ""
+
+
+# ---------------------------------------------------------------- registry
+class Rule:
+    """Base class: subclass, set ``code``/``summary``, implement ``check``.
+
+    ``path_filter`` is a tuple of substrings — the rule only runs on
+    files whose repo-relative posix path contains one of them (empty =
+    every file). Substring (not glob) keeps filters obvious in docs.
+    """
+    code = "REP000"
+    name = "unnamed"
+    summary = ""
+    path_filter: Tuple[str, ...] = ()
+
+    def applies(self, path: str) -> bool:
+        if not self.path_filter:
+            return True
+        return any(part in path for part in self.path_filter)
+
+    def check(self, ctx: FileContext,
+              project: ProjectContext) -> Iterator[Finding]:
+        raise NotImplementedError
+        yield  # pragma: no cover
+
+
+REGISTRY: Dict[str, Rule] = {}
+
+
+def register(cls: type) -> type:
+    """Class decorator: instantiate and register a rule by its code."""
+    rule = cls()
+    if rule.code in REGISTRY:
+        raise ValueError(f"duplicate rule code {rule.code}")
+    REGISTRY[rule.code] = rule
+    return cls
+
+
+def all_rules() -> List[Rule]:
+    # ensure the bundled rules are imported (registration side effect)
+    from . import rules  # noqa: F401
+    return [REGISTRY[c] for c in sorted(REGISTRY)]
+
+
+# ---------------------------------------------------------------- baseline
+class Baseline:
+    """Grandfathered findings: ``path::RULE::symbol  # justification``
+    lines, matched as a multiset (a second same-shaped finding in the
+    same function is NEW and fails)."""
+
+    def __init__(self, counts: Optional[Counter] = None):
+        self.counts: Counter = counts or Counter()
+
+    @classmethod
+    def load(cls, path: Path) -> "Baseline":
+        counts: Counter = Counter()
+        if path.exists():
+            for raw in path.read_text(encoding="utf-8").splitlines():
+                entry = raw.split("#", 1)[0].strip()
+                if entry:
+                    counts[entry] += 1
+        return cls(counts)
+
+    def partition(self, findings: Sequence[Finding]
+                  ) -> Tuple[List[Finding], List[Finding]]:
+        """Split findings into (grandfathered, new)."""
+        remaining = Counter(self.counts)
+        old: List[Finding] = []
+        new: List[Finding] = []
+        for f in findings:
+            if remaining[f.baseline_key] > 0:
+                remaining[f.baseline_key] -= 1
+                old.append(f)
+            else:
+                new.append(f)
+        return old, new
+
+    @staticmethod
+    def render(findings: Sequence[Finding]) -> str:
+        lines = ["# reprolint baseline — grandfathered findings.",
+                 "# Format: path::RULE::symbol  # one-line justification",
+                 "# New findings (not listed here) fail the build.", ""]
+        for f in sorted(findings, key=lambda f: f.baseline_key):
+            lines.append(f"{f.baseline_key}  # TODO justify")
+        return "\n".join(lines) + "\n"
+
+
+# ------------------------------------------------------------------ runner
+def repo_root() -> Path:
+    """The directory that contains ``tools/`` (the lint run's path base)."""
+    return Path(__file__).resolve().parents[2]
+
+
+def collect_files(paths: Sequence[str],
+                  excludes: Tuple[str, ...] = DEFAULT_EXCLUDES
+                  ) -> List[Path]:
+    out: List[Path] = []
+    for p in paths:
+        path = Path(p)
+        if path.is_dir():
+            out.extend(sorted(path.rglob("*.py")))
+        elif path.suffix == ".py":
+            out.append(path)
+    root = repo_root()
+    uniq: List[Path] = []
+    seen = set()
+    for f in out:
+        f = f.resolve()
+        rel = relpath(f, root)
+        if any(part in rel for part in excludes):
+            continue
+        if f not in seen:
+            seen.add(f)
+            uniq.append(f)
+    return uniq
+
+
+def relpath(path: Path, root: Path) -> str:
+    try:
+        return path.resolve().relative_to(root).as_posix()
+    except ValueError:
+        return path.as_posix()
+
+
+def parse_files(files: Sequence[Path]
+                ) -> Tuple[List[FileContext], List[Finding]]:
+    """Parse every file; syntax errors become REP000 findings (a file the
+    linter cannot read is a finding, not a crash)."""
+    root = repo_root()
+    contexts: List[FileContext] = []
+    errors: List[Finding] = []
+    for f in files:
+        rel = relpath(f, root)
+        try:
+            source = f.read_text(encoding="utf-8")
+            tree = ast.parse(source, filename=str(f))
+        except (SyntaxError, UnicodeDecodeError) as e:
+            line = getattr(e, "lineno", 1) or 1
+            errors.append(Finding(path=rel, line=line, rule="REP000",
+                                  message=f"file does not parse: {e.msg if hasattr(e, 'msg') else e}",
+                                  symbol="<module>"))
+            continue
+        contexts.append(FileContext(rel, source, tree))
+    return contexts, errors
+
+
+def run_paths(paths: Sequence[str],
+              excludes: Tuple[str, ...] = DEFAULT_EXCLUDES,
+              rules: Optional[Iterable[Rule]] = None) -> List[Finding]:
+    """Lint ``paths`` (files or directory trees) and return every
+    non-suppressed finding, sorted by (path, line, rule)."""
+    files = collect_files(paths, excludes)
+    contexts, findings = parse_files(files)
+    project = ProjectContext(contexts)
+    active = list(rules) if rules is not None else all_rules()
+    for ctx in contexts:
+        for rule in active:
+            if not rule.applies(ctx.path):
+                continue
+            for f in rule.check(ctx, project):
+                if not ctx.is_suppressed(f):
+                    findings.append(f)
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings
+
+
+def render_json(findings: Sequence[Finding], new: Sequence[Finding]
+                ) -> str:
+    new_keys = {id(f) for f in new}
+    return json.dumps({
+        "findings": [dict(f.to_json(), new=(id(f) in new_keys))
+                     for f in findings],
+        "total": len(findings),
+        "new": len(new),
+        "baselined": len(findings) - len(new),
+    }, indent=2)

@@ -1,0 +1,184 @@
+"""REP001 — jit-retrace hazard.
+
+The serving stack's compile-count contract is O(prefill_buckets x
+chunk_lane_configs) traced shapes (``Engine.prefill_compile_count``
+pins it). Two call-site patterns silently break that class of contract:
+
+  1. Passing a Python ``list`` display / list comprehension to a
+     ``jax.jit``'d callable for a parameter *not* named in
+     ``static_argnames``: the list becomes a fresh pytree whose length
+     is part of the trace signature, so every distinct length (or a
+     ``str``/non-array leaf, which fails at trace time) is a silent
+     recompile — exactly the hazard the bucketed chunking work existed
+     to remove.
+  2. ``jnp.asarray([...])`` / ``jnp.array([...])`` of a freshly built
+     Python list inside a ``for``/``while`` body in ``serving/``:
+     per-step host->device churn on the engine hot path (build the array
+     once outside the loop, or keep it numpy until one batched
+     transfer).
+
+The rule resolves jit'd callables *within a module*: ``@jax.jit`` /
+``@functools.partial(jax.jit, static_argnames=...)`` decorators and
+``name = jax.jit(fn, static_argnames=...)`` assignments (including
+``self._step_jit = jax.jit(self._step_fn, ...)`` — call sites match on
+the attribute's last name). When the wrapped function's def is in the
+same module, positional arguments are mapped to parameter names so
+``static_argnames`` entries are honored positionally too.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from ..framework import (FileContext, Finding, ProjectContext, Rule,
+                         dotted_name, register)
+
+_VARYING = (ast.List, ast.ListComp, ast.SetComp, ast.DictComp,
+            ast.GeneratorExp)
+
+
+class _JitTarget:
+    def __init__(self, name: str, static: Set[str],
+                 params: Optional[List[str]]):
+        self.name = name            # bare or attribute last-name
+        self.static = static        # static_argnames entries
+        self.params = params        # wrapped fn's positional params, if known
+
+
+def _static_argnames(call: ast.Call) -> Set[str]:
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            v = kw.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, str):
+                return {v.value}
+            if isinstance(v, (ast.Tuple, ast.List)):
+                return {e.value for e in v.elts
+                        if isinstance(e, ast.Constant)
+                        and isinstance(e.value, str)}
+    return set()
+
+
+def _is_jax_jit(node: ast.AST) -> bool:
+    return dotted_name(node) in ("jax.jit", "jit")
+
+
+def _jit_call(node: ast.AST) -> Optional[ast.Call]:
+    """The ``jax.jit(...)`` call inside ``node``, unwrapping one level of
+    ``functools.partial(jax.jit, ...)``."""
+    if not isinstance(node, ast.Call):
+        return None
+    if _is_jax_jit(node.func):
+        return node
+    if dotted_name(node.func) in ("functools.partial", "partial") and \
+            node.args and _is_jax_jit(node.args[0]):
+        return node
+    return None
+
+
+def _fn_defs(tree: ast.Module) -> Dict[str, ast.FunctionDef]:
+    """Every function def in the module, by bare name (methods included)."""
+    return {n.name: n for n in ast.walk(tree)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+
+
+def _param_names(fn: ast.FunctionDef) -> List[str]:
+    names = [a.arg for a in fn.args.args]
+    if names and names[0] in ("self", "cls"):
+        names = names[1:]
+    return names
+
+
+def _collect_jit_targets(ctx: FileContext) -> Dict[str, _JitTarget]:
+    defs = _fn_defs(ctx.tree)
+    targets: Dict[str, _JitTarget] = {}
+    # decorated defs
+    for fn in defs.values():
+        for deco in fn.decorator_list:
+            call = _jit_call(deco)
+            static: Set[str] = set()
+            if call is not None:
+                static = _static_argnames(call)
+            elif not _is_jax_jit(deco):
+                continue
+            targets[fn.name] = _JitTarget(fn.name, static, _param_names(fn))
+            break
+    # name = jax.jit(fn, ...) assignments (incl. self.attr targets)
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Assign) or len(node.targets) != 1:
+            continue
+        call = node.value if isinstance(node.value, ast.Call) else None
+        if call is None or not _is_jax_jit(call.func):
+            continue
+        target = node.targets[0]
+        tname = target.id if isinstance(target, ast.Name) else (
+            target.attr if isinstance(target, ast.Attribute) else None)
+        if tname is None or not call.args:
+            continue
+        wrapped = dotted_name(call.args[0]).rsplit(".", 1)[-1]
+        params = _param_names(defs[wrapped]) if wrapped in defs else None
+        targets[tname] = _JitTarget(tname, _static_argnames(call), params)
+    return targets
+
+
+@register
+class JitRetraceRule(Rule):
+    code = "REP001"
+    name = "jit-retrace"
+    summary = ("varying-shape Python literals crossing a jax.jit boundary, "
+               "or per-step jnp.asarray(list) churn in serving/ loop bodies")
+
+    def check(self, ctx: FileContext,
+              project: ProjectContext) -> Iterator[Finding]:
+        targets = _collect_jit_targets(ctx)
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            yield from self._check_jit_call(ctx, node, targets)
+            yield from self._check_loop_asarray(ctx, node)
+
+    # -------------------------------------------------- pattern 1: jit args
+    def _check_jit_call(self, ctx: FileContext, node: ast.Call,
+                        targets: Dict[str, _JitTarget]
+                        ) -> Iterator[Finding]:
+        callee = dotted_name(node.func).rsplit(".", 1)[-1]
+        tgt = targets.get(callee)
+        if tgt is None:
+            return
+        hazards: List[Tuple[str, ast.expr]] = []
+        for i, arg in enumerate(node.args):
+            pname = (tgt.params[i] if tgt.params and i < len(tgt.params)
+                     else f"arg{i}")
+            if pname not in tgt.static and self._is_varying(arg):
+                hazards.append((pname, arg))
+        for kw in node.keywords:
+            if kw.arg and kw.arg not in tgt.static and \
+                    self._is_varying(kw.value):
+                hazards.append((kw.arg, kw.value))
+        for pname, arg in hazards:
+            yield ctx.finding(
+                arg, self.code,
+                f"Python list passed to jit'd `{callee}` for non-static "
+                f"parameter `{pname}` — each distinct length retraces; "
+                "pass an array (or name it in static_argnames)")
+
+    @staticmethod
+    def _is_varying(node: ast.expr) -> bool:
+        return isinstance(node, _VARYING)
+
+    # -------------------------------- pattern 2: per-step asarray in loops
+    def _check_loop_asarray(self, ctx: FileContext,
+                            node: ast.Call) -> Iterator[Finding]:
+        if "/serving/" not in f"/{ctx.path}":
+            return
+        if dotted_name(node.func) not in ("jnp.asarray", "jnp.array"):
+            return
+        if not node.args or not self._is_varying(node.args[0]):
+            return
+        in_loop = any(isinstance(a, (ast.For, ast.While))
+                      for a in ctx.ancestors(node))
+        if in_loop:
+            yield ctx.finding(
+                node, self.code,
+                "jnp.asarray of a fresh Python list inside a loop body — "
+                "per-iteration host->device transfer on the serving hot "
+                "path; hoist the conversion or batch it")

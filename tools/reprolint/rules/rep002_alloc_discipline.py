@@ -1,0 +1,137 @@
+"""REP002 — allocator discipline on error paths.
+
+PR 2 shipped the ``abort_prefill`` double-decref fix; PR 5's
+``PrefixCache.admit`` established the required shape for multi-page
+acquisition: *acquire, then grow inside a try whose handler rolls the
+acquired references back* (decref leaf-first) before re-raising — so an
+``OutOfPagesError`` mid-sequence leaves refcounts conserved
+(``PageAllocator.check_invariants``' live/free/LRU partition).
+
+The rule flags functions that acquire page references more than once —
+two or more acquiring calls, or one inside a loop/comprehension (a loop
+is "many") — where some acquisition after the first is not covered by a
+``try`` whose handler releases (``decref``/``release``/``reclaim``).
+The first acquisition needs no guard: if *it* raises, nothing was
+acquired yet (all-or-nothing primitives like ``extend`` fail before
+mutating).
+
+Acquiring calls are attribute calls named ``alloc`` / ``alloc_prefix`` /
+``extend`` / ``fork`` / ``incref`` / ``resurrect`` / ``acquire`` /
+``admit`` / ``append_token`` whose receiver is allocator-shaped: the
+dotted receiver mentions ``alloc`` or ``cache``, or the call is on
+``self`` inside a class whose name mentions Allocator/Cache. Scoped to
+``src/`` — tests drive failure paths on purpose.
+
+Known limitation (documented in docs/analysis.md): the analysis is
+intra-procedural. A guard that lives in the caller (e.g. a capacity
+pre-check like ``Engine.pages_needed_for_step``) is invisible — those
+findings are baselined with a justification rather than suppressed.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Tuple
+
+from ..framework import (FileContext, Finding, ProjectContext, Rule,
+                         dotted_name, register)
+
+ACQUIRING = ("alloc", "alloc_prefix", "extend", "fork", "incref",
+             "resurrect", "acquire", "admit", "append_token")
+RELEASING = ("decref", "release", "reclaim", "drop")
+_LOOPS = (ast.For, ast.While, ast.ListComp, ast.SetComp, ast.DictComp,
+          ast.GeneratorExp, ast.comprehension)
+
+
+def _receiver_is_allocatorish(ctx: FileContext, call: ast.Call) -> bool:
+    if not isinstance(call.func, ast.Attribute):
+        return False
+    recv = dotted_name(call.func.value).lower()
+    if "alloc" in recv or "cache" in recv:
+        return True
+    if recv == "self":
+        for anc in ctx.ancestors(call):
+            if isinstance(anc, ast.ClassDef):
+                return ("allocator" in anc.name.lower()
+                        or "cache" in anc.name.lower())
+    return False
+
+
+def _is_acquiring(ctx: FileContext, node: ast.AST) -> bool:
+    return (isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Attribute)
+            and node.func.attr in ACQUIRING
+            and _receiver_is_allocatorish(ctx, node))
+
+
+def _handler_releases(handler: ast.ExceptHandler) -> bool:
+    for node in ast.walk(handler):
+        if isinstance(node, ast.Call) and \
+                isinstance(node.func, ast.Attribute) and \
+                node.func.attr in RELEASING:
+            return True
+    return False
+
+
+def _guarded(ctx: FileContext, call: ast.Call,
+             fn: ast.FunctionDef) -> bool:
+    """True if an enclosing try (within ``fn``) has a handler that rolls
+    references back."""
+    for anc in ctx.ancestors(call):
+        if anc is fn:
+            return False
+        if isinstance(anc, ast.Try) and any(
+                _handler_releases(h) for h in anc.handlers):
+            return True
+    return False
+
+
+def _in_loop(ctx: FileContext, call: ast.Call,
+             fn: ast.FunctionDef) -> bool:
+    for anc in ctx.ancestors(call):
+        if anc is fn:
+            return False
+        if isinstance(anc, _LOOPS):
+            return True
+    return False
+
+
+@register
+class AllocDisciplineRule(Rule):
+    code = "REP002"
+    name = "alloc-discipline"
+    summary = ("multi-page acquisition without a try/decref rollback — an "
+               "OutOfPagesError mid-sequence leaks references")
+    path_filter = ("src/",)
+
+    def check(self, ctx: FileContext,
+              project: ProjectContext) -> Iterator[Finding]:
+        for fn in ast.walk(ctx.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            # only direct statements of THIS function (nested defs are
+            # analyzed as their own functions)
+            calls: List[Tuple[ast.Call, bool]] = []
+            for node in ast.walk(fn):
+                if _is_acquiring(ctx, node) and \
+                        ctx.enclosing_function(node) is fn:
+                    calls.append((node, _in_loop(ctx, node, fn)))
+            if not calls:
+                continue
+            effective = sum(2 if lp else 1 for _, lp in calls)
+            if effective < 2:
+                continue
+            calls.sort(key=lambda c: (c[0].lineno, c[0].col_offset))
+            for i, (call, lp) in enumerate(calls):
+                first_single = (i == 0 and not lp)
+                if first_single or _guarded(ctx, call, fn):
+                    continue
+                yield ctx.finding(
+                    call, self.code,
+                    f"`{fn.name}` acquires pages via "
+                    f"`{dotted_name(call.func)}` "
+                    + ("inside a loop " if lp else "after earlier "
+                       "acquisitions ")
+                    + "with no enclosing try/rollback-decref — an "
+                    "OutOfPagesError here leaks the references already "
+                    "taken (required shape: PrefixCache.admit)")
+                break  # one finding per function keeps the signal readable

@@ -1,0 +1,190 @@
+"""REP003 — Pallas OOB-sentinel and pad-row discipline.
+
+Two bug classes from PR 3, both silent on CPU interpret mode and
+catastrophic on TPU:
+
+  1. **Unclamped block-table chase in an index map.** The engine pads
+     block tables with the OOB sentinel (``num_pages``); a
+     ``BlockSpec`` index map that returns a raw table entry addresses
+     HBM out of bounds when the grid visits a sentinel page. The fix
+     shape (now in both paged kernels) clamps the chased entry:
+     ``jnp.minimum(bt[...], num_pages - 1)``. The rule flags any
+     return-tuple element of an index-map callable containing a
+     subscript of a parameter that is not wrapped in
+     ``jnp.minimum``/``jnp.maximum``/``jnp.clip``.
+  2. **Pad path without a validity mask on the output write.** A kernel
+     that carries a row-validity scalar (a name matching ``valid``) has
+     bucket-pad rows; its ``out*_ref`` store must pass through a
+     ``jnp.where`` validity gate or pad rows emit
+     ``exp(-inf - -inf) = 1`` mis-normalized residue instead of the
+     exact zeros the mixed step's equivalence contract requires.
+
+Scoped to ``kernels/`` sources.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Optional
+
+from ..framework import (FileContext, Finding, ProjectContext, Rule,
+                         dotted_name, register)
+
+_CLAMPS = ("jnp.minimum", "jnp.maximum", "jnp.clip", "min", "max")
+
+
+def _index_map_callables(ctx: FileContext) -> List[ast.AST]:
+    """Callables passed to ``pl.BlockSpec`` (2nd positional arg or
+    ``index_map=``): lambdas inline, or local defs resolved by name."""
+    defs = {n.name: n for n in ast.walk(ctx.tree)
+            if isinstance(n, ast.FunctionDef)}
+    out: List[ast.AST] = []
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call) or \
+                dotted_name(node.func).rsplit(".", 1)[-1] != "BlockSpec":
+            continue
+        cands: List[ast.expr] = []
+        if len(node.args) >= 2:
+            cands.append(node.args[1])
+        cands.extend(kw.value for kw in node.keywords
+                     if kw.arg == "index_map")
+        for c in cands:
+            if isinstance(c, ast.Lambda):
+                out.append(c)
+            elif isinstance(c, ast.Name) and c.id in defs:
+                out.append(defs[c.id])
+    return out
+
+
+def _params_of(fn: ast.AST) -> set:
+    args = fn.args  # both Lambda and FunctionDef carry .args
+    return {a.arg for a in args.args}
+
+
+def _return_exprs(fn: ast.AST) -> List[ast.expr]:
+    if isinstance(fn, ast.Lambda):
+        return [fn.body]
+    return [r.value for r in ast.walk(fn)
+            if isinstance(r, ast.Return) and r.value is not None]
+
+
+def _unclamped_subscripts(ctx: FileContext, element: ast.expr,
+                          params: set) -> List[ast.Subscript]:
+    """Subscripts of an index-map parameter inside ``element`` with no
+    enclosing clamp call (within the element)."""
+    bad: List[ast.Subscript] = []
+    for sub in ast.walk(element):
+        if not isinstance(sub, ast.Subscript):
+            continue
+        if not (isinstance(sub.value, ast.Name)
+                and sub.value.id in params):
+            continue
+        clamped = False
+        cur: Optional[ast.AST] = sub
+        while cur is not None and cur is not element:
+            parent = ctx.parent(cur)
+            if isinstance(parent, ast.Call) and \
+                    dotted_name(parent.func) in _CLAMPS:
+                clamped = True
+                break
+            cur = parent
+        # the element itself may BE the clamp call
+        if not clamped and isinstance(element, ast.Call) and \
+                dotted_name(element.func) in _CLAMPS:
+            clamped = True
+        if not clamped:
+            bad.append(sub)
+    return bad
+
+
+def _is_kernel_fn(fn: ast.FunctionDef) -> bool:
+    return any(a.arg.endswith("_ref") for a in fn.args.args)
+
+
+def _mentions_validity(fn: ast.FunctionDef) -> bool:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Name) and "valid" in node.id.lower():
+            return True
+        if isinstance(node, ast.arg) and "valid" in node.arg.lower():
+            return True
+    return False
+
+
+def _out_stores(fn: ast.FunctionDef) -> List[ast.stmt]:
+    """Statements writing an output ref: ``out*_ref[...] = rhs`` or
+    ``pl.store(out*_ref, ...)``."""
+    stores: List[ast.stmt] = []
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Subscript) and \
+                        isinstance(tgt.value, ast.Name) and \
+                        tgt.value.id.startswith("out") and \
+                        tgt.value.id.endswith("_ref"):
+                    stores.append(node)
+        elif isinstance(node, ast.Expr) and isinstance(node.value, ast.Call):
+            call = node.value
+            if dotted_name(call.func).rsplit(".", 1)[-1] == "store" and \
+                    call.args and isinstance(call.args[0], ast.Name) and \
+                    call.args[0].id.startswith("out"):
+                stores.append(node)
+    return stores
+
+
+def _scope_has_validity_where(ctx: FileContext, store: ast.stmt,
+                              kernel: ast.FunctionDef) -> bool:
+    """A ``jnp.where`` whose condition mentions a validity name, in the
+    innermost function enclosing the store (``@pl.when`` epilogues are
+    nested defs) — the mask may gate a temp assigned just before the
+    store."""
+    scope = ctx.enclosing_function(store) or kernel
+    for node in ast.walk(scope):
+        if isinstance(node, ast.Call) and \
+                dotted_name(node.func) in ("jnp.where", "where") and \
+                node.args:
+            for n in ast.walk(node.args[0]):
+                if isinstance(n, ast.Name) and "valid" in n.id.lower():
+                    return True
+    return False
+
+
+@register
+class PallasSentinelRule(Rule):
+    code = "REP003"
+    name = "pallas-sentinel"
+    summary = ("unclamped block-table entries in Pallas index maps, and "
+               "pad-path kernels writing outputs without a validity mask")
+    path_filter = ("kernels",)
+
+    def check(self, ctx: FileContext,
+              project: ProjectContext) -> Iterator[Finding]:
+        seen = set()
+        for fn in _index_map_callables(ctx):
+            if id(fn) in seen:
+                continue
+            seen.add(id(fn))
+            params = _params_of(fn)
+            for ret in _return_exprs(fn):
+                elements = (ret.elts if isinstance(ret, ast.Tuple)
+                            else [ret])
+                for el in elements:
+                    for sub in _unclamped_subscripts(ctx, el, params):
+                        yield ctx.finding(
+                            sub, self.code,
+                            "index map returns a block-table entry "
+                            f"`{ast.unparse(sub)}` without a clamp — "
+                            "sentinel entries address HBM out of bounds "
+                            "on TPU; wrap in jnp.minimum(..., "
+                            "num_pages - 1)")
+        for fn in ast.walk(ctx.tree):
+            if not isinstance(fn, ast.FunctionDef) or not _is_kernel_fn(fn):
+                continue
+            if not _mentions_validity(fn):
+                continue
+            for store in _out_stores(fn):
+                if not _scope_has_validity_where(ctx, store, fn):
+                    yield ctx.finding(
+                        store, self.code,
+                        f"kernel `{fn.name}` has a row-validity pad path "
+                        "but this output write is not gated by a "
+                        "jnp.where(validity, ...) — pad rows emit "
+                        "mis-normalized residue instead of exact zeros")

@@ -1,0 +1,131 @@
+"""REP004 — identity-based queue membership for dataclasses.
+
+PR 4's lane-packer bug: ``ChunkedPrefillState`` carried the generated
+dataclass ``__eq__``, so ``in``/``.remove`` on the admission queue
+confused two requests that happened to share a prompt — the fix was
+``@dataclasses.dataclass(eq=False)`` (identity equality). Scheduler and
+engine queues hold *requests*, not values: two states are never
+interchangeable just because their fields compare equal (and value-eq
+on fields holding jax arrays can even raise on truthiness).
+
+The rule cross-references, project-wide:
+
+  * dataclass definitions that keep the generated ``__eq__`` (no
+    ``eq=False``, no hand-written ``__eq__``) — collected by the
+    framework's ``ProjectContext`` pre-pass so imported classes resolve;
+  * container attributes/params annotated ``List[T]`` / ``Deque[T]`` /
+    ``Sequence[T]`` (including string annotations);
+  * membership (``x in self.queue``) or removal (``self.queue.remove(x)``)
+    on those containers.
+
+A finding fires at the usage site when ``T`` is a generated-``__eq__``
+dataclass. Declare ``eq=False`` on the class (one finding per
+(container, function) pair).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, Optional
+
+from ..framework import (FileContext, Finding, ProjectContext, Rule,
+                         dotted_name, register)
+
+_CONTAINERS = ("List", "list", "Deque", "deque", "Sequence",
+               "MutableSequence", "Set", "set")
+
+
+def _element_type(annotation: ast.expr) -> Optional[str]:
+    """T from ``List[T]``-shaped annotations (string annotations too)."""
+    if isinstance(annotation, ast.Constant) and \
+            isinstance(annotation.value, str):
+        try:
+            annotation = ast.parse(annotation.value, mode="eval").body
+        except SyntaxError:
+            return None
+    if not isinstance(annotation, ast.Subscript):
+        return None
+    base = dotted_name(annotation.value).rsplit(".", 1)[-1]
+    if base not in _CONTAINERS:
+        return None
+    inner = annotation.slice
+    if isinstance(inner, ast.Constant) and isinstance(inner.value, str):
+        return inner.value
+    name = dotted_name(inner)
+    return name.rsplit(".", 1)[-1] if name else None
+
+
+def _collect_container_types(ctx: FileContext) -> Dict[str, str]:
+    """attr/param last-name -> element type name, from annotations."""
+    out: Dict[str, str] = {}
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.AnnAssign):
+            el = _element_type(node.annotation)
+            tgt = node.target
+            name = (tgt.id if isinstance(tgt, ast.Name)
+                    else tgt.attr if isinstance(tgt, ast.Attribute)
+                    else None)
+            if el and name:
+                out[name] = el
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for arg in node.args.args + node.args.kwonlyargs:
+                if arg.annotation is not None:
+                    el = _element_type(arg.annotation)
+                    if el:
+                        out[arg.arg] = el
+    return out
+
+
+def _container_name(node: ast.expr) -> Optional[str]:
+    """Last name of a container expression (``self.prefilling`` ->
+    "prefilling")."""
+    name = dotted_name(node)
+    return name.rsplit(".", 1)[-1] if name else None
+
+
+@register
+class QueueIdentityRule(Rule):
+    code = "REP004"
+    name = "queue-identity"
+    summary = ("`in`/.remove on queues of dataclasses with generated "
+               "__eq__ — declare eq=False so equal-valued requests can't "
+               "be confused")
+
+    def check(self, ctx: FileContext,
+              project: ProjectContext) -> Iterator[Finding]:
+        containers = _collect_container_types(ctx)
+        reported = set()
+
+        def maybe_finding(node: ast.AST, cname: Optional[str]
+                          ) -> Optional[Finding]:
+            if cname is None:
+                return None
+            el = containers.get(cname)
+            if el is None:
+                return None
+            info = project.dataclasses.get(el)
+            if info is None or info.identity_eq:
+                return None
+            key = (cname, ctx.qualname(node))
+            if key in reported:
+                return None
+            reported.add(key)
+            return ctx.finding(
+                node, self.code,
+                f"membership/remove on `{cname}` holding dataclass "
+                f"`{el}` ({info.path}:{info.line}) with generated "
+                "__eq__ — two equal-valued instances alias; declare "
+                "@dataclass(eq=False) for identity semantics")
+
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Compare) and any(
+                    isinstance(op, (ast.In, ast.NotIn)) for op in node.ops):
+                f = maybe_finding(node,
+                                  _container_name(node.comparators[-1]))
+                if f:
+                    yield f
+            elif isinstance(node, ast.Call) and \
+                    isinstance(node.func, ast.Attribute) and \
+                    node.func.attr in ("remove", "index", "count"):
+                f = maybe_finding(node, _container_name(node.func.value))
+                if f:
+                    yield f

@@ -1,0 +1,44 @@
+"""REP006 — contract docstrings on the public serving surface.
+
+``docs/architecture.md`` deep-links into ``kv/``, ``core/`` and
+``serving/`` docstrings for the load-bearing contracts (harvested
+ownership, refcount conservation, decref-to-LRU, slot_valid freezing).
+A public function without a docstring there is an undocumented
+contract: the next PR can't know what it may rely on. The rule flags
+public (non-underscore) functions and methods in those packages that
+have no docstring. Nested helper defs are exempt — they are
+implementation detail of their enclosing function.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from ..framework import (FileContext, Finding, ProjectContext, Rule,
+                         register)
+
+
+@register
+class ContractDocstringRule(Rule):
+    code = "REP006"
+    name = "contract-docstrings"
+    summary = ("public functions in kv/, core/, serving/ must state "
+               "their contract in a docstring")
+    path_filter = ("src/repro/kv", "src/repro/core", "src/repro/serving")
+
+    def check(self, ctx: FileContext,
+              project: ProjectContext) -> Iterator[Finding]:
+        for fn in ast.walk(ctx.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if fn.name.startswith("_"):
+                continue
+            parent = ctx.parent(fn)
+            if isinstance(parent, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue  # nested helper
+            if ast.get_docstring(fn) is None:
+                yield ctx.finding(
+                    fn, self.code,
+                    f"public function `{ctx.qualname(fn)}` has no "
+                    "docstring — state the contract callers may rely on "
+                    "(see docs/analysis.md REP006)")
