@@ -261,15 +261,43 @@ def bench_prefix_cache(quick=False):
     return rows
 
 
-def main(quick: bool = False):
-    for rows in (bench_paged_attention(quick), bench_ssd(quick),
-                 bench_mixed_step(quick),
-                 bench_engine_decode_step(quick),
-                 bench_chunked_prefill(quick),
-                 bench_prefix_cache(quick)):
+def collect(quick: bool = False):
+    rows = []
+    for bench in (bench_paged_attention, bench_ssd, bench_mixed_step,
+                  bench_engine_decode_step, bench_chunked_prefill,
+                  bench_prefix_cache):
+        rows.extend(bench(quick))
+    return rows
+
+
+def main(argv=None, quick=None) -> int:
+    # benchmarks.run calls ``main(quick=...)`` directly — that legacy
+    # harness path must not touch sys.argv (run.py owns --full)
+    if quick is not None:
+        for name, us, derived in collect(quick):
+            print(f"{name},{us:.1f},{derived}")
+        return 0
+    import argparse
+    import json
+    parser = argparse.ArgumentParser(
+        prog="python -m benchmarks.kernel_bench",
+        description="kernel/engine micro-benchmarks (CPU reference paths)")
+    parser.add_argument("--quick", action="store_true",
+                        help="small shapes, few iterations (smoke run)")
+    parser.add_argument("--json", action="store_true", dest="as_json",
+                        help="machine-readable summary (CI artifact): "
+                             "[{name, us, derived}, ...]")
+    args = parser.parse_args(argv)
+    rows = collect(args.quick)
+    if args.as_json:
+        print(json.dumps([{"name": name, "us": round(us, 1),
+                           "derived": derived}
+                          for name, us, derived in rows], indent=2))
+    else:
         for name, us, derived in rows:
             print(f"{name},{us:.1f},{derived}")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

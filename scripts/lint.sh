@@ -1,21 +1,29 @@
 #!/usr/bin/env bash
 # Run the repo's static-analysis gate locally (mirrors CI's `lint` job).
 #
-#   scripts/lint.sh               # reprolint (src tests) + mypy strict set
+#   scripts/lint.sh               # reprolint + stepcheck + mypy strict set
 #   scripts/lint.sh --json        # flags pass through to reprolint
 #
 # reprolint is stdlib-only and always runs; the mypy lane is skipped with
 # a warning when mypy is not installed (it is not baked into the dev
-# container — CI installs it from requirements-dev.txt).
-# See docs/analysis.md for the rule catalog and the baseline workflow.
+# container — CI installs it from requirements-dev.txt); the stepcheck
+# trace lane runs whenever jax imports (it is baked into the container).
+# See docs/analysis.md for the rule catalogs and baseline workflows.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 python -m tools.reprolint src tests "$@"
 
 if python -c "import mypy" 2>/dev/null; then
-  python -m mypy src/repro/kv src/repro/core/policies.py
+  python -m mypy src/repro/kv src/repro/core/policies.py \
+    src/repro/kernels/flash_prefill
 else
   echo "lint.sh: mypy not installed — skipping the typing lane" \
        "(pip install -r requirements-dev.txt to enable)" >&2
+fi
+
+if python -c "import jax" 2>/dev/null; then
+  python -m tools.stepcheck
+else
+  echo "lint.sh: jax not installed — skipping the trace lane (stepcheck)" >&2
 fi

@@ -1,3 +1,6 @@
+from .flash_prefill import flash_prefill_grid
 from .ops import flash_attention, mixed_step_bytes_read, paged_flash_prefill
+from .paged_prefill import paged_prefill_grid
 
-__all__ = ["flash_attention", "mixed_step_bytes_read", "paged_flash_prefill"]
+__all__ = ["flash_attention", "flash_prefill_grid", "mixed_step_bytes_read",
+           "paged_flash_prefill", "paged_prefill_grid"]

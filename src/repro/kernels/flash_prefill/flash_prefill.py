@@ -22,12 +22,16 @@ multiples in production configs. Validated against ref.py in interpret mode.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from ..introspect import BlockMapping, KernelGrid, block_specs
 
 NEG_INF = -1e30
 
@@ -36,15 +40,61 @@ def _round_up(n: int, m: int) -> int:
     return -(-n // m) * m
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, out_ref, m_ref, l_ref, acc_ref, *,
+def flash_prefill_grid(
+    b: int,
+    s: int,
+    h: int,
+    hd: int,
+    hkv: int,
+    *,
+    block_q: int = 256,
+    block_k: int = 256,
+) -> KernelGrid:
+    """Launch geometry for :func:`flash_prefill`.
+
+    Array shapes are the *padded* shapes (``s`` rounded up to the chosen
+    block sizes) — :func:`flash_prefill` pads its operands to match before
+    launching. The kv index map selects the GQA head group (``hi //
+    group``) so callers never pre-repeat KV heads.
+    """
+    assert h % hkv == 0, (h, hkv)
+    group = h // hkv
+    bq = min(block_q, _round_up(s, 8))
+    bk = min(block_k, _round_up(s, 8))
+    sq_p = _round_up(s, bq)
+    sk_p = _round_up(s, bk)
+
+    def q_index(bi: int, hi: int, qi: int, ki: int) -> Tuple[int, ...]:
+        return (bi, qi, hi, 0)
+
+    def kv_index(bi: int, hi: int, qi: int, ki: int) -> Tuple[int, ...]:
+        return (bi, ki, hi // group, 0)
+
+    q_map = BlockMapping("q", (b, sq_p, h, hd), (1, bq, 1, hd), q_index)
+    kv_shape = (b, sk_p, hkv, hd)
+    kv_block = (1, bk, 1, hd)
+    return KernelGrid(
+        kernel="flash_prefill",
+        grid=(b, h, sq_p // bq, sk_p // bk),
+        in_mappings=(
+            q_map,
+            BlockMapping("k", kv_shape, kv_block, kv_index),
+            BlockMapping("v", kv_shape, kv_block, kv_index),
+        ),
+        out_mappings=(dataclasses.replace(q_map, name="out"),),
+    )
+
+
+def _flash_kernel(q_ref: Any, k_ref: Any, v_ref: Any, out_ref: Any,
+                  m_ref: Any, l_ref: Any, acc_ref: Any, *,
                   bq: int, bk: int, scale: float, causal: bool,
-                  s_q: int, s_k: int):
+                  s_q: int, s_k: int) -> None:
     qi = pl.program_id(2)
     ki = pl.program_id(3)
     nk = pl.num_programs(3)
 
     @pl.when(ki == 0)
-    def _init():
+    def _init() -> None:
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
@@ -59,7 +109,7 @@ def _flash_kernel(q_ref, k_ref, v_ref, out_ref, m_ref, l_ref, acc_ref, *,
         live &= k_start <= q_start + bq - 1
 
     @pl.when(live)
-    def _compute():
+    def _compute() -> None:
         q = q_ref[0, :, 0, :].astype(jnp.float32) * scale   # [bq, hd]
         k = k_ref[0, :, 0, :].astype(jnp.float32)           # [bk, hd]
         v = v_ref[0, :, 0, :].astype(jnp.float32)
@@ -80,7 +130,7 @@ def _flash_kernel(q_ref, k_ref, v_ref, out_ref, m_ref, l_ref, acc_ref, *,
         m_ref[...] = m_new
 
     @pl.when(ki == nk - 1)
-    def _finalize():
+    def _finalize() -> None:
         denom = jnp.maximum(l_ref[...], 1e-30)
         # row validity: pad rows (>= s_q) hold either attention over garbage
         # query values or — when fully masked — the exp(-inf - -inf) = 1
@@ -107,14 +157,15 @@ def flash_prefill(q: jax.Array, k: jax.Array, v: jax.Array, *,
     assert (kb, sk, khd) == (b, s, hd), (q.shape, k.shape)
     assert k.shape == v.shape, (k.shape, v.shape)
     assert h % hkv == 0, (h, hkv)
-    group = h // hkv
     s_true = s if true_len is None else true_len
     assert 0 < s_true <= s, (s_true, s)
 
-    bq = min(block_q, _round_up(s, 8))
-    bk = min(block_k, _round_up(s, 8))
-    sq_p = _round_up(s, bq)
-    sk_p = _round_up(s, bk)
+    kg = flash_prefill_grid(b, s, h, hd, hkv,
+                            block_q=block_q, block_k=block_k)
+    bq = kg.in_mappings[0].block_shape[1]
+    bk = kg.in_mappings[1].block_shape[1]
+    sq_p = kg.in_mappings[0].array_shape[1]
+    sk_p = kg.in_mappings[1].array_shape[1]
     pad_q = sq_p - s
     pad_k = sk_p - s
     if pad_q:
@@ -123,18 +174,13 @@ def flash_prefill(q: jax.Array, k: jax.Array, v: jax.Array, *,
         k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
     scale = 1.0 / (hd ** 0.5)
-    grid = (b, h, sq_p // bq, sk_p // bk)
-
-    q_spec = pl.BlockSpec((1, bq, 1, hd), lambda bi, hi, qi, ki: (bi, qi, hi, 0))
-    kv_spec = pl.BlockSpec((1, bk, 1, hd),
-                           lambda bi, hi, qi, ki: (bi, ki, hi // group, 0))
 
     kernel = pl.pallas_call(
         functools.partial(_flash_kernel, bq=bq, bk=bk, scale=scale,
                           causal=causal, s_q=s_true, s_k=s_true),
-        grid=grid,
-        in_specs=[q_spec, kv_spec, kv_spec],
-        out_specs=q_spec,
+        grid=kg.grid,
+        in_specs=block_specs(kg.in_mappings),
+        out_specs=block_specs(kg.out_mappings)[0],
         out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
         scratch_shapes=[
             pltpu.VMEM((bq, 1), jnp.float32),

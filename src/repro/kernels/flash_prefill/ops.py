@@ -24,8 +24,10 @@ def _on_tpu() -> bool:
 
 @functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
                                              "use_kernel"))
-def flash_attention(q, k, v, causal: bool = True, block_q: int = 256,
-                    block_k: int = 256, use_kernel: bool = True):
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, block_q: int = 256,
+                    block_k: int = 256,
+                    use_kernel: bool = True) -> jax.Array:
     """Flash prefill attention. q: [B,S,H,hd]; k, v: [B,S,Hkv,hd] with
     Hkv | H (GQA heads are indexed inside the kernel — never pre-repeat).
     Non-divisible S is padded inside the kernel wrapper for causal and
@@ -37,8 +39,11 @@ def flash_attention(q, k, v, causal: bool = True, block_q: int = 256,
 
 
 @functools.partial(jax.jit, static_argnames=("block_q", "use_kernel"))
-def paged_flash_prefill(q, k_pages, v_pages, block_table, pos0, valid_len,
-                        block_q: int = 128, use_kernel: bool = True):
+def paged_flash_prefill(q: jax.Array, k_pages: jax.Array,
+                        v_pages: jax.Array, block_table: jax.Array,
+                        pos0: jax.Array, valid_len: jax.Array,
+                        block_q: int = 128,
+                        use_kernel: bool = True) -> jax.Array:
     """Fused mixed-step chunk attention: one flash pass of the chunk's query
     rows [T, H, hd] over a request's paged KV (see ``paged_prefill``).
 

@@ -35,36 +35,94 @@ kernel's layout. Validated in ``interpret=True`` mode on CPU against
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..introspect import BlockMapping, KernelGrid, block_specs
+
 NEG_INF = -1e30
+
+
+def paged_prefill_grid(
+    t: int,
+    q_heads: int,
+    head_dim: int,
+    kv_heads: int,
+    num_pages: int,
+    page_size: int,
+    pages_per_seq: int,
+    *,
+    block_q: int = 128,
+) -> KernelGrid:
+    """Launch geometry for :func:`paged_flash_prefill_fwd`.
+
+    Scalar-prefetch operands (appended to every index map after the grid
+    indices): ``bt`` — [pages_per_seq] int32 block table, ``info`` — [2]
+    int32 (pos0, valid_len). The K/V index map chases the table and clamps
+    both dead iterations (past the q block's causal horizon) and sentinel
+    entries onto already-resident pages.
+    """
+    assert q_heads % kv_heads == 0, (q_heads, kv_heads)
+    group = q_heads // kv_heads
+    bq = min(block_q, t)
+    assert t % bq == 0, (t, bq)
+
+    def q_index(h: int, qi: int, ki: int, bt: Any,
+                info: Any) -> Tuple[int, ...]:
+        return (h, qi, 0, 0)
+
+    def kv_index(h: int, qi: int, ki: int, bt: Any,
+                 info: Any) -> Tuple[Any, ...]:
+        # park iterations past the q block's causal horizon on its last
+        # live page, and clamp sentinel entries into range — both read
+        # already-resident pages, so skipped grid steps move no bytes
+        max_kpos = info[0] + jnp.minimum((qi + 1) * bq, info[1]) - 1
+        ki_live = jnp.minimum(ki, jnp.maximum(max_kpos, 0) // page_size)
+        return (h, jnp.minimum(bt[ki_live], num_pages - 1), 0, 0)
+
+    q_map = BlockMapping("q", (kv_heads, t, group, head_dim),
+                         (1, bq, group, head_dim), q_index)
+    kv_shape = (kv_heads, num_pages, page_size, head_dim)
+    kv_block = (1, 1, page_size, head_dim)
+    return KernelGrid(
+        kernel="paged_flash_prefill",
+        grid=(kv_heads, t // bq, pages_per_seq),
+        in_mappings=(
+            q_map,
+            BlockMapping("k_pages", kv_shape, kv_block, kv_index),
+            BlockMapping("v_pages", kv_shape, kv_block, kv_index),
+        ),
+        out_mappings=(dataclasses.replace(q_map, name="out"),),
+        num_scalar_prefetch=2,
+    )
 
 
 def _paged_prefill_kernel(
     # scalar-prefetch refs
-    block_table_ref,     # [pages_per_seq] int32 (sentinel entries >= npages)
-    info_ref,            # [2] int32: (pos0, valid_len)
+    block_table_ref: Any,  # [pages_per_seq] int32 (sentinels >= npages)
+    info_ref: Any,         # [2] int32: (pos0, valid_len)
     # inputs
-    q_ref,               # [1, bq, group, head_dim]
-    k_ref,               # [1, 1, page_size, head_dim]
-    v_ref,               # [1, 1, page_size, head_dim]
+    q_ref: Any,            # [1, bq, group, head_dim]
+    k_ref: Any,            # [1, 1, page_size, head_dim]
+    v_ref: Any,            # [1, 1, page_size, head_dim]
     # outputs
-    out_ref,             # [1, bq, group, head_dim]
+    out_ref: Any,          # [1, bq, group, head_dim]
     # scratch
-    m_ref,               # [bq * group, 1] f32
-    l_ref,               # [bq * group, 1] f32
-    acc_ref,             # [bq * group, head_dim] f32
+    m_ref: Any,            # [bq * group, 1] f32
+    l_ref: Any,            # [bq * group, 1] f32
+    acc_ref: Any,          # [bq * group, head_dim] f32
     *,
     bq: int,
     group: int,
     page_size: int,
     scale: float,
-):
+) -> None:
     qi = pl.program_id(1)
     ki = pl.program_id(2)
     nk = pl.num_programs(2)
@@ -74,7 +132,7 @@ def _paged_prefill_kernel(
     k_start = ki * page_size
 
     @pl.when(ki == 0)
-    def _init():
+    def _init() -> None:
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
@@ -86,7 +144,7 @@ def _paged_prefill_kernel(
     live = (q_start < valid_len) & (k_start <= max_qpos)
 
     @pl.when(live)
-    def _compute():
+    def _compute() -> None:
         q = q_ref[0].astype(jnp.float32).reshape(bq * group, -1) * scale
         k = k_ref[0, 0].astype(jnp.float32)                 # [P, hd]
         v = v_ref[0, 0].astype(jnp.float32)
@@ -106,7 +164,7 @@ def _paged_prefill_kernel(
         m_ref[...] = m_new
 
     @pl.when(ki == nk - 1)
-    def _finalize():
+    def _finalize() -> None:
         denom = jnp.maximum(l_ref[...], 1e-30)
         row = jax.lax.broadcasted_iota(
             jnp.int32, (bq * group, 1), 0) // group
@@ -138,31 +196,19 @@ def paged_flash_prefill_fwd(
     """
     t, q_heads, head_dim = q.shape
     kv_heads, num_pages, page_size, _ = k_pages.shape
-    assert q_heads % kv_heads == 0, (q_heads, kv_heads)
     group = q_heads // kv_heads
-    bq = min(block_q, t)
-    assert t % bq == 0, (t, bq)
     pages_per_seq = block_table.shape[0]
     scale = 1.0 / (head_dim ** 0.5)
 
-    q_spec = pl.BlockSpec(
-        (1, bq, group, head_dim), lambda h, qi, ki, bt, info: (h, qi, 0, 0))
-
-    def kv_index(h, qi, ki, bt, info):
-        # park iterations past the q block's causal horizon on its last
-        # live page, and clamp sentinel entries into range — both read
-        # already-resident pages, so skipped grid steps move no bytes
-        max_kpos = info[0] + jnp.minimum((qi + 1) * bq, info[1]) - 1
-        ki_live = jnp.minimum(ki, jnp.maximum(max_kpos, 0) // page_size)
-        return (h, jnp.minimum(bt[ki_live], num_pages - 1), 0, 0)
-
-    kv_spec = pl.BlockSpec((1, 1, page_size, head_dim), kv_index)
+    kg = paged_prefill_grid(t, q_heads, head_dim, kv_heads, num_pages,
+                            page_size, pages_per_seq, block_q=block_q)
+    bq = kg.in_mappings[0].block_shape[1]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
-        grid=(kv_heads, t // bq, pages_per_seq),
-        in_specs=[q_spec, kv_spec, kv_spec],
-        out_specs=q_spec,
+        num_scalar_prefetch=kg.num_scalar_prefetch,
+        grid=kg.grid,
+        in_specs=block_specs(kg.in_mappings),
+        out_specs=block_specs(kg.out_mappings)[0],
         scratch_shapes=[
             pltpu.VMEM((bq * group, 1), jnp.float32),
             pltpu.VMEM((bq * group, 1), jnp.float32),
@@ -175,7 +221,7 @@ def paged_flash_prefill_fwd(
                           page_size=page_size, scale=scale),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct(
-            (kv_heads, t, group, head_dim), q.dtype),
+            kg.out_mappings[0].array_shape, q.dtype),
         interpret=interpret,
     )
     info = jnp.stack([jnp.asarray(pos0, jnp.int32),

@@ -7,7 +7,8 @@ import jax.numpy as jnp
 NEG_INF = -1e30
 
 
-def flash_prefill_ref(q, k, v, causal: bool = True):
+def flash_prefill_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                      causal: bool = True) -> jax.Array:
     """q: [B, S, H, hd]; k, v: [B, S, Hkv, hd] with Hkv | H (GQA-native).
     Returns [B, S, H, hd] (full softmax attention)."""
     hd = q.shape[-1]
@@ -28,8 +29,10 @@ def flash_prefill_ref(q, k, v, causal: bool = True):
     return out.astype(q.dtype)
 
 
-def paged_flash_prefill_ref(q, k_pages, v_pages, block_table, pos0,
-                            valid_len):
+def paged_flash_prefill_ref(q: jax.Array, k_pages: jax.Array,
+                            v_pages: jax.Array, block_table: jax.Array,
+                            pos0: jax.Array,
+                            valid_len: jax.Array) -> jax.Array:
     """Oracle for ``paged_prefill.paged_flash_prefill_fwd`` (same shapes).
 
     Gathers the request's pages into one contiguous [S, kv, hd] context and

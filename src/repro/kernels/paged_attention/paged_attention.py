@@ -29,7 +29,59 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..introspect import BlockMapping, KernelGrid, block_specs
+
 NEG_INF = -1e30
+
+
+def paged_attention_grid(
+    batch: int,
+    q_heads: int,
+    head_dim: int,
+    kv_heads: int,
+    num_pages: int,
+    page_size: int,
+    pages_per_seq: int,
+) -> KernelGrid:
+    """Launch geometry for :func:`paged_attention_decode`.
+
+    Scalar-prefetch operands: ``bt`` — [batch, pages_per_seq] int32 block
+    tables, ``ln`` — [batch] int32 context lengths. The q operand is the
+    caller's [batch, kv_heads·group, head_dim] layout; its block picks one
+    (batch, kv_head) GQA group.
+    """
+    assert q_heads % kv_heads == 0, (q_heads, kv_heads)
+    group = q_heads // kv_heads
+
+    def q_index(b, h, i, bt, ln):
+        return (b, h, 0)
+
+    def kv_index(b, h, i, bt, ln):
+        # sentinel block-table entries (the engine pads tables with
+        # num_pages) are clamped into range: their pages sit past
+        # `lengths`, so the length mask discards whatever the clamped
+        # fetch returns — without the clamp the index map would address
+        # HBM out of bounds on TPU
+        return (h, jnp.minimum(bt[b, i], num_pages - 1), 0, 0)
+
+    q_map = BlockMapping("q", (batch, kv_heads * group, head_dim),
+                         (1, group, head_dim), q_index)
+    kv_shape = (kv_heads, num_pages, page_size, head_dim)
+    kv_block = (1, 1, page_size, head_dim)
+    return KernelGrid(
+        kernel="paged_attention",
+        grid=(batch, kv_heads, pages_per_seq),
+        in_mappings=(
+            q_map,
+            BlockMapping("k_pages", kv_shape, kv_block, kv_index),
+            BlockMapping("v_pages", kv_shape, kv_block, kv_index),
+        ),
+        out_mappings=(
+            BlockMapping("out", (batch, q_heads, head_dim),
+                         (1, group, head_dim), q_index),
+        ),
+        num_scalar_prefetch=2,
+    )
 
 
 def _decode_kernel(
@@ -100,32 +152,19 @@ def paged_attention_decode(
 ) -> jax.Array:
     """Flash-decode over paged KV. Returns [B, q_heads, head_dim]."""
     batch, q_heads, head_dim = q.shape
-    kv_heads, _, page_size, _ = k_pages.shape
-    assert q_heads % kv_heads == 0, (q_heads, kv_heads)
+    kv_heads, num_pages, page_size, _ = k_pages.shape
     group = q_heads // kv_heads
     pages_per_seq = block_tables.shape[1]
     scale = 1.0 / (head_dim ** 0.5)
 
-    num_pages = k_pages.shape[1]
-
-    q_block = pl.BlockSpec(
-        (1, group, head_dim), lambda b, h, i, bt, ln: (b, h, 0))
-    # sentinel block-table entries (the engine pads tables with num_pages)
-    # are clamped into range: their pages sit past `lengths`, so the length
-    # mask discards whatever the clamped fetch returns — without the clamp
-    # the index map would address HBM out of bounds on TPU
-    kv_block = pl.BlockSpec(
-        (1, 1, page_size, head_dim),
-        lambda b, h, i, bt, ln: (h, jnp.minimum(bt[b, i], num_pages - 1),
-                                 0, 0))
-    out_block = pl.BlockSpec(
-        (1, group, head_dim), lambda b, h, i, bt, ln: (b, h, 0))
+    kg = paged_attention_grid(batch, q_heads, head_dim, kv_heads,
+                              num_pages, page_size, pages_per_seq)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
-        grid=(batch, kv_heads, pages_per_seq),
-        in_specs=[q_block, kv_block, kv_block],
-        out_specs=out_block,
+        num_scalar_prefetch=kg.num_scalar_prefetch,
+        grid=kg.grid,
+        in_specs=block_specs(kg.in_mappings),
+        out_specs=block_specs(kg.out_mappings)[0],
         scratch_shapes=[
             pltpu.VMEM((group, 1), jnp.float32),
             pltpu.VMEM((group, 1), jnp.float32),

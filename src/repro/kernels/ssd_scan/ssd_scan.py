@@ -16,12 +16,53 @@ production; smaller in smoke shapes) dimensions.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from ..introspect import BlockMapping, KernelGrid, block_specs
+
+
+def ssd_scan_grid(bs: int, s: int, h: int, p: int, n: int,
+                  chunk: int) -> KernelGrid:
+    """Launch geometry for :func:`ssd_scan`.
+
+    Grid = (batch, heads, num_chunks) with the chunk axis minor and
+    sequential — the VMEM state scratch carries the inter-chunk SSM
+    recurrence across it. No scalar prefetch; every index map is affine
+    in the grid indices.
+    """
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    def x_index(bi, hi, ci):
+        return (bi, ci, hi, 0)
+
+    def dt_index(bi, hi, ci):
+        return (bi, ci, hi)
+
+    def a_index(bi, hi, ci):
+        return (hi,)
+
+    x_map = BlockMapping("x", (bs, s, h, p), (1, chunk, 1, p), x_index)
+    bc_shape = (bs, s, h, n)
+    bc_block = (1, chunk, 1, n)
+    return KernelGrid(
+        kernel="ssd_scan",
+        grid=(bs, h, nc),
+        in_mappings=(
+            x_map,
+            BlockMapping("dt", (bs, s, h), (1, chunk, 1), dt_index),
+            BlockMapping("a", (h,), (1,), a_index),
+            BlockMapping("b", bc_shape, bc_block, x_index),
+            BlockMapping("c", bc_shape, bc_block, x_index),
+        ),
+        out_mappings=(dataclasses.replace(x_map, name="y"),),
+    )
 
 
 def _ssd_kernel(
@@ -91,20 +132,13 @@ def ssd_scan(x, dt, a, b, c, *, chunk: int = 64,
         dt = jnp.where(valid[..., None], dt, 0.0)
     bs, s, h, p = x.shape
     n = b.shape[-1]
-    assert s % chunk == 0, (s, chunk)
-    nc = s // chunk
-
-    grid = (bs, h, nc)
-    x_spec = pl.BlockSpec((1, chunk, 1, p), lambda bi, hi, ci: (bi, ci, hi, 0))
-    dt_spec = pl.BlockSpec((1, chunk, 1), lambda bi, hi, ci: (bi, ci, hi))
-    a_spec = pl.BlockSpec((1,), lambda bi, hi, ci: (hi,))
-    bc_spec = pl.BlockSpec((1, chunk, 1, n), lambda bi, hi, ci: (bi, ci, hi, 0))
+    kg = ssd_scan_grid(bs, s, h, p, n, chunk)
 
     kernel = pl.pallas_call(
         functools.partial(_ssd_kernel, chunk=chunk),
-        grid=grid,
-        in_specs=[x_spec, dt_spec, a_spec, bc_spec, bc_spec],
-        out_specs=x_spec,
+        grid=kg.grid,
+        in_specs=block_specs(kg.in_mappings),
+        out_specs=block_specs(kg.out_mappings)[0],
         out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
         scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
         interpret=interpret,

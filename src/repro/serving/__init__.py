@@ -1,6 +1,6 @@
 from .engine import (BranchHandle, ChunkedPrefillState, Engine,
-                     EngineConfig)
+                     EngineConfig, StepVariant)
 from .sampling import SamplingParams, sample
 
 __all__ = ["BranchHandle", "ChunkedPrefillState", "Engine", "EngineConfig",
-           "SamplingParams", "sample"]
+           "SamplingParams", "StepVariant", "sample"]

@@ -55,7 +55,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -273,6 +273,25 @@ class BranchHandle:
     saved_ssm: object = None          # host snapshot while suspended
 
 
+@dataclasses.dataclass(frozen=True)
+class StepVariant:
+    """One reachable traced shape of ``Engine._step_fn``.
+
+    ``name`` is ``"decode"`` for the pure-decode shape or
+    ``"mixed:b{bucket}xl{lanes}"`` for a mixed step; ``lane_buckets`` is
+    the static argument that selects it. ``args`` holds
+    ``jax.ShapeDtypeStruct``s for the dynamic arguments *after*
+    ``(params, state)`` — everything ``tools/stepcheck`` needs to trace
+    the variant with ``jax.eval_shape``/``jax.make_jaxpr`` without a
+    device. ``SimEngine.step_variants`` mirrors the enumeration with
+    ``args=None`` (it has no step program).
+    """
+
+    name: str
+    lane_buckets: Tuple[int, ...]
+    args: Optional[tuple] = None
+
+
 class Engine:
     def __init__(self, model: Model, params, cfg: EngineConfig,
                  prm_params: Optional[dict] = None):
@@ -310,7 +329,7 @@ class Engine:
                                      cfg.num_pages, np.int32)  # OOB sentinel
         self._lengths = np.zeros((B,), np.int32)
         self._active = np.zeros((B,), bool)
-        self._last_hidden = jnp.zeros((B, mc.d_model), jnp.float32)
+        self._last_hidden = jnp.zeros((B, mc.d_model), model.dtype)
         self.prm_params = prm_params
 
         self._step_jit = jax.jit(self._step_fn,
@@ -520,6 +539,48 @@ class Engine:
         bucket and rounds lane counts to ``chunk_lane_configs``), vs
         O(distinct prompt lengths) for the exact path."""
         return len(self._buckets_used)
+
+    def step_variants(self) -> List[StepVariant]:
+        """Enumerate every ``_step_fn`` shape this engine can dispatch.
+
+        Returns the pure-decode variant plus one mixed variant per
+        (bucket, lane-count) pair — exactly the O(prefill_buckets ×
+        chunk_lane_configs) compile bound the engine documents
+        (docs/scheduling.md). The enumeration is the engine's own
+        declaration of its trace surface: ``tools/stepcheck`` traces each
+        variant abstractly and ratchets the signatures against its
+        committed manifest, and a drift test asserts every shape
+        ``decode_step`` actually traced (``_buckets_used``) is declared
+        here. Each variant's ``args`` are ``ShapeDtypeStruct``s for the
+        dynamic arguments after ``(params, state)``.
+        """
+        cfg, mc = self.cfg, self.model.cfg
+        B = cfg.max_slots
+        sds = jax.ShapeDtypeStruct
+
+        def dyn(n_lanes: int, bucket: int) -> tuple:
+            rows = B + n_lanes * bucket
+            chunk_state: dict = {}
+            if mc.uses_ssm and n_lanes:
+                conv, ssd = jax.eval_shape(
+                    lambda: init_mamba2_state(mc, 1, self.model.dtype))
+                L = mc.num_layers
+                chunk_state = {
+                    "conv": sds((L, n_lanes) + conv.shape[1:], conv.dtype),
+                    "ssd": sds((L, n_lanes) + ssd.shape[1:], ssd.dtype)}
+            return (sds((rows,), jnp.int32), sds((rows,), jnp.int32),
+                    sds((rows, cfg.max_pages_per_branch), jnp.int32),
+                    sds((rows,), jnp.int32),
+                    sds(self._rng.shape, self._rng.dtype), chunk_state,
+                    sds((n_lanes,), jnp.int32), sds((B,), jnp.bool_),
+                    sds((B,), jnp.int32), sds((B,), jnp.int32))
+
+        variants = [StepVariant("decode", (), dyn(0, 0))]
+        for bucket in self._buckets:
+            for n in self._lane_configs:
+                variants.append(StepVariant(f"mixed:b{bucket}xl{n}",
+                                            (bucket,) * n, dyn(n, bucket)))
+        return variants
 
     def _bucket_for(self, n: int) -> int:
         for b in self._buckets:
@@ -1033,7 +1094,12 @@ class Engine:
         keys = jax.random.split(rng, B)
         next_tokens = jax.vmap(lambda r, l: sample(r, l, cfg.sampling))(
             keys, logits)
-        return next_tokens, hidden.astype(jnp.float32), logits, new_state
+        # hidden stays in the model compute dtype: its only consumer is
+        # the PRM head, whose fp32 weights promote the matmul operand at
+        # the use site — an eager upcast here would ship d_model fp32
+        # bytes per slot per step for numerically identical rewards
+        # (pinned by test_stepcheck.test_prm_reward_dtype_equivalence)
+        return next_tokens, hidden, logits, new_state
 
     def decode_step(self) -> Dict[int, int]:
         """One decode step for all active slots, piggybacking up to

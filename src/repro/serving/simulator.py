@@ -26,7 +26,8 @@ import numpy as np
 from ..data import tokenizer as tk
 from ..kv import (BranchBlocks, OutOfPagesError, PageAllocator,
                   PrefixCache)
-from .engine import (BranchHandle, ChunkedPrefillState, derive_lane_configs,
+from .engine import (BranchHandle, ChunkedPrefillState, StepVariant,
+                     derive_lane_configs,
                      pack_chunk_lanes)
 
 
@@ -189,6 +190,19 @@ class SimEngine:
         """Mirror of Engine.admission_capacity: max chunk lanes one step
         can carry under the token budget (1 = legacy FIFO)."""
         return self._lane_configs[-1]
+
+    def step_variants(self) -> List[StepVariant]:
+        """Mirror of ``Engine.step_variants`` for the name/lane_buckets
+        enumeration (``args=None`` — the simulator has no step program).
+        The simulator has a single bucket (``prefill_chunk``), so the
+        variant set is 1 + len(lane_configs); tools/stepcheck asserts
+        this stays a projection of the Engine enumeration."""
+        variants = [StepVariant("decode", ())]
+        bucket = self.cfg.prefill_chunk
+        for n in self._lane_configs:
+            variants.append(
+                StepVariant(f"mixed:b{bucket}xl{n}", (bucket,) * n))
+        return variants
 
     def prefix_cache_stats(self):
         """Mirror of Engine.prefix_cache_stats (None with the cache off)."""

@@ -243,3 +243,58 @@ def test_cli_write_baseline_round_trip(tmp_path):
     res = _cli("tests/reprolint_fixtures/rep004_pos.py",
                "--no-default-excludes", "--baseline", str(bl))
     assert res.returncode == 0, res.stdout  # grandfathered -> clean
+
+
+# ----------------------------------------------------------- --changed-only
+from tools.reprolint.framework import changed_files  # noqa: E402
+
+
+def test_changed_files_includes_untracked(tmp_path):
+    scratch = FIX / "tmp_changed_only_untracked.py"
+    scratch.write_text("x = 1\n", encoding="utf-8")
+    try:
+        assert scratch.resolve() in changed_files("HEAD")
+    finally:
+        scratch.unlink()
+
+
+def test_changed_files_bad_ref_raises():
+    with pytest.raises(RuntimeError):
+        changed_files("no-such-ref-xyz")
+
+
+def test_cli_changed_only_lints_only_the_changed_file():
+    # an untracked copy of the REP004 fixture is "changed vs HEAD" and
+    # must yield exactly the fixture's findings; the committed,
+    # unmodified original must be filtered out of the same run
+    original = FIX / "rep004_pos.py"
+    scratch = FIX / "tmp_changed_only_rep004.py"
+    scratch.write_text(original.read_text(encoding="utf-8"),
+                       encoding="utf-8")
+    try:
+        res = _cli(str(scratch), str(original), "--no-default-excludes",
+                   "--changed-only", "HEAD", "--json")
+        data = json.loads(res.stdout)
+        assert res.returncode == 1
+        assert [(f["rule"], f["symbol"]) for f in data["findings"]] == \
+            [("REP004", "Queue.cancel"), ("REP004", "Queue.drop_first")]
+        assert all(f["path"].endswith("tmp_changed_only_rep004.py")
+                   for f in data["findings"])
+    finally:
+        scratch.unlink()
+
+
+def test_cli_changed_only_unchanged_file_is_clean():
+    original = (FIX / "rep004_pos.py").resolve()
+    if original in changed_files("HEAD"):
+        pytest.skip("fixture is dirty in this checkout")
+    res = _cli(str(original), "--no-default-excludes",
+               "--changed-only", "HEAD")
+    assert res.returncode == 0, res.stdout
+    assert "0 finding(s)" in res.stdout
+
+
+def test_cli_changed_only_bad_ref_is_usage_error():
+    res = _cli("src", "--changed-only", "no-such-ref-xyz")
+    assert res.returncode == 2
+    assert "failed" in res.stderr

@@ -9,8 +9,8 @@ import argparse
 import sys
 from pathlib import Path
 
-from .framework import (Baseline, DEFAULT_EXCLUDES, all_rules, render_json,
-                        repo_root, run_paths)
+from .framework import (Baseline, DEFAULT_EXCLUDES, all_rules, changed_files,
+                        render_json, repo_root, run_paths)
 
 DEFAULT_BASELINE = Path(__file__).resolve().parent / "baseline.txt"
 
@@ -30,6 +30,10 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--write-baseline", action="store_true",
                    help="rewrite the baseline from current findings "
                         "(justifications must then be filled in by hand)")
+    p.add_argument("--changed-only", metavar="REF", default=None,
+                   help="lint only files changed vs the given git ref "
+                        "(plus untracked files) — fast pre-push loop; "
+                        "the baseline still applies as usual")
     p.add_argument("--list-rules", action="store_true",
                    help="print the rule catalog and exit")
     p.add_argument("--no-default-excludes", action="store_true",
@@ -47,7 +51,14 @@ def main(argv=None) -> int:
             print(f"{rule.code}  {rule.name:22s} [{scope}]  {rule.summary}")
         return 0
     excludes = () if args.no_default_excludes else DEFAULT_EXCLUDES
-    findings = run_paths(args.paths, excludes=excludes)
+    only = None
+    if args.changed_only is not None:
+        try:
+            only = changed_files(args.changed_only)
+        except RuntimeError as exc:
+            print(f"reprolint: {exc}", file=sys.stderr)
+            return 2
+    findings = run_paths(args.paths, excludes=excludes, only=only)
     if args.write_baseline:
         args.baseline.write_text(Baseline.render(findings),
                                  encoding="utf-8")

@@ -35,9 +35,11 @@ import ast
 import dataclasses
 import json
 import re
+import subprocess
 from collections import Counter
 from pathlib import Path
-from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Tuple
+from typing import (Dict, Iterable, Iterator, List, Optional, Sequence, Set,
+                    Tuple)
 
 #: directory-name fragments never scanned unless --no-default-excludes:
 #: the lint fixtures are *deliberate* violations.
@@ -53,8 +55,13 @@ class Finding:
     ``symbol`` is the enclosing function/class qualname ("<module>" at
     top level) — together with path and rule code it forms the baseline
     key, which survives unrelated line-number churn.
+
+    ``tools.stepcheck`` reuses this record for trace-level findings:
+    there ``path`` is an analysis *target* (an engine family or kernel
+    name, not a file) and ``line`` is 0, which renders without the
+    ``:line`` suffix — same baseline machinery, same JSON shape.
     """
-    path: str            # repo-relative posix path
+    path: str            # repo-relative posix path (or stepcheck target)
     line: int
     rule: str            # "REP002"
     message: str
@@ -65,7 +72,8 @@ class Finding:
         return f"{self.path}::{self.rule}::{self.symbol}"
 
     def render(self) -> str:
-        return f"{self.path}:{self.line} · {self.rule} · {self.message}"
+        loc = self.path if self.line == 0 else f"{self.path}:{self.line}"
+        return f"{loc} · {self.rule} · {self.message}"
 
     def to_json(self) -> Dict[str, object]:
         return {"path": self.path, "line": self.line, "rule": self.rule,
@@ -302,8 +310,8 @@ def repo_root() -> Path:
 
 
 def collect_files(paths: Sequence[str],
-                  excludes: Tuple[str, ...] = DEFAULT_EXCLUDES
-                  ) -> List[Path]:
+                  excludes: Tuple[str, ...] = DEFAULT_EXCLUDES,
+                  only: Optional[Set[Path]] = None) -> List[Path]:
     out: List[Path] = []
     for p in paths:
         path = Path(p)
@@ -319,10 +327,32 @@ def collect_files(paths: Sequence[str],
         rel = relpath(f, root)
         if any(part in rel for part in excludes):
             continue
+        if only is not None and f not in only:
+            continue
         if f not in seen:
             seen.add(f)
             uniq.append(f)
     return uniq
+
+
+def changed_files(ref: str) -> Set[Path]:
+    """Files changed vs ``ref`` (``git diff --name-only``) plus untracked
+    files, as resolved absolute paths — the ``--changed-only`` universe.
+    Raises ``RuntimeError`` when the ref does not resolve."""
+    root = repo_root()
+    diff = subprocess.run(
+        ["git", "diff", "--name-only", ref], cwd=root,
+        capture_output=True, text=True)
+    if diff.returncode != 0:
+        raise RuntimeError(
+            f"git diff --name-only {ref!r} failed: "
+            f"{diff.stderr.strip() or diff.stdout.strip()}")
+    untracked = subprocess.run(
+        ["git", "ls-files", "--others", "--exclude-standard"], cwd=root,
+        capture_output=True, text=True)
+    names = diff.stdout.splitlines() + (
+        untracked.stdout.splitlines() if untracked.returncode == 0 else [])
+    return {(root / name).resolve() for name in names if name.strip()}
 
 
 def relpath(path: Path, root: Path) -> str:
@@ -356,10 +386,12 @@ def parse_files(files: Sequence[Path]
 
 def run_paths(paths: Sequence[str],
               excludes: Tuple[str, ...] = DEFAULT_EXCLUDES,
-              rules: Optional[Iterable[Rule]] = None) -> List[Finding]:
+              rules: Optional[Iterable[Rule]] = None,
+              only: Optional[Set[Path]] = None) -> List[Finding]:
     """Lint ``paths`` (files or directory trees) and return every
-    non-suppressed finding, sorted by (path, line, rule)."""
-    files = collect_files(paths, excludes)
+    non-suppressed finding, sorted by (path, line, rule). ``only``
+    restricts the collected files to that set (``--changed-only``)."""
+    files = collect_files(paths, excludes, only=only)
     contexts, findings = parse_files(files)
     project = ProjectContext(contexts)
     active = list(rules) if rules is not None else all_rules()

@@ -34,17 +34,23 @@ _CLAMPS = ("jnp.minimum", "jnp.maximum", "jnp.clip", "min", "max")
 
 def _index_map_callables(ctx: FileContext) -> List[ast.AST]:
     """Callables passed to ``pl.BlockSpec`` (2nd positional arg or
-    ``index_map=``): lambdas inline, or local defs resolved by name."""
+    ``index_map=``) or to the ``BlockMapping`` introspection descriptor
+    (4th positional arg or ``index_map=``): lambdas inline, or local defs
+    resolved by name."""
     defs = {n.name: n for n in ast.walk(ctx.tree)
             if isinstance(n, ast.FunctionDef)}
     out: List[ast.AST] = []
     for node in ast.walk(ctx.tree):
-        if not isinstance(node, ast.Call) or \
-                dotted_name(node.func).rsplit(".", 1)[-1] != "BlockSpec":
+        if not isinstance(node, ast.Call):
+            continue
+        callee = dotted_name(node.func).rsplit(".", 1)[-1]
+        if callee not in ("BlockSpec", "BlockMapping"):
             continue
         cands: List[ast.expr] = []
-        if len(node.args) >= 2:
+        if callee == "BlockSpec" and len(node.args) >= 2:
             cands.append(node.args[1])
+        if callee == "BlockMapping" and len(node.args) >= 4:
+            cands.append(node.args[3])
         cands.extend(kw.value for kw in node.keywords
                      if kw.arg == "index_map")
         for c in cands:

@@ -1,0 +1,50 @@
+"""stepcheck: trace-level semantic verifier for the serving step.
+
+reprolint (``tools/reprolint``) checks the *syntactic shadows* of the
+serving stack's compiled-program invariants; stepcheck checks the traced
+artifacts themselves, on CPU, with no device execution:
+
+  * **STEP001 / STEP002** — the compile-count manifest: every reachable
+    ``Engine._step_fn`` variant (family × bucket × lane-config, cache
+    on/off) is enumerated via ``Engine.step_variants()`` and traced with
+    ``jax.make_jaxpr`` on ``ShapeDtypeStruct``s; the count must equal the
+    documented O(buckets × lane-configs) bound and the traced shape
+    signatures ratchet against ``tools/stepcheck/manifest.json``.
+  * **STEP003–STEP006** — jaxpr walkers: single-dispatch proof (no
+    sub-jit beyond the whitelisted kernel wrappers and known jnp
+    internals), host-sync taint (no callback primitives), dtype-promotion
+    audit (silent fp32 upcasts), dead-surface detection (unused
+    arguments, pass-through outputs).
+  * **STEP007** — the Pallas index-map bounds verifier: each kernel's
+    ``KernelGrid`` (``repro.kernels.introspect``) is evaluated concretely
+    over its entire grid for a lattice of representative shapes, proving
+    every block access in-bounds given the OOB-sentinel clamps.
+
+CLI (mirrors reprolint's conventions — findings render as
+``target · STEP0xx · message``, committed baseline with justification
+comments, exit 1 only on findings not in the baseline):
+
+    python -m tools.stepcheck                # full run
+    python -m tools.stepcheck --json
+    python -m tools.stepcheck --write-manifest
+    python -m tools.stepcheck --self-test    # seeded-violation negative test
+
+See docs/analysis.md ("stepcheck: trace-level rules") for the rule
+catalog and the manifest/ratchet workflow.
+"""
+from __future__ import annotations
+
+import sys
+
+from tools.reprolint.framework import repo_root as _repo_root
+
+# stepcheck imports the repro package (it traces the real engine); make
+# ``src`` importable when invoked as ``python -m tools.stepcheck`` from
+# the repo root without PYTHONPATH.
+_SRC = str(_repo_root() / "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+from .rules import RULES  # noqa: E402  (needs _SRC on sys.path)
+
+__all__ = ["RULES"]

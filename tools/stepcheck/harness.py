@@ -1,0 +1,94 @@
+"""Engine targets stepcheck traces — tiny configs, abstract params.
+
+One target per (model family × prefix-cache setting). Params are
+``jax.eval_shape`` results, never real arrays: constructing an
+``Engine`` only *stores* params, so the whole harness runs without
+materializing a single weight, and ``jax.make_jaxpr`` over
+``Engine._step_fn`` stays pure CPU tracing.
+
+Models are built in bfloat16 deliberately: every silent fp32 upcast in
+the step program becomes a visible ``convert_element_type`` for the
+STEP005 dtype audit (an fp32 model would hide them all).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import Model, ModelConfig
+from repro.serving import Engine, EngineConfig, StepVariant
+from repro.serving.simulator import SimEngine, SimEngineConfig, SimWorkload
+
+#: the three assigned architecture families, smoke-sized (2 layers keeps
+#: tracing sub-second; heads/kv-heads exercise GQA in the paged kernels)
+FAMILY_CONFIGS: Dict[str, dict] = {
+    "dense": dict(d_ff=128),
+    "ssm": dict(ssm_state=16, ssm_head_dim=32, ssm_chunk=8, d_ff=0),
+    "hybrid": dict(ssm_state=16, ssm_head_dim=32, ssm_chunk=8, d_ff=128),
+}
+
+#: engine geometry shared by every target: two buckets (4, 8) × two lane
+#: configs (1, 2) under a 16-token budget -> 1 + 2×2 = 5 variants each
+ENGINE_KW = dict(page_size=4, num_pages=64, max_slots=4,
+                 max_pages_per_branch=12, prefill_chunk=8,
+                 step_token_budget=16)
+
+
+@dataclasses.dataclass
+class EngineTarget:
+    """One engine under analysis plus its enumerated variants."""
+
+    name: str                      # "engine[hybrid]" / "engine[hybrid+cache]"
+    family: str
+    cache: bool
+    engine: Engine
+    variants: List[StepVariant]
+
+
+def model_config(family: str) -> ModelConfig:
+    return ModelConfig(name=f"stepcheck-{family}", arch_type=family,
+                       num_layers=2, d_model=64, vocab_size=97,
+                       num_heads=4, num_kv_heads=2,
+                       **FAMILY_CONFIGS[family])
+
+
+def build_engine(family: str, cache: bool = False) -> Engine:
+    """An engine with abstract (eval_shape'd) params — no weights exist."""
+    model = Model(model_config(family), dtype=jnp.bfloat16)
+    params = jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
+    cfg = EngineConfig(prefix_cache=cache, **ENGINE_KW)
+    return Engine(model, params, cfg)
+
+
+def build_targets(include_cache: bool = True) -> List[EngineTarget]:
+    """All engine targets, cache-off first (the jaxpr-rule set runs on
+    cache-off targets; cache-on twins only pin signature invariance)."""
+    out: List[EngineTarget] = []
+    for cache in ([False, True] if include_cache else [False]):
+        for family in FAMILY_CONFIGS:
+            eng = build_engine(family, cache)
+            suffix = "+cache" if cache else ""
+            out.append(EngineTarget(
+                name=f"engine[{family}{suffix}]", family=family,
+                cache=cache, engine=eng, variants=eng.step_variants()))
+    return out
+
+
+def trace_variant(engine: Engine, variant: StepVariant):
+    """ClosedJaxpr of one step variant — abstract, no device work."""
+    fn = functools.partial(engine._step_fn, lane_buckets=variant.lane_buckets)
+    return jax.make_jaxpr(fn)(engine.params, engine.state, *variant.args)
+
+
+def sim_variant_names() -> List[str]:
+    """Variant names of a SimEngine matched to ``ENGINE_KW``'s budget and
+    chunk — STEP001 asserts these are a projection (subset) of the real
+    engine's enumeration."""
+    cfg = SimEngineConfig(page_size=4, num_pages=64, max_slots=4,
+                          prefill_chunk=8, step_token_budget=16)
+    sim = SimEngine(cfg, SimWorkload())
+    return [v.name for v in sim.step_variants()]

@@ -1,0 +1,202 @@
+"""jaxpr walkers over the traced step: STEP003–STEP006.
+
+Each analyzer takes one engine target plus its traced variants
+(``[(StepVariant, ClosedJaxpr), ...]``) and yields ``Finding``s with
+``path`` = the target name and ``line`` = 0 (trace findings have no
+source line; the symbol carries the site). Findings are deduplicated
+across variants of a target — the baseline key is
+``target::STEPxxx::site`` and must not churn when a bucket is added.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterator, List, Set, Tuple
+
+from tools.reprolint.framework import Finding
+
+from .tracing import (float_width, is_float_dtype, iter_eqns, leaf_groups,
+                      param_leaf_paths, source_symbol)
+
+#: sub-jit names allowed inside the step program. Two classes:
+#:   * the repo's jit'd kernel wrappers — the whitelisted Pallas/ref
+#:     dispatch points of the mixed step;
+#:   * jax-internal helper jits that jnp/jax.nn emit under a pjit of
+#:     their own name (they inline at lowering; listed so anything NEW
+#:     — e.g. a separately-jitted repo function sneaking into the step —
+#:     is a loud finding to review, not a silent extra dispatch).
+ALLOWED_SUB_JITS: Set[str] = {
+    # repo kernel wrappers (src/repro/kernels/*/ops.py)
+    "paged_attention", "paged_flash_prefill", "flash_attention", "ssd",
+    # jax internals observed in the traced step across all families
+    "_take", "_where", "_one_hot", "_pad", "floor_divide", "remainder",
+    "clip",
+    "silu", "softplus", "gelu", "relu", "sigmoid", "cumsum", "tril",
+    "sort", "_gumbel", "_uniform", "_threefry_split", "fold_in",
+    "_softmax", "logsumexp", "top_k", "isnan", "nan_to_num",
+}
+
+#: primitives that force host interaction — none may appear in the step
+#: program (REP005's one-sync-per-step contract, made semantic)
+_HOST_SYNC_FRAGMENTS = ("callback", "infeed", "outfeed", "host_local")
+
+#: dispatch-bearing primitives: a sub-computation the XLA program calls
+#: out to. ``pjit`` carries a name we check against the whitelist.
+_DISPATCH_PRIMS = ("pjit", "custom_call", "pallas_call")
+
+
+def check_single_dispatch(target, traced) -> Iterator[Finding]:
+    """STEP003: every dispatch-bearing primitive in the step jaxpr must
+    be whitelisted. A new sub-jit name means someone routed part of the
+    step through a separately-jitted callable — review it (it may be
+    legitimate, like a new kernel wrapper) and extend the whitelist or
+    the baseline deliberately."""
+    seen: Dict[str, Set[str]] = {}
+    for variant, closed in traced:
+        for eqn in iter_eqns(closed.jaxpr):
+            prim = eqn.primitive.name
+            if prim not in _DISPATCH_PRIMS:
+                continue
+            name = str(eqn.params.get("name", f"<{prim}>"))
+            if prim == "pjit" and name in ALLOWED_SUB_JITS:
+                continue
+            seen.setdefault(f"{prim}:{name}", set()).add(variant.name)
+    for site, variants in sorted(seen.items()):
+        yield Finding(
+            path=target.name, line=0, rule="STEP003", symbol=site,
+            message=(f"non-whitelisted sub-dispatch `{site}` inside the "
+                     f"step program (variants: "
+                     f"{', '.join(sorted(variants))}) — the mixed step "
+                     "must stay one device dispatch"))
+
+
+def check_host_sync(target, traced) -> Iterator[Finding]:
+    """STEP004: no callback/infeed/outfeed primitive anywhere in the
+    step program — the single mandated host sync per decode step lives
+    at the call site (``decode_step``'s token readback), never inside
+    the compiled step."""
+    seen: Dict[str, Set[str]] = {}
+    for variant, closed in traced:
+        for eqn in iter_eqns(closed.jaxpr):
+            prim = eqn.primitive.name
+            if any(frag in prim for frag in _HOST_SYNC_FRAGMENTS):
+                site = f"{prim}@{source_symbol(eqn)}"
+                seen.setdefault(site, set()).add(variant.name)
+    for site, variants in sorted(seen.items()):
+        yield Finding(
+            path=target.name, line=0, rule="STEP004", symbol=site,
+            message=(f"host-sync primitive `{site}` reachable in the "
+                     f"step program (variants: "
+                     f"{', '.join(sorted(variants))}) — blocks dispatch "
+                     "pipelining on every step"))
+
+
+def check_dtype_promotion(target, traced) -> Iterator[Finding]:
+    """STEP005: flag every small-float → wider-float
+    ``convert_element_type`` in the step program, attributed to the repo
+    source site that emitted it. The harness traces bf16 models, so each
+    silent fp32 upcast — on kernel operands, KV-page writes, or
+    hidden-state plumbing — is visible. Load-bearing upcasts (fp32
+    softmax accumulation, RMSNorm statistics) are baselined with
+    justifications; anything new must be triaged, not shipped."""
+    seen: Dict[Tuple[str, str], Set[str]] = {}
+    for variant, closed in traced:
+        for eqn in iter_eqns(closed.jaxpr):
+            if eqn.primitive.name != "convert_element_type":
+                continue
+            old = eqn.invars[0].aval.dtype
+            new = eqn.params["new_dtype"]
+            if not (is_float_dtype(old) and is_float_dtype(new)):
+                continue
+            if float_width(new) <= float_width(old):
+                continue
+            site = source_symbol(eqn)
+            seen.setdefault((site, f"{old}->{new}"), set()).add(variant.name)
+    for (site, widen), variants in sorted(seen.items()):
+        yield Finding(
+            path=target.name, line=0, rule="STEP005", symbol=site,
+            message=(f"silent {widen} upcast at {site} (variants: "
+                     f"{', '.join(sorted(variants))}) — justify in the "
+                     "baseline or compute in the narrow dtype"))
+
+
+def check_dead_surface(target, traced) -> Iterator[Finding]:
+    """STEP006: dead inputs and dead outputs of the step program.
+
+    * an *argument group* (a whole top-level ``_step_fn`` parameter —
+      every flat leaf of it) that no equation and no output consumes is
+      dead weight on the dispatch;
+    * individual ``params`` leaves nothing consumes indicate a model
+      surface the step silently ignores;
+    * an output that is a compile-time literal or an unmodified alias of
+      an input is a pass-through the caller could read directly.
+
+    Zero-size leaves (e.g. the decode variant's ``(0,)`` chunk_lens) are
+    vacuously live and skipped.
+    """
+    dead_groups: Dict[str, Set[str]] = {}
+    dead_params: Dict[str, Set[str]] = {}
+    passthrough: Dict[str, Set[str]] = {}
+    for variant, closed in traced:
+        jaxpr = closed.jaxpr
+        used = set()
+        for eqn in jaxpr.eqns:
+            used.update(id(v) for v in eqn.invars)
+        used.update(id(v) for v in jaxpr.outvars)
+        invars = jaxpr.invars
+        groups = leaf_groups(target.engine, variant)
+        assert sum(n for _, n in groups) == len(invars), \
+            (target.name, variant.name, groups, len(invars))
+        pos = 0
+        for name, count in groups:
+            leaves = invars[pos:pos + count]
+            pos += count
+            live = [v for v in leaves
+                    if 0 not in getattr(v.aval, "shape", ())]
+            if not live:
+                continue
+            if all(id(v) not in used for v in live):
+                dead_groups.setdefault(name, set()).add(variant.name)
+            elif name == "params":
+                paths = param_leaf_paths(target.engine.params)
+                for path, v in zip(paths, leaves):
+                    if 0 in getattr(v.aval, "shape", ()):
+                        continue
+                    if id(v) not in used:
+                        dead_params.setdefault(path, set()).add(variant.name)
+        invar_ids = {id(v) for v in invars}
+        for i, out in enumerate(jaxpr.outvars):
+            if hasattr(out, "val"):             # jax.core.Literal output
+                passthrough.setdefault(f"out[{i}]=const", set()).add(
+                    variant.name)
+            elif id(out) in invar_ids:
+                passthrough.setdefault(f"out[{i}]=input", set()).add(
+                    variant.name)
+    for name, variants in sorted(dead_groups.items()):
+        yield Finding(
+            path=target.name, line=0, rule="STEP006", symbol=name,
+            message=(f"step argument `{name}` is dead in variants "
+                     f"{', '.join(sorted(variants))} — transferred every "
+                     "dispatch, never read"))
+    for path, variants in sorted(dead_params.items()):
+        yield Finding(
+            path=target.name, line=0, rule="STEP006",
+            symbol=f"params{path}",
+            message=(f"params leaf `{path}` is never read by the step "
+                     f"(variants: {', '.join(sorted(variants))})"))
+    for site, variants in sorted(passthrough.items()):
+        yield Finding(
+            path=target.name, line=0, rule="STEP006", symbol=site,
+            message=(f"step output `{site}` is a pass-through "
+                     f"(variants: {', '.join(sorted(variants))}) — the "
+                     "caller could read it without a round-trip"))
+
+
+JAXPR_CHECKS = (check_single_dispatch, check_host_sync,
+                check_dtype_promotion, check_dead_surface)
+
+
+def run_jaxpr_rules(target, traced) -> List[Finding]:
+    """All four jaxpr walkers over one target's traced variants."""
+    out: List[Finding] = []
+    for check in JAXPR_CHECKS:
+        out.extend(check(target, traced))
+    return out

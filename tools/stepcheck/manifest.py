@@ -1,0 +1,172 @@
+"""The compile-count manifest: STEP001 (bound) and STEP002 (ratchet).
+
+``tools/stepcheck/manifest.json`` commits, per cache-off engine target,
+every reachable step variant's traced shape signature. The check is a
+ratchet in both directions: a traced variant missing from the manifest
+(new shape → silent retrace risk) and a manifest entry no longer traced
+(stale manifest) are both findings. ``--write-manifest`` regenerates the
+file after an intentional change — the diff is then reviewed like any
+code.
+
+STEP001 is the bound itself, independent of the committed file:
+
+  * variants per target == 1 + len(buckets) × len(lane_configs), with
+    the mixed names exactly the bucket × lane-config product;
+  * cache-on twins trace to bit-identical signatures (the prefix cache
+    is admission plumbing and must never add a compiled shape);
+  * the simulator's enumeration is a projection (subset) of the real
+    engine's.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List, Sequence, Tuple
+
+from tools.reprolint.framework import Finding, repo_root
+
+from .tracing import variant_signature
+
+MANIFEST_PATH = repo_root() / "tools" / "stepcheck" / "manifest.json"
+
+
+def signatures_for(target, traced) -> Dict[str, dict]:
+    """variant name -> signature record for one target."""
+    out: Dict[str, dict] = {}
+    for variant, closed in traced:
+        digest, in_avals, out_avals = variant_signature(closed)
+        out[variant.name] = {
+            "sig": digest,
+            "lane_buckets": list(variant.lane_buckets),
+            "num_in": len(in_avals),
+            "out": out_avals,
+        }
+    return out
+
+
+def build_manifest(per_target: Dict[str, Dict[str, dict]]) -> dict:
+    some = next(iter(per_target.values()))
+    return {
+        "_doc": ("stepcheck compile-count manifest — traced shape "
+                 "signatures of every reachable Engine._step_fn variant. "
+                 "Regenerate with `python -m tools.stepcheck "
+                 "--write-manifest` and review the diff; an unreviewed "
+                 "signature change is exactly the silent retrace this "
+                 "file exists to catch."),
+        "variants_per_target": len(some),
+        "targets": per_target,
+    }
+
+
+def load_manifest(path: Path = MANIFEST_PATH) -> dict:
+    if not path.exists():
+        return {}
+    return json.loads(path.read_text(encoding="utf-8"))
+
+
+def write_manifest(manifest: dict, path: Path = MANIFEST_PATH) -> None:
+    path.write_text(json.dumps(manifest, indent=2, sort_keys=True) + "\n",
+                    encoding="utf-8")
+
+
+def check_bound(target, traced) -> List[Finding]:
+    """STEP001 for one engine target: count and name-set of variants."""
+    findings: List[Finding] = []
+    engine = target.engine
+    buckets = engine._buckets
+    lanes = engine._lane_configs
+    expected = {"decode"} | {f"mixed:b{b}xl{n}"
+                             for b in buckets for n in lanes}
+    actual = {v.name for (v, _c) in traced}
+    bound = 1 + len(buckets) * len(lanes)
+    if len(traced) != bound or actual != expected:
+        missing = sorted(expected - actual)
+        extra = sorted(actual - expected)
+        findings.append(Finding(
+            path=target.name, line=0, rule="STEP001", symbol="variants",
+            message=(f"step_variants() enumerates {len(traced)} shapes, "
+                     f"bound is {bound} = 1 + {len(buckets)} buckets × "
+                     f"{len(lanes)} lane-configs"
+                     + (f"; missing {missing}" if missing else "")
+                     + (f"; extra {extra}" if extra else ""))))
+    return findings
+
+
+def check_cache_invariance(off_sigs: Dict[str, dict],
+                           on_sigs: Dict[str, dict],
+                           on_name: str) -> List[Finding]:
+    """STEP001: the prefix cache must not change any traced signature."""
+    findings: List[Finding] = []
+    for name in sorted(set(off_sigs) | set(on_sigs)):
+        off = off_sigs.get(name, {}).get("sig")
+        on = on_sigs.get(name, {}).get("sig")
+        if off != on:
+            findings.append(Finding(
+                path=on_name, line=0, rule="STEP001", symbol=name,
+                message=(f"variant `{name}` signature differs from the "
+                         f"cache-off twin ({on} != {off}) — the prefix "
+                         "cache is admission plumbing and must not add "
+                         "compiled shapes")))
+    return findings
+
+
+def check_sim_projection(engine_names: Sequence[str],
+                         sim_names: Sequence[str]) -> List[Finding]:
+    """STEP001: SimEngine's enumeration ⊆ the real engine's."""
+    extra = sorted(set(sim_names) - set(engine_names))
+    if not extra:
+        return []
+    return [Finding(
+        path="simulator", line=0, rule="STEP001", symbol="step_variants",
+        message=(f"SimEngine.step_variants() declares shapes the engine "
+                 f"does not: {extra} — the simulator drifted from the "
+                 "engine contract"))]
+
+
+def check_manifest(per_target: Dict[str, Dict[str, dict]],
+                   manifest: dict) -> List[Finding]:
+    """STEP002: ratchet traced signatures against the committed file."""
+    findings: List[Finding] = []
+    if not manifest:
+        findings.append(Finding(
+            path="manifest", line=0, rule="STEP002", symbol="<missing>",
+            message=("tools/stepcheck/manifest.json is missing — run "
+                     "`python -m tools.stepcheck --write-manifest` and "
+                     "commit it")))
+        return findings
+    recorded: Dict[str, Dict[str, dict]] = manifest.get("targets", {})
+    for tname in sorted(set(per_target) | set(recorded)):
+        traced = per_target.get(tname, {})
+        known = recorded.get(tname, {})
+        for vname in sorted(set(traced) | set(known)):
+            have = traced.get(vname)
+            want = known.get(vname)
+            key = f"{tname}/{vname}"
+            if want is None:
+                findings.append(Finding(
+                    path=tname, line=0, rule="STEP002", symbol=vname,
+                    message=(f"variant `{vname}` traced but absent from "
+                             "the manifest — a new compiled shape; "
+                             "review and --write-manifest")))
+            elif have is None:
+                findings.append(Finding(
+                    path=tname, line=0, rule="STEP002", symbol=vname,
+                    message=(f"manifest lists `{vname}` but it is no "
+                             "longer reachable — stale manifest; "
+                             "--write-manifest")))
+            elif have["sig"] != want["sig"]:
+                findings.append(Finding(
+                    path=tname, line=0, rule="STEP002", symbol=vname,
+                    message=(f"variant `{vname}` signature changed "
+                             f"({want['sig']} -> {have['sig']}) — the "
+                             "step now traces different shapes/dtypes "
+                             f"(out: {want.get('out')} -> "
+                             f"{have.get('out')}); review and "
+                             "--write-manifest")))
+    return findings
+
+
+def manifest_diff(per_target: Dict[str, Dict[str, dict]],
+                  manifest: dict) -> List[str]:
+    """Human-readable diff lines for the CI artifact."""
+    return [f.render() for f in check_manifest(per_target, manifest)]

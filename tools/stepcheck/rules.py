@@ -1,0 +1,43 @@
+"""The STEP rule registry: codes, names, one-line summaries.
+
+Unlike reprolint's AST rules, stepcheck analyzers are not independent
+plug-ins — they share traced jaxprs and the engine harness — so the
+registry is a plain table used by ``--list-rules``, docs and tests.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+#: code -> (name, summary)
+RULES: Dict[str, Tuple[str, str]] = {
+    "STEP001": (
+        "compile-count-bound",
+        "step_variants() must enumerate exactly 1 + buckets × "
+        "lane-configs traced shapes per engine target, invariant under "
+        "the prefix cache, with the simulator a projection of it"),
+    "STEP002": (
+        "manifest-ratchet",
+        "every traced variant signature must match "
+        "tools/stepcheck/manifest.json — a new/changed/missing shape is "
+        "a loud diff, not a silent retrace"),
+    "STEP003": (
+        "single-dispatch",
+        "no sub-jit inside the traced step beyond the whitelisted "
+        "kernel wrappers and known jax-internal helpers"),
+    "STEP004": (
+        "host-sync-taint",
+        "no callback/infeed/outfeed primitive reachable in the step "
+        "program — the one host sync per step lives at the call site"),
+    "STEP005": (
+        "dtype-promotion",
+        "no unaudited small-float → fp32 upcast in the step program "
+        "(kernel operands, KV-page writes, hidden-state plumbing)"),
+    "STEP006": (
+        "dead-surface",
+        "no wholly-unused step argument and no pass-through/constant "
+        "step output"),
+    "STEP007": (
+        "index-map-bounds",
+        "every Pallas BlockSpec index map, evaluated over its full grid "
+        "for a lattice of representative shapes, stays in-bounds"),
+}

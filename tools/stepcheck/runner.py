@@ -1,0 +1,80 @@
+"""Orchestration: build targets, trace variants, run every analyzer.
+
+Kept separate from the CLI so tests can call ``run_all`` (or the
+individual pieces) directly and so the expensive part — tracing — runs
+exactly once per target.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from tools.reprolint.framework import Finding
+
+from . import bounds, harness, jaxpr_rules, manifest
+
+
+@dataclasses.dataclass
+class RunResult:
+    """Everything one stepcheck pass produced."""
+
+    findings: List[Finding]
+    per_target: Dict[str, Dict[str, dict]]   # cache-off signature records
+    manifest: dict                           # freshly built (not committed)
+    targets_analyzed: int
+    variants_traced: int
+
+
+def run_all(committed_manifest: Optional[dict] = None,
+            include_cache: bool = True) -> RunResult:
+    """Full analysis. ``committed_manifest=None`` loads the repo file;
+    pass ``{}`` to skip the STEP002 ratchet (tests do)."""
+    findings: List[Finding] = []
+    targets = harness.build_targets(include_cache=include_cache)
+    per_target: Dict[str, Dict[str, dict]] = {}
+    cache_sigs: Dict[str, Tuple[str, Dict[str, dict]]] = {}
+    variants_traced = 0
+
+    for target in targets:
+        traced = [(v, harness.trace_variant(target.engine, v))
+                  for v in target.variants]
+        variants_traced += len(traced)
+        sigs = manifest.signatures_for(target, traced)
+        findings.extend(manifest.check_bound(target, traced))
+        if target.cache:
+            cache_sigs[target.family] = (target.name, sigs)
+        else:
+            per_target[target.name] = sigs
+            # the jaxpr walkers run on cache-off targets only: the
+            # cache-on twin is the same step program by construction
+            # (asserted below via signature equality)
+            findings.extend(jaxpr_rules.run_jaxpr_rules(target, traced))
+
+    for family, (on_name, on_sigs) in sorted(cache_sigs.items()):
+        off_sigs = per_target.get(f"engine[{family}]", {})
+        findings.extend(manifest.check_cache_invariance(
+            off_sigs, on_sigs, on_name))
+
+    engine_names = [v.name
+                    for t in targets if t.name == "engine[dense]"
+                    for v in t.variants]
+    findings.extend(manifest.check_sim_projection(
+        engine_names, harness.sim_variant_names()))
+
+    built = manifest.build_manifest(per_target)
+    if committed_manifest is None:
+        # load_manifest returns {} when the file is missing, which
+        # check_manifest reports as a STEP002 finding
+        findings.extend(manifest.check_manifest(
+            per_target, manifest.load_manifest()))
+    elif committed_manifest:
+        findings.extend(manifest.check_manifest(per_target,
+                                                committed_manifest))
+    # committed_manifest == {} passed explicitly: skip the ratchet
+
+    findings.extend(bounds.run_bounds_lattice())
+
+    findings.sort(key=lambda f: (f.path, f.rule, f.symbol))
+    return RunResult(findings=findings, per_target=per_target,
+                     manifest=built, targets_analyzed=len(targets),
+                     variants_traced=variants_traced)
