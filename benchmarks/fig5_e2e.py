@@ -17,7 +17,8 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.scheduler import percentile_latency
-from repro.serving.simulator import (SimEngineConfig, SimWorkload,
+from repro.data import tokenizer as tk
+from repro.serving.simulator import (SimEngine, SimEngineConfig, SimWorkload,
                                      adversarial_shared_header_mix,
                                      mixed_deadline_workload,
                                      poisson_burst_arrivals,
@@ -59,6 +60,77 @@ def run_burst(quick: bool = False, seed: int = 0):
                 "ttfb97": percentile_latency(m, 97, "ttfb"),
             })
     return rows
+
+
+def run_resample_burst(quick: bool = False, seed: int = 0):
+    """Generated-prefix warm resample (the SART resampling workload):
+    seeder requests at arrival 0 decode a branch past several page
+    boundaries, publishing its generated full pages into the radix
+    prefix cache keyed by prompt + generated tokens; a burst then
+    *resamples* each request with prompt = original prompt + that
+    branch's generated tokens (continue-from-here). Warm admission
+    serves the generated prefix from resident pages, so the chunk-step
+    and computed-token accounting — the sim's K/V-write proxy — drops
+    below a cold admission of the same resample prompt. ``gen_hit_rate``
+    is the fraction of *generated* resample tokens served from cache;
+    it must be nonzero (prompt-only prefix caching cannot reach past
+    the prompt boundary)."""
+    ps, chunk = 16, 32
+    n_seed = 3 if quick else 6
+    prompt_len = 4 * ps
+    gen_steps = 3 * ps if quick else 6 * ps
+    w = SimWorkload(mean_len=100_000, sigma_len=0.1, overthink_p=0.0,
+                    correct_p=0.55, prompt_len=prompt_len)
+    ec = SimEngineConfig(max_slots=16, num_pages=4096, page_size=ps,
+                         prefill_chunk=chunk, step_token_budget=chunk,
+                         prefix_cache=True)
+    eng = SimEngine(ec, w, seed=seed)
+    rng = np.random.default_rng(seed + 0x5EED)
+
+    def admit(prompt):
+        before = eng.prefill_chunk_steps
+        st = eng.begin_prefill(prompt)
+        while not st.done:
+            eng.decode_step()
+        eng.finish_prefill(st)
+        return st, eng.prefill_chunk_steps - before
+
+    # --- seeders (arrival 0): decode one branch each, free it — its
+    # generated full pages park warm on the cache LRU -------------------
+    resamples = []
+    for rid in range(n_seed):
+        prompt = [tk.BOS] + [int(t) for t in
+                             rng.integers(2, 16, size=prompt_len - 2)] \
+            + [tk.EQUALS]
+        st, _ = admit(prompt)
+        blocks, lg, ssm = st.blocks, st.last_logits, st.ssm_state
+        h = eng.spawn_branch(rid, blocks, lg, ssm, len(prompt),
+                             prompt_tokens=prompt)
+        for _ in range(gen_steps):
+            eng.decode_step()
+        written = h.blocks.length - len(prompt)
+        resamples.append(prompt + h.tokens[:written])
+        eng.free_branch(h)
+        eng.release_prefix(blocks)
+
+    # --- resample burst: original prompt + generated tokens ------------
+    warm_steps = cold_steps = 0
+    warm_tokens = cold_tokens = gen_hit = gen_total = 0
+    for rp in resamples:
+        st, steps = admit(rp)
+        warm_steps += steps
+        cold_steps += -(-len(rp) // chunk)
+        warm_tokens += len(rp) - st.cached_tokens
+        cold_tokens += len(rp)
+        gen_hit += max(0, st.cached_tokens - prompt_len)
+        gen_total += len(rp) - prompt_len
+        eng.release_prefix(st.blocks)
+    return {
+        "warm_chunk_steps": warm_steps, "cold_chunk_steps": cold_steps,
+        "warm_tokens": warm_tokens, "cold_tokens": cold_tokens,
+        "gen_hit_rate": gen_hit / max(1, gen_total),
+        "hit_rate": eng.prefix_cache.stats()["hit_rate"],
+    }
 
 
 def run_policies(quick: bool = False, seed: int = 0):
@@ -198,6 +270,15 @@ def main(quick: bool = False):
                      else float("nan"))
     print(f"fig5_burst_ttfb50_speedup_cached_vs_uncached,"
           f"{cache_speedup:.2f},hit_rate={cached['hit_rate']:.2f}")
+    # generated-prefix acceptance: warm resample (prompt + generated
+    # tokens) must hit past the prompt boundary and cost fewer admission
+    # chunk steps / computed tokens (the K/V-write proxy) than cold
+    rs = run_resample_burst(quick=quick)
+    print(f"fig5_resample_burst_warm,{rs['warm_chunk_steps']},"
+          f"cold_chunk_steps={rs['cold_chunk_steps']};"
+          f"tokens_computed={rs['warm_tokens']} (cold={rs['cold_tokens']});"
+          f"gen_hit_rate={rs['gen_hit_rate']:.2f};"
+          f"hit_rate={rs['hit_rate']:.2f}")
     # admission-policy table: cache-aware (lpm) and slo-aware (edf)
     # ordering vs the fifo default on workloads adversarial for fifo
     pol = run_policies(quick=quick)

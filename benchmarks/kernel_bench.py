@@ -127,6 +127,68 @@ def bench_mixed_step(quick=False):
     return rows
 
 
+def bench_tree_decode(quick=False):
+    """Sibling-branch decode attention: the per-branch flash-decode loop
+    (every sibling re-streams the shared ancestor pages) vs the tree
+    kernel (shared pages streamed once per step, suffixes once each).
+    The bytes column is the analytic K+V HBM read per decode step — for
+    N siblings over a deep shared prefix the tree path approaches an N×
+    reduction on the shared-page traffic, which is the memory-bound win
+    for the SART resampling workload (many short branches over one
+    prompt). Wall-clock times the jnp reference of each path."""
+    from repro.kernels.paged_attention.ops import (paged_attention,
+                                                   paged_tree_attention,
+                                                   tree_decode_bytes_read)
+    rng = np.random.default_rng(0)
+    qh, kvh, hd, ps = 8, 2, 64, 16
+    shared, suffix = (4, 1) if quick else (32, 2)   # pages
+    branch_counts = [2] if quick else [2, 4, 8]
+    rows = []
+    for n in branch_counts:
+        pps = shared + suffix + 1                   # +1 pad column
+        npages = shared + n * suffix + 1
+        perm = rng.permutation(npages - 1)
+        shared_ids = perm[:shared]
+        q = jnp.asarray(rng.normal(size=(n, qh, hd)), jnp.float32)
+        kp = jnp.asarray(rng.normal(size=(kvh, npages, ps, hd)), jnp.float32)
+        vp = jnp.asarray(rng.normal(size=(kvh, npages, ps, hd)), jnp.float32)
+        full_bt = np.full((n, pps), npages, np.int32)
+        branch_bt = np.full((n, pps), npages, np.int32)
+        for b in range(n):
+            ids = perm[shared + b * suffix:shared + (b + 1) * suffix]
+            full_bt[b, :shared] = shared_ids
+            full_bt[b, shared:shared + suffix] = ids
+            branch_bt[b, :suffix] = ids
+        lens = jnp.full((n,), (shared + suffix) * ps, jnp.int32)
+        row_group = jnp.zeros((n,), jnp.int32)
+        shared_tab = jnp.asarray(
+            np.pad(shared_ids, (0, pps - shared),
+                   constant_values=npages)[None, :], jnp.int32)
+        shared_lens = jnp.asarray([shared * ps], jnp.int32)
+        iters = 3 if quick else 10
+
+        branch = jax.jit(lambda q, kp, vp, bt, ln: paged_attention(
+            q, kp, vp, bt, ln, use_kernel=False))
+        us_b = _time(branch, q, kp, vp, jnp.asarray(full_bt), lens,
+                     iters=iters)
+        by_b = tree_decode_bytes_read(shared, [suffix] * n, ps, kvh, hd,
+                                      path="branch")
+        rows.append((f"tree_decode_branch_n{n}_sh{shared * ps}", us_b,
+                     f"kv_bytes={by_b}"))
+
+        tree = jax.jit(lambda q, kp, vp, rg, sbt, sl, bbt, ln:
+                       paged_tree_attention(q, kp, vp, rg, sbt, sl, bbt,
+                                            ln, use_kernel=False))
+        us_t = _time(tree, q, kp, vp, row_group, shared_tab, shared_lens,
+                     jnp.asarray(branch_bt), lens, iters=iters)
+        by_t = tree_decode_bytes_read(shared, [suffix] * n, ps, kvh, hd,
+                                      path="tree")
+        rows.append((f"tree_decode_tree_n{n}_sh{shared * ps}", us_t,
+                     f"kv_bytes={by_t} ({by_b / by_t:.1f}x less than "
+                     "branch)"))
+    return rows
+
+
 def bench_engine_decode_step(quick=False):
     """Whole-engine decode step (model fwd + paged attention + sampling)."""
     from repro.data import tokenizer as tk
@@ -264,8 +326,8 @@ def bench_prefix_cache(quick=False):
 def collect(quick: bool = False):
     rows = []
     for bench in (bench_paged_attention, bench_ssd, bench_mixed_step,
-                  bench_engine_decode_step, bench_chunked_prefill,
-                  bench_prefix_cache):
+                  bench_tree_decode, bench_engine_decode_step,
+                  bench_chunked_prefill, bench_prefix_cache):
         rows.extend(bench(quick))
     return rows
 

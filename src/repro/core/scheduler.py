@@ -368,7 +368,7 @@ class Scheduler:
     def _spawn_one(self, req: Request):
         h = self.engine.spawn_branch(
             req.request_id, req.prefix_blocks, req.last_logits,
-            req.ssm_state, len(req.prompt))
+            req.ssm_state, len(req.prompt), prompt_tokens=req.prompt)
         if h is None:
             return
         if req.first_branch < 0:

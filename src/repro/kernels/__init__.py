@@ -13,12 +13,15 @@ from .flash_prefill.flash_prefill import flash_prefill_grid
 from .flash_prefill.ops import flash_attention, paged_flash_prefill
 from .flash_prefill.paged_prefill import paged_prefill_grid
 from .introspect import BlockMapping, KernelGrid, block_specs
-from .paged_attention.ops import paged_attention
+from .paged_attention.ops import paged_attention, paged_tree_attention
 from .paged_attention.paged_attention import paged_attention_grid
+from .paged_attention.tree_decode import (paged_tree_branch_grid,
+                                          paged_tree_shared_grid)
 from .ssd_scan.ops import ssd
 from .ssd_scan.ssd_scan import ssd_scan_grid
 
 __all__ = ["BlockMapping", "KernelGrid", "block_specs", "flash_attention",
            "flash_prefill_grid", "paged_attention", "paged_attention_grid",
-           "paged_flash_prefill", "paged_prefill_grid", "ssd",
-           "ssd_scan_grid"]
+           "paged_flash_prefill", "paged_prefill_grid",
+           "paged_tree_attention", "paged_tree_branch_grid",
+           "paged_tree_shared_grid", "ssd", "ssd_scan_grid"]

@@ -1,16 +1,19 @@
-"""Jit'd public wrapper for the paged flash-decode kernel.
+"""Jit'd public wrappers for the paged flash-decode kernels (per-branch
+and tree/cascade).
 
-On CPU (this container) the Pallas kernel body executes via
-``interpret=True``; on TPU the same ``pallas_call`` compiles to Mosaic.
+On CPU (this container) the Pallas kernel bodies execute via
+``interpret=True``; on TPU the same ``pallas_call``s compile to Mosaic.
 """
 from __future__ import annotations
 
 import functools
+from typing import Sequence
 
 import jax
 
 from .paged_attention import paged_attention_decode
-from .ref import paged_attention_decode_ref
+from .ref import paged_attention_decode_ref, paged_tree_attention_ref
+from .tree_decode import paged_tree_attention_fwd
 
 
 def _on_tpu() -> bool:
@@ -26,3 +29,41 @@ def paged_attention(q, k_pages, v_pages, block_tables, lengths,
                                           lengths)
     return paged_attention_decode(q, k_pages, v_pages, block_tables, lengths,
                                   interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def paged_tree_attention(q, k_pages, v_pages, row_group, shared_bt,
+                         shared_lens, branch_bt, lengths,
+                         use_kernel: bool = True):
+    """Tree/cascade decode attention over a branch×page dedup map (built
+    by ``repro.kv.tree_decode_map``); shared ancestor pages are streamed
+    once per step for all descendant branches. Same output contract as
+    ``paged_attention`` over the per-row full tables the map decomposes.
+    """
+    if not use_kernel:
+        return paged_tree_attention_ref(q, k_pages, v_pages, row_group,
+                                        shared_bt, shared_lens, branch_bt,
+                                        lengths)
+    return paged_tree_attention_fwd(q, k_pages, v_pages, row_group,
+                                    shared_bt, shared_lens, branch_bt,
+                                    lengths, interpret=not _on_tpu())
+
+
+def tree_decode_bytes_read(shared_pages: int, branch_pages: Sequence[int],
+                           page_size: int, kv_heads: int, head_dim: int, *,
+                           path: str, itemsize: int = 4) -> int:
+    """Analytic K+V HBM bytes one decode step reads for a fork group of
+    sibling branches with ``shared_pages`` common ancestor pages and
+    per-branch post-fork suffixes ``branch_pages``.
+
+    ``path="branch"`` is the per-branch flash-decode loop: every sibling
+    re-streams the shared ancestor pages. ``path="tree"`` streams them
+    once (shared pass) plus each suffix once (branch pass).
+    """
+    if path == "branch":
+        pages = sum(shared_pages + bp for bp in branch_pages)
+    elif path == "tree":
+        pages = shared_pages + sum(branch_pages)
+    else:
+        raise ValueError(f"unknown tree-decode path {path!r}")
+    return 2 * pages * page_size * kv_heads * head_dim * itemsize

@@ -36,3 +36,30 @@ def paged_attention_decode_ref(q, k_pages, v_pages, block_tables, lengths):
     w = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgs,bksd->bkgd", w, v.astype(jnp.float32))
     return out.reshape(batch, q_heads, head_dim).astype(q.dtype)
+
+
+def paged_tree_attention_ref(q, k_pages, v_pages, row_group, shared_bt,
+                             shared_lens, branch_bt, lengths):
+    """Pure-jnp oracle for the tree-decode pair (`tree_decode.py`).
+
+    Reconstructs each row's full block table — the group's shared prefix
+    pages followed by the row's post-fork suffix, sentinel-padded — and
+    defers to `paged_attention_decode_ref`. The reconstruction is
+    bit-identical to the per-branch table the map was decomposed from
+    (`repro.kv.tree_decode_map` splits on whole-page boundaries only), so
+    the engine's tree ref path reproduces the per-branch ref exactly.
+    """
+    num_groups = shared_bt.shape[0]
+    pages_per_seq = branch_bt.shape[1]
+    page_size = k_pages.shape[2]
+
+    row_group = row_group.astype(jnp.int32)
+    grp = jnp.clip(row_group, 0, num_groups - 1)
+    sh_pages = jnp.where(row_group < num_groups,
+                         shared_lens.astype(jnp.int32)[grp] // page_size, 0)
+    idx = jnp.arange(pages_per_seq)[None, :]
+    from_shared = idx < sh_pages[:, None]
+    suffix_idx = jnp.clip(idx - sh_pages[:, None], 0, pages_per_seq - 1)
+    full_bt = jnp.where(from_shared, shared_bt[grp],
+                        jnp.take_along_axis(branch_bt, suffix_idx, axis=1))
+    return paged_attention_decode_ref(q, k_pages, v_pages, full_bt, lengths)

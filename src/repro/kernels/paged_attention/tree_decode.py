@@ -1,0 +1,382 @@
+"""Pallas TPU tree/cascade decode attention over fork-shared KV pages.
+
+SART's redundant sampling decodes N sibling branches forked off one
+prompt: their block tables share every ancestor page up to the fork
+point, yet per-branch flash-decode (``paged_attention.py``) streams
+those shared pages from HBM once PER BRANCH every step. This module
+splits the decode attention into two passes over a branch×page dedup
+map (built host-side from ``BranchBlocks`` fork topology by
+``repro.kv.tree_decode_map``):
+
+  * **shared pass** — grid (kv_heads, num_groups, pages_per_seq): each
+    fork group's shared ancestor pages are streamed ONCE; every decode
+    row's queries ride along as one [batch·group, head_dim] block and a
+    membership mask (``row_group[b] == g``) keeps non-members out of
+    every softmax claim. The pass emits raw online-softmax partials
+    (m, l, acc) as revisited f32 output blocks (the group axis is
+    consecutive under the major head axis, so accumulation is the
+    standard resident-block pattern).
+  * **branch pass** — the per-branch flash-decode loop of
+    ``paged_attention_decode``, but over each row's POST-FORK suffix
+    pages only (``branch_bt`` / ``branch_lens``), also emitting raw
+    partials. Key positions inside attention are order-free, so the
+    suffix uses a fresh zero-based table; shared spans are always whole
+    pages, so suffix token t lives at page t // page_size exactly.
+  * the two partial sets merge in plain jnp (flash-style exp-rescale) —
+    exact, because the passes cover disjoint key sets whose union is the
+    row's full context.
+
+Sentinel handling matches the decode kernel: table entries past a row's
+pages hold ``num_pages`` and are clamped in the index map (masks discard
+the clamped fetch); shared-pass iterations past a group's span park on
+the group's last live page so skipped grid steps move no bytes. Masked
+probabilities use ``p = where(mask, exp(s - m), 0)`` — with the finite
+``NEG_INF``, a row with no valid key yet would otherwise claim
+``exp(0) = 1`` mass into l.
+
+Validated in ``interpret=True`` mode on CPU against
+``ref.paged_tree_attention_ref``, which reconstructs each row's full
+block table from the map and defers to ``paged_attention_decode_ref`` —
+so the engine's CPU (ref) tree path is bit-identical to per-branch
+decode by construction.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..introspect import BlockMapping, KernelGrid, block_specs
+
+NEG_INF = -1e30
+
+
+def paged_tree_shared_grid(
+    batch: int,
+    q_heads: int,
+    head_dim: int,
+    kv_heads: int,
+    num_pages: int,
+    page_size: int,
+    num_groups: int,
+    pages_per_seq: int,
+) -> KernelGrid:
+    """Launch geometry for the shared-ancestor pass of
+    :func:`paged_tree_attention_fwd`.
+
+    Scalar-prefetch operands: ``sbt`` — [num_groups, pages_per_seq]
+    int32 shared page tables (sentinel ``num_pages`` past each group's
+    span), ``sl`` — [num_groups] int32 shared token spans (whole pages:
+    multiples of ``page_size``; 0 for unused groups). ``row_group`` and
+    the per-row attend lengths ride as VMEM operands (the index maps
+    never need them). The K/V index map parks iterations past a group's
+    span on its last live page and clamps sentinels into range.
+    """
+    assert q_heads % kv_heads == 0, (q_heads, kv_heads)
+    group = q_heads // kv_heads
+    rows = batch * group
+
+    def q_index(h, g, ki, sbt, sl):
+        return (h, 0, 0)
+
+    def col_index(h, g, ki, sbt, sl):
+        return (0, 0)
+
+    def kv_index(h, g, ki, sbt, sl):
+        # park iterations past the group's shared span on its last live
+        # page (unused groups have span 0 and park on entry 0), then
+        # clamp sentinel entries into range — both read already-resident
+        # pages, so skipped grid steps move no bytes
+        last_live = jnp.maximum(sl[g] // page_size - 1, 0)
+        ki_live = jnp.minimum(ki, last_live)
+        return (h, jnp.minimum(sbt[g, ki_live], num_pages - 1), 0, 0)
+
+    kv_shape = (kv_heads, num_pages, page_size, head_dim)
+    kv_block = (1, 1, page_size, head_dim)
+    return KernelGrid(
+        kernel="paged_tree_shared",
+        grid=(kv_heads, num_groups, pages_per_seq),
+        in_mappings=(
+            BlockMapping("q", (kv_heads, rows, head_dim),
+                         (1, rows, head_dim), q_index),
+            BlockMapping("row_group", (batch, 1), (batch, 1), col_index),
+            BlockMapping("lengths", (batch, 1), (batch, 1), col_index),
+            BlockMapping("k_pages", kv_shape, kv_block, kv_index),
+            BlockMapping("v_pages", kv_shape, kv_block, kv_index),
+        ),
+        out_mappings=(
+            BlockMapping("m", (kv_heads, rows, 1), (1, rows, 1), q_index),
+            BlockMapping("l", (kv_heads, rows, 1), (1, rows, 1), q_index),
+            BlockMapping("acc", (kv_heads, rows, head_dim),
+                         (1, rows, head_dim), q_index),
+        ),
+        num_scalar_prefetch=2,
+    )
+
+
+def paged_tree_branch_grid(
+    batch: int,
+    q_heads: int,
+    head_dim: int,
+    kv_heads: int,
+    num_pages: int,
+    page_size: int,
+    pages_per_seq: int,
+) -> KernelGrid:
+    """Launch geometry for the post-fork suffix pass — the decode
+    kernel's grid with raw-partial outputs.
+
+    Scalar-prefetch operands: ``bt`` — [batch, pages_per_seq] int32
+    suffix page tables, ``ln`` — [batch] int32 suffix spans
+    (``max(attend_len - shared_span, 0)``; 0 for rows fully covered by
+    the shared pass). Sentinel entries are clamped exactly like
+    ``paged_attention_grid``.
+    """
+    assert q_heads % kv_heads == 0, (q_heads, kv_heads)
+    group = q_heads // kv_heads
+
+    def q_index(b, h, i, bt, ln):
+        return (b, h, 0)
+
+    def kv_index(b, h, i, bt, ln):
+        return (h, jnp.minimum(bt[b, i], num_pages - 1), 0, 0)
+
+    kv_shape = (kv_heads, num_pages, page_size, head_dim)
+    kv_block = (1, 1, page_size, head_dim)
+    return KernelGrid(
+        kernel="paged_tree_branch",
+        grid=(batch, kv_heads, pages_per_seq),
+        in_mappings=(
+            BlockMapping("q", (batch, kv_heads * group, head_dim),
+                         (1, group, head_dim), q_index),
+            BlockMapping("k_pages", kv_shape, kv_block, kv_index),
+            BlockMapping("v_pages", kv_shape, kv_block, kv_index),
+        ),
+        out_mappings=(
+            BlockMapping("m", (batch, kv_heads * group, 1),
+                         (1, group, 1), q_index),
+            BlockMapping("l", (batch, kv_heads * group, 1),
+                         (1, group, 1), q_index),
+            BlockMapping("acc", (batch, kv_heads * group, head_dim),
+                         (1, group, head_dim), q_index),
+        ),
+        num_scalar_prefetch=2,
+    )
+
+
+def _tree_shared_kernel(
+    # scalar-prefetch refs
+    shared_bt_ref,       # [num_groups, pages_per_seq] int32
+    shared_lens_ref,     # [num_groups] int32 (multiples of page_size)
+    # inputs
+    q_ref,               # [1, batch * group, head_dim]
+    rg_ref,              # [batch, 1] int32 row -> group (sentinel >= G)
+    ln_ref,              # [batch, 1] int32 per-row attend lengths
+    k_ref,               # [1, 1, page_size, head_dim]
+    v_ref,               # [1, 1, page_size, head_dim]
+    # outputs (revisited accumulators, f32)
+    m_ref,               # [1, batch * group, 1]
+    l_ref,               # [1, batch * group, 1]
+    acc_ref,             # [1, batch * group, head_dim]
+    *,
+    batch: int,
+    group: int,
+    page_size: int,
+    scale: float,
+):
+    g = pl.program_id(1)
+    ki = pl.program_id(2)
+    sl = shared_lens_ref[g]
+
+    @pl.when((g == 0) & (ki == 0))
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(ki * page_size < sl)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale            # [B*G, hd]
+        k = k_ref[0, 0].astype(jnp.float32)                 # [P, hd]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [B*G, P]
+        # membership + per-row shared-span mask, expanded to GQA rows
+        member = jnp.broadcast_to(rg_ref[...] == g, (batch, group)) \
+            .reshape(batch * group, 1)
+        attend = jnp.broadcast_to(jnp.minimum(ln_ref[...], sl),
+                                  (batch, group)).reshape(batch * group, 1)
+        kpos = ki * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        mask = member & (kpos < attend)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[0]                                   # [B*G, 1]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        # where-masked p: a fully-masked row has m_new == m_prev ==
+        # NEG_INF and exp(s - m_new) would claim exp(0) = 1 per key
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[0] = alpha * l_ref[0] + jnp.sum(p, -1, keepdims=True)
+        acc_ref[0] = acc_ref[0] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_ref[0] = m_new
+
+
+def _tree_branch_kernel(
+    # scalar-prefetch refs
+    branch_bt_ref,       # [B, pages_per_seq] int32
+    branch_lens_ref,     # [B] int32 suffix spans
+    # inputs
+    q_ref,               # [1, group, head_dim]
+    k_ref,               # [1, 1, page_size, head_dim]
+    v_ref,               # [1, 1, page_size, head_dim]
+    # outputs (raw partials, f32)
+    m_out_ref,           # [1, group, 1]
+    l_out_ref,           # [1, group, 1]
+    acc_out_ref,         # [1, group, head_dim]
+    # scratch
+    m_ref,               # [group, 1] f32
+    l_ref,               # [group, 1] f32
+    acc_ref,             # [group, head_dim] f32
+    *,
+    page_size: int,
+    scale: float,
+):
+    b = pl.program_id(0)
+    page_idx = pl.program_id(2)
+    num_pages = pl.num_programs(2)
+    length = branch_lens_ref[b]
+
+    @pl.when(page_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    start = page_idx * page_size
+
+    @pl.when(start < length)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale            # [G, hd]
+        k = k_ref[0, 0].astype(jnp.float32)                 # [P, hd]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [G, P]
+        pos = start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = pos < length
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_ref[...] = m_new
+
+    @pl.when(page_idx == num_pages - 1)
+    def _finalize():
+        # raw partials — the caller merges with the shared pass
+        m_out_ref[0] = m_ref[...]
+        l_out_ref[0] = l_ref[...]
+        acc_out_ref[0] = acc_ref[...]
+
+
+def paged_tree_attention_fwd(
+    q: jax.Array,             # [B, q_heads, head_dim]
+    k_pages: jax.Array,       # [kv_heads, num_pages, page_size, head_dim]
+    v_pages: jax.Array,       # [kv_heads, num_pages, page_size, head_dim]
+    row_group: jax.Array,     # [B] int32; >= num_groups means ungrouped
+    shared_bt: jax.Array,     # [num_groups, pages_per_seq] int32
+    shared_lens: jax.Array,   # [num_groups] int32 (whole pages)
+    branch_bt: jax.Array,     # [B, pages_per_seq] int32 suffix tables
+    lengths: jax.Array,       # [B] int32 full attend lengths
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """Tree-decode over the branch×page dedup map.
+
+    Returns [B, q_heads, head_dim] — same contract as
+    ``paged_attention_decode`` over the per-row full tables the map
+    decomposes.
+    """
+    batch, q_heads, head_dim = q.shape
+    kv_heads, num_pages, page_size, _ = k_pages.shape
+    group = q_heads // kv_heads
+    num_groups = shared_bt.shape[0]
+    pages_per_seq = branch_bt.shape[1]
+    scale = 1.0 / (head_dim ** 0.5)
+
+    row_group = row_group.astype(jnp.int32)
+    lengths = lengths.astype(jnp.int32)
+    grp = jnp.clip(row_group, 0, num_groups - 1)
+    sh_len = jnp.where(row_group < num_groups,
+                       shared_lens.astype(jnp.int32)[grp], 0)
+    branch_lens = jnp.maximum(lengths - sh_len, 0)
+
+    kg_s = paged_tree_shared_grid(batch, q_heads, head_dim, kv_heads,
+                                  num_pages, page_size, num_groups,
+                                  shared_bt.shape[1])
+    shared_call = pl.pallas_call(
+        functools.partial(_tree_shared_kernel, batch=batch, group=group,
+                          page_size=page_size, scale=scale),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=kg_s.num_scalar_prefetch,
+            grid=kg_s.grid,
+            in_specs=block_specs(kg_s.in_mappings),
+            out_specs=block_specs(kg_s.out_mappings),
+        ),
+        out_shape=[jax.ShapeDtypeStruct(m.array_shape, jnp.float32)
+                   for m in kg_s.out_mappings],
+        interpret=interpret,
+    )
+    q_s = q.reshape(batch, kv_heads, group, head_dim) \
+        .transpose(1, 0, 2, 3).reshape(kv_heads, batch * group, head_dim)
+    m_s, l_s, acc_s = shared_call(
+        shared_bt.astype(jnp.int32), shared_lens.astype(jnp.int32), q_s,
+        row_group[:, None], lengths[:, None], k_pages, v_pages)
+
+    kg_b = paged_tree_branch_grid(batch, q_heads, head_dim, kv_heads,
+                                  num_pages, page_size, pages_per_seq)
+    branch_call = pl.pallas_call(
+        functools.partial(_tree_branch_kernel, page_size=page_size,
+                          scale=scale),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=kg_b.num_scalar_prefetch,
+            grid=kg_b.grid,
+            in_specs=block_specs(kg_b.in_mappings),
+            out_specs=block_specs(kg_b.out_mappings),
+            scratch_shapes=[
+                pltpu.VMEM((group, 1), jnp.float32),
+                pltpu.VMEM((group, 1), jnp.float32),
+                pltpu.VMEM((group, head_dim), jnp.float32),
+            ],
+        ),
+        out_shape=[jax.ShapeDtypeStruct(m.array_shape, jnp.float32)
+                   for m in kg_b.out_mappings],
+        interpret=interpret,
+    )
+    m_b, l_b, acc_b = branch_call(
+        branch_bt.astype(jnp.int32), branch_lens,
+        q.reshape(batch, kv_heads * group, head_dim), k_pages, v_pages)
+
+    # fold shared partials into the branch layout, then merge the two
+    # disjoint-key-set softmax partials flash-style
+    def fold(a):
+        w = a.shape[-1]
+        return a.reshape(kv_heads, batch, group, w) \
+            .transpose(1, 0, 2, 3).reshape(batch, kv_heads * group, w)
+
+    m_s, l_s, acc_s = fold(m_s), fold(l_s), fold(acc_s)
+    m = jnp.maximum(m_s, m_b)
+    a_s = jnp.exp(m_s - m)
+    a_b = jnp.exp(m_b - m)
+    l = l_s * a_s + l_b * a_b
+    acc = acc_s * a_s + acc_b * a_b
+    out = acc / jnp.maximum(l, 1e-30)
+    return out.reshape(batch, q_heads, head_dim).astype(q.dtype)

@@ -41,7 +41,9 @@ here):
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple, TYPE_CHECKING
+from typing import Dict, List, Optional, Sequence, Tuple, TYPE_CHECKING
+
+import numpy as np
 
 if TYPE_CHECKING:  # pragma: no cover - import cycle guard, types only
     from .prefix_cache import PrefixCache
@@ -203,10 +205,20 @@ class PageAllocator:
         All parent pages (including a trailing partial page) become shared;
         the engine performs copy-on-write when a branch needs to append into
         a shared partial page (see ``needs_cow``).
+
+        The fork adds exactly one reference per page for the child. A
+        parent page that idled onto the prefix cache's LRU list (its
+        holder released while this ``BranchBlocks`` — e.g. a ``copy`` kept
+        by the scheduler — still names it) is revived off the LRU at
+        refcount 1 rather than incref'd: incref only extends live
+        lifetimes and would KeyError on the parked page.
         """
         # reprolint REP002 is baselined here: incref on a live parent page
         # cannot raise OutOfPagesError, so the loop cannot partially fail
         for pid in parent.pages:
+            if (pid not in self._refs and self._cache is not None
+                    and self._cache.revive(pid)):
+                continue                   # child holds the single new ref
             self.incref(pid)
         return BranchBlocks(pages=list(parent.pages),
                             num_shared=len(parent.pages),
@@ -274,3 +286,66 @@ class PageAllocator:
         assert all(r > 0 for r in self._refs.values())
         if self._cache is not None:
             self._cache.check_invariants()
+
+
+def tree_decode_map(
+    blocks: Sequence[Optional[BranchBlocks]],
+    *,
+    pages_per_branch: int,
+    num_pages: int,
+    page_size: int,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Build the branch×page dedup map the tree-decode attention kernel
+    consumes (``repro.kernels.paged_tree_attention``) from the slots'
+    fork topology.
+
+    Rows sharing their first page id form a fork group (page ids are
+    refcount-shared on fork, so a common ``pages[0]`` — whether from
+    ``fork`` or from cross-request prefix-cache admission — means
+    physically identical leading KV); the group's shared span is the raw
+    longest common page-id prefix across its members. Spans are whole
+    pages by construction (page lists diverge at CoW/alloc boundaries
+    after per-step accounting), and the kernel's per-row attend mask
+    (``kpos < min(length, span)``) keeps a row whose context ends inside
+    the span from reading past its own written extent.
+
+    Returns ``(row_group, shared_bt, shared_lens, branch_bt)`` —
+    ``row_group`` [B] int32 mapping each row to its group (``B`` = the
+    ungrouped sentinel: singletons, empty slots, page-less rows keep
+    their full table in ``branch_bt``); ``shared_bt`` [B,
+    pages_per_branch] int32 per-group shared page tables; ``shared_lens``
+    [B] int32 shared token spans; ``branch_bt`` [B, pages_per_branch]
+    int32 post-fork suffix tables. Unused entries hold the ``num_pages``
+    OOB sentinel (tables) / 0 (spans); the group axis is padded to B so
+    the map's shapes are static per engine config.
+    """
+    b = len(blocks)
+    row_group = np.full((b,), b, np.int32)
+    shared_bt = np.full((b, pages_per_branch), num_pages, np.int32)
+    shared_lens = np.zeros((b,), np.int32)
+    branch_bt = np.full((b, pages_per_branch), num_pages, np.int32)
+    groups: Dict[int, List[int]] = {}
+    for i, blk in enumerate(blocks):
+        if blk is not None and blk.pages:
+            groups.setdefault(blk.pages[0], []).append(i)
+    gid = 0
+    for members in groups.values():
+        if len(members) < 2:
+            continue
+        lists = [blocks[i].pages for i in members]  # type: ignore[union-attr]
+        depth = 0
+        for cols in zip(*lists):
+            if len(set(cols)) != 1:
+                break
+            depth += 1
+        shared_bt[gid, :depth] = lists[0][:depth]
+        shared_lens[gid] = depth * page_size
+        for i, pages in zip(members, lists):
+            row_group[i] = gid
+            suffix = pages[depth:]
+            branch_bt[i, :len(suffix)] = suffix
+        gid += 1
+    for i, blk in enumerate(blocks):
+        if row_group[i] == b and blk is not None and blk.pages:
+            branch_bt[i, :len(blk.pages)] = blk.pages
+    return row_group, shared_bt, shared_lens, branch_bt

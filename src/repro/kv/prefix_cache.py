@@ -276,6 +276,21 @@ class PrefixCache:
         self.inserted_pages += new
         return new
 
+    def revive(self, pid: int) -> bool:
+        """Called by ``PageAllocator.fork`` when a parent page is parked
+        on the LRU free-list (refcount 0, K/V resident): resurrect it so
+        the fork's child holds the single new reference. Returns False
+        for pages this cache has not parked — the allocator then treats
+        the page as live and increfs (KeyError on a genuinely dead page,
+        as before)."""
+        if pid not in self._lru:
+            return False
+        # resurrect BEFORE the LRU pop, mirroring ``acquire``
+        self.allocator.resurrect(pid)
+        self._lru.pop(pid)
+        self.resurrections += 1
+        return True
+
     def retain(self, pid: int) -> bool:
         """Called by ``PageAllocator.decref`` when a page's refcount hits
         0: park tracked pages on the LRU free-list (K/V stays resident for

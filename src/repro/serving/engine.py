@@ -62,9 +62,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels.flash_prefill.ops import paged_flash_prefill
-from ..kernels.paged_attention.ops import paged_attention
+from ..kernels.paged_attention.ops import (paged_attention,
+                                           paged_tree_attention)
 from ..kv import (BranchBlocks, OutOfPagesError, PageAllocator,
-                  PrefixCache)
+                  PrefixCache, tree_decode_map)
 from ..models.attention import _project_qkv, _rotate
 from ..models.config import ModelConfig
 from ..models.layers import (apply_mlp, apply_norm, embed_tokens,
@@ -103,6 +104,17 @@ class EngineConfig:
     # re-uses the per-token flash-decode path for every chunk row
     # (O(chunk · context) reads), kept for equivalence testing.
     mixed_step_kernel: str = "fused"
+    # Decode-slot attention path. "paged" is the per-branch flash-decode
+    # kernel (every branch streams its whole context, shared ancestor
+    # pages once PER sibling); "tree" splits the step over a branch×page
+    # dedup map built from the slots' fork topology
+    # (``repro.kv.tree_decode_map``) so each shared ancestor page is
+    # streamed once per step for all descendant branches and the
+    # per-branch pass only covers post-fork pages. Bit-exact vs "paged"
+    # (the jnp ref reconstructs identical full tables on CPU); requires
+    # ``mixed_step_kernel="fused"`` — the "decode" fallback runs decode
+    # slots and chunk rows through one per-branch call.
+    decode_kernel: str = "paged"
     # Token-budget lane scheduling (vLLM-style): a mixed step carries up to
     # ``step_token_budget`` chunk-row tokens drawn from MULTIPLE in-flight
     # prefills (one lane per request, all lanes padded to one shared
@@ -271,6 +283,11 @@ class BranchHandle:
     last_reward: float = 0.0
     scored: bool = False              # has the PRM ever scored this branch?
     saved_ssm: object = None          # host snapshot while suspended
+    # generated-prefix insertion (prefix cache on): the prompt tokens key
+    # the branch's full trajectory into the radix, and page-aligned decode
+    # boundaries snapshot (conv, ssd) so ssm/hybrid resamples can seed
+    prompt_tokens: Optional[List[int]] = None
+    ssm_snaps: Optional[dict] = None  # {token boundary: (conv, ssd)}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -305,6 +322,13 @@ class Engine:
                 " long-context is exercised via the dense dry-run path"
         assert cfg.mixed_step_kernel in ("fused", "decode"), \
             cfg.mixed_step_kernel
+        assert cfg.decode_kernel in ("paged", "tree"), cfg.decode_kernel
+        if cfg.decode_kernel == "tree" and cfg.mixed_step_kernel == "decode":
+            raise ValueError(
+                "decode_kernel='tree' requires mixed_step_kernel='fused' — "
+                "the 'decode' fallback runs decode slots and chunk rows "
+                "through one per-branch call, which the tree dedup map "
+                "cannot cover (its row axis is the decode slots only)")
         self.allocator = PageAllocator(cfg.num_pages, cfg.page_size)
         self._rng = jax.random.PRNGKey(cfg.seed)
         self._next_branch_id = 0
@@ -371,6 +395,8 @@ class Engine:
                              if cfg.prefix_cache else None)
         # cached no-CoW (src, dst) sentinel pair (see _cow_arrays)
         self._cow_sentinel: Optional[tuple] = None
+        # cached all-ungrouped tree map (see _tree_map)
+        self._tree_sentinel: Optional[dict] = None
 
     # ------------------------------------------------------------------ util
     @property
@@ -568,12 +594,19 @@ class Engine:
                 chunk_state = {
                     "conv": sds((L, n_lanes) + conv.shape[1:], conv.dtype),
                     "ssd": sds((L, n_lanes) + ssd.shape[1:], ssd.dtype)}
+            tree: dict = {}
+            if cfg.decode_kernel == "tree" and mc.uses_attention:
+                w = cfg.max_pages_per_branch
+                tree = {"branch_bt": sds((B, w), jnp.int32),
+                        "row_group": sds((B,), jnp.int32),
+                        "shared_bt": sds((B, w), jnp.int32),
+                        "shared_lens": sds((B,), jnp.int32)}
             return (sds((rows,), jnp.int32), sds((rows,), jnp.int32),
                     sds((rows, cfg.max_pages_per_branch), jnp.int32),
                     sds((rows,), jnp.int32),
                     sds(self._rng.shape, self._rng.dtype), chunk_state,
                     sds((n_lanes,), jnp.int32), sds((B,), jnp.bool_),
-                    sds((B,), jnp.int32), sds((B,), jnp.int32))
+                    sds((B,), jnp.int32), sds((B,), jnp.int32), tree)
 
         variants = [StepVariant("decode", (), dyn(0, 0))]
         for bucket in self._buckets:
@@ -637,7 +670,8 @@ class Engine:
 
     def _advance_chunks(self, sts: List[ChunkedPrefillState],
                         piggyback: bool, bucket: int = 0,
-                        cows: Sequence[tuple] = ()):
+                        cows: Sequence[tuple] = (),
+                        tree: Optional[dict] = None):
         """Run one chunk of each state in ``sts`` through the step program
         as concurrent lanes (``sts`` comes from ``pack_chunk_lanes``; the
         legacy path passes a single state). With ``piggyback`` the caller
@@ -680,6 +714,8 @@ class Engine:
         lane_buckets = (bucket,) * len(sts)
         self._buckets_used.add((bucket, len(sts)))
         cow_src, cow_dst = self._cow_arrays(cows)
+        if tree is None:
+            tree = self._tree_map()     # sentinel: decode rows are inert
         next_tokens, hidden, logits, new_state = self._step_jit(
             self.params, self.state,
             jnp.asarray(np.concatenate([d_tokens] + [ln[0] for ln in lanes])),
@@ -689,7 +725,7 @@ class Engine:
             jnp.asarray(np.concatenate([d_lengths]
                                        + [ln[3] for ln in lanes])),
             self._next_rng(), chunk_state, jnp.asarray(chunk_lens),
-            jnp.asarray(slot_valid), cow_src, cow_dst,
+            jnp.asarray(slot_valid), cow_src, cow_dst, tree,
             lane_buckets=lane_buckets)
         new_state = dict(new_state)
         if mc.uses_ssm:
@@ -752,12 +788,17 @@ class Engine:
     # --------------------------------------------------------------- branches
     def spawn_branch(self, request_id: int, prefix_blocks: BranchBlocks,
                      last_logits, ssm_state, prompt_len: int,
-                     first_fork: bool = False) -> Optional[BranchHandle]:
+                     first_fork: bool = False,
+                     prompt_tokens: Optional[List[int]] = None
+                     ) -> Optional[BranchHandle]:
         """Fork one branch off a prefilled prefix and seat it in a free slot.
 
         Samples the branch's own first token from the prefill logits (the
         stochastic divergence point between siblings). Returns None if no
-        slot is free (caller queues the branch).
+        slot is free (caller queues the branch). ``prompt_tokens`` (the
+        request's prompt) keys the branch's generated full pages into the
+        prefix cache at completion and page-aligned decode boundaries —
+        without it the branch generates normally but inserts nothing.
         """
         free = self.free_slots
         if not free:
@@ -768,7 +809,10 @@ class Engine:
                            self.cfg.sampling))
         handle = BranchHandle(
             branch_id=self._next_branch_id, request_id=request_id, slot=slot,
-            blocks=blocks, tokens=[first], prompt_len=prompt_len)
+            blocks=blocks, tokens=[first], prompt_len=prompt_len,
+            prompt_tokens=(list(prompt_tokens)
+                           if prompt_tokens is not None else None),
+            ssm_snaps={} if self.prefix_cache is not None else None)
         self._next_branch_id += 1
         self.slots[slot] = handle
 
@@ -809,7 +853,11 @@ class Engine:
         handle = BranchHandle(
             branch_id=self._next_branch_id, request_id=parent.request_id,
             slot=slot, blocks=blocks, tokens=list(parent.tokens),
-            prompt_len=parent.prompt_len)
+            prompt_len=parent.prompt_len,
+            prompt_tokens=(list(parent.prompt_tokens)
+                           if parent.prompt_tokens is not None else None),
+            ssm_snaps=(dict(parent.ssm_snaps)
+                       if parent.ssm_snaps is not None else None))
         self._next_branch_id += 1
         self.slots[slot] = handle
         if self.model.cfg.uses_ssm:
@@ -868,8 +916,31 @@ class Engine:
                 need += 1
         return need
 
+    def _insert_generated(self, h: BranchHandle) -> None:
+        """Insert a branch's generated full pages into the prefix cache,
+        keyed by prompt + generated tokens (the trailing partial page
+        keeps private CoW semantics; ``insert`` skips it). Released pages
+        then park on the LRU instead of freeing, so a resample of the
+        same trajectory — or any follow-up sharing the generated prefix —
+        admits warm. ``ssm_snaps`` attaches (conv, ssd) snapshots to the
+        page-aligned boundaries that have one, preserving the
+        ``acquire(need_state=True)`` seedable-boundary gate for
+        ssm/hybrid. Gated on attention: pure-ssm decode allocates no
+        generated pages to insert."""
+        if (self.prefix_cache is None or h.prompt_tokens is None
+                or not self.model.cfg.uses_attention):
+            return
+        written = h.blocks.length - h.prompt_len
+        if written <= 0:
+            return
+        key = list(h.prompt_tokens) + h.tokens[:written]
+        self.prefix_cache.insert(key, h.blocks.pages, h.ssm_snaps)
+
     def free_branch(self, h: BranchHandle):
-        """Release a branch's slot and eagerly free its pages."""
+        """Release a branch's slot and eagerly free its pages (inserting
+        its generated full pages into the prefix cache first, so they park
+        warm on the LRU instead of freeing)."""
+        self._insert_generated(h)
         self.allocator.release(h.blocks)
         slot = h.slot
         if slot >= 0:                 # suspended branches hold no slot
@@ -906,9 +977,36 @@ class Engine:
             src[j], dst[j] = old, new
         return jnp.asarray(src), jnp.asarray(dst)
 
+    def _tree_map(self, blocks: Optional[List[Optional[BranchBlocks]]]
+                  = None) -> dict:
+        """The decode rows' branch×page dedup map for the tree kernel,
+        as the ``tree`` step argument. Empty dict with the per-branch
+        kernel (zero pytree leaves — the traced shapes are unchanged);
+        ``blocks=None`` returns the cached all-ungrouped sentinel map
+        (standalone chunk drains: every decode row is inert)."""
+        cfg = self.cfg
+        if cfg.decode_kernel != "tree" or not self.model.cfg.uses_attention:
+            return {}
+        if blocks is None:
+            if self._tree_sentinel is None:
+                b, w = cfg.max_slots, cfg.max_pages_per_branch
+                sent = np.full((b, w), cfg.num_pages, np.int32)
+                self._tree_sentinel = {
+                    "branch_bt": jnp.asarray(sent),
+                    "row_group": jnp.full((b,), b, jnp.int32),
+                    "shared_bt": jnp.asarray(sent),
+                    "shared_lens": jnp.zeros((b,), jnp.int32)}
+            return self._tree_sentinel
+        rg, sbt, sl, bbt = tree_decode_map(
+            blocks, pages_per_branch=cfg.max_pages_per_branch,
+            num_pages=cfg.num_pages, page_size=cfg.page_size)
+        return {"branch_bt": jnp.asarray(bbt), "row_group": jnp.asarray(rg),
+                "shared_bt": jnp.asarray(sbt),
+                "shared_lens": jnp.asarray(sl)}
+
     def _step_fn(self, params, state, tokens, positions, block_tables,
                  lengths, rng, chunk_state, chunk_lens, slot_valid,
-                 cow_src, cow_dst, lane_buckets: tuple = ()):
+                 cow_src, cow_dst, tree, lane_buckets: tuple = ()):
         """One batched token step, generic in row count and lane count.
 
         Rows 0..max_slots-1 are the decode slots; any extra rows are the
@@ -949,6 +1047,17 @@ class Engine:
         mixed step's chunk page writes and its CoW copies all ride a
         single device dispatch, however many lanes it carries (the
         batching mirror of the old host-side ``cows`` loop).
+
+        ``tree`` is the decode rows' branch×page dedup map
+        (``decode_kernel="tree"``: row_group / shared_bt / shared_lens /
+        branch_bt from ``repro.kv.tree_decode_map``, built host-side from
+        the slots' post-accounting fork topology) — the decode-slot
+        attention then streams each fork group's shared ancestor pages
+        once for all members and covers only post-fork suffixes
+        per-branch. Empty dict with the per-branch kernel: zero pytree
+        leaves, so that path's traced shapes are byte-identical to
+        before the map existed. CoW runs before attention, so no row's
+        shared page is written mid-step and the map stays sound.
         """
         model, mc, cfg = self.model, self.model.cfg, self.cfg
         B = tokens.shape[0]
@@ -977,6 +1086,9 @@ class Engine:
         # O(chunk · context) HBM reads per layer
         fused_chunk = (B > nS and mc.uses_attention
                        and cfg.mixed_step_kernel == "fused")
+        # static: decode-slot attention rides the tree dedup map (an empty
+        # dict means the per-branch kernel — dict-ness is static under jit)
+        tree_decode = bool(tree)
         on_tpu = jax.default_backend() == "tpu"
         x = embed_tokens(mc, params["embed"], tokens[:, None])
         if mc.pos_embedding == "sinusoidal":
@@ -1015,6 +1127,21 @@ class Engine:
                     jnp.moveaxis(k[:, 0], 1, 0), mode="drop")
                 vp = vp.at[:, page_of, slot_in_page].set(
                     jnp.moveaxis(v[:, 0], 1, 0), mode="drop")
+                def slot_attention():
+                    """Decode-slot attention; with the tree map, shared
+                    ancestor pages stream once per fork group and
+                    suffixes run per-branch (bit-exact vs the per-branch
+                    call — the map decomposes the same block tables)."""
+                    if tree_decode:
+                        return paged_tree_attention(
+                            q[:nS, 0], kp, vp, tree["row_group"],
+                            tree["shared_bt"], tree["shared_lens"],
+                            tree["branch_bt"], lengths[:nS] + 1,
+                            use_kernel=on_tpu)
+                    return paged_attention(
+                        q[:nS, 0], kp, vp, block_tables[:nS],
+                        lengths[:nS] + 1, use_kernel=on_tpu)
+
                 if fused_chunk:
                     # decode rows keep the flash-decode path; each lane's
                     # rows share one block table (they are broadcast rows
@@ -1024,9 +1151,7 @@ class Engine:
                     # written above. Bucket-pad rows (>= the lane's chunk
                     # length) emit exact zeros; their writes were already
                     # dropped.
-                    att_parts = [paged_attention(
-                        q[:nS, 0], kp, vp, block_tables[:nS],
-                        lengths[:nS] + 1, use_kernel=on_tpu)]
+                    att_parts = [slot_attention()]
                     for i, bk in enumerate(lane_buckets):
                         o = lane_off[i]
                         att_parts.append(paged_flash_prefill(
@@ -1034,10 +1159,15 @@ class Engine:
                             positions[o], chunk_lens[i],
                             use_kernel=on_tpu))
                     att = jnp.concatenate(att_parts, 0)
-                else:
+                elif B > nS:
+                    # mixed_step_kernel="decode" fallback: decode slots
+                    # and chunk rows ride one per-branch call (the tree
+                    # map is rejected for this combination in __init__)
                     att = paged_attention(
                         q[:, 0], kp, vp, block_tables, lengths + 1,
                         use_kernel=on_tpu)
+                else:
+                    att = slot_attention()
                 y = att.reshape(B, 1, -1) @ layer_p["attn"]["wo"]
                 mix = mix + y
                 outs["k_pages"], outs["v_pages"] = kp, vp
@@ -1151,17 +1281,25 @@ class Engine:
         # program itself (one fused gather/scatter batched with the chunk
         # K/V writes — no separate host dispatch, whatever the lane count)
         lanes, bucket = self._pack_lanes()
+        # the tree dedup map reflects POST-accounting topology: CoW and
+        # boundary allocation above already diverged any page this step
+        # writes, so no fork group's shared span covers a written page
+        tree = (self._tree_map([h.blocks if h is not None else None
+                                for h in self.slots])
+                if self.cfg.decode_kernel == "tree" else None)
         if lanes:
             next_tokens, hidden = self._advance_chunks(
-                lanes, piggyback=True, bucket=bucket, cows=cows)
+                lanes, piggyback=True, bucket=bucket, cows=cows, tree=tree)
         else:
             cow_src, cow_dst = self._cow_arrays(cows)
+            if tree is None:
+                tree = self._tree_map()
             next_tokens, hidden, _, new_state = self._step_jit(
                 self.params, self.state, jnp.asarray(self._tokens),
                 jnp.asarray(self._positions), jnp.asarray(self._block_tables),
                 jnp.asarray(self._lengths), self._next_rng(), {},
                 jnp.zeros((0,), jnp.int32), jnp.asarray(self._active),
-                cow_src, cow_dst, lane_buckets=())
+                cow_src, cow_dst, tree, lane_buckets=())
             self.state.update(new_state)
         self._last_hidden = hidden[:cfg.max_slots]
         self.decode_steps_executed += 1
@@ -1171,6 +1309,7 @@ class Engine:
         # branch bookkeeping (EOS detection, page accounting) before the
         # next dispatch can be built
         toks = np.asarray(next_tokens)  # reprolint: disable=REP005
+        ps = cfg.page_size
         for slot, h in enumerate(self.slots):
             if h is None:
                 continue
@@ -1180,6 +1319,19 @@ class Engine:
             self._tokens[slot] = tok
             self._positions[slot] += 1
             self._lengths[slot] += 1
+            if (self.prefix_cache is not None
+                    and h.prompt_tokens is not None
+                    and h.blocks.length % ps == 0):
+                # page-aligned decode boundary: long-running branches
+                # publish their generated full pages without waiting for
+                # completion. The post-step slot state corresponds to
+                # exactly blocks.length consumed tokens, so it can seed
+                # an ssm/hybrid resume at this boundary.
+                if mc.uses_ssm and h.ssm_snaps is not None:
+                    h.ssm_snaps[h.blocks.length] = (
+                        self.state["conv"][:, h.slot:h.slot + 1],
+                        self.state["ssd"][:, h.slot:h.slot + 1])
+                self._insert_generated(h)
         return out
 
     # --------------------------------------------------------------- scoring

@@ -249,11 +249,15 @@ class SimEngine:
                            quality=quality)
 
     def spawn_branch(self, request_id: int, prefix_blocks: BranchBlocks,
-                     last_logits, ssm_state, prompt_len: int
+                     last_logits, ssm_state, prompt_len: int,
+                     prompt_tokens: Optional[List[int]] = None
                      ) -> Optional[BranchHandle]:
         """Seat a new branch sharing the request's prefix pages, sampling
         its destiny (length/correctness/quality) from the workload.
-        Returns None when no decode slot is free."""
+        Returns None when no decode slot is free. ``prompt_tokens``
+        mirrors Engine.spawn_branch: it keys the branch's generated full
+        pages into the prefix cache at completion and page-aligned decode
+        boundaries."""
         free = self.free_slots
         if not free:
             return None
@@ -261,7 +265,10 @@ class SimEngine:
         blocks = self.allocator.fork(prefix_blocks)
         h = BranchHandle(branch_id=self._next_branch_id,
                          request_id=request_id, slot=slot, blocks=blocks,
-                         tokens=[tk.STEP], prompt_len=prompt_len)
+                         tokens=[tk.STEP], prompt_len=prompt_len,
+                         prompt_tokens=(list(prompt_tokens)
+                                        if prompt_tokens is not None
+                                        else None))
         self._next_branch_id += 1
         self._specs[h.branch_id] = self._sample_spec()
         self.slots[slot] = h
@@ -279,7 +286,10 @@ class SimEngine:
         h = BranchHandle(branch_id=self._next_branch_id,
                          request_id=parent.request_id, slot=slot,
                          blocks=blocks, tokens=list(parent.tokens),
-                         prompt_len=parent.prompt_len)
+                         prompt_len=parent.prompt_len,
+                         prompt_tokens=(list(parent.prompt_tokens)
+                                        if parent.prompt_tokens is not None
+                                        else None))
         self._next_branch_id += 1
         # child inherits progress; resamples its remaining destiny
         self._specs[h.branch_id] = self._sample_spec()
@@ -335,6 +345,12 @@ class SimEngine:
                 tok = tk.STEP
             h.tokens.append(tok)
             out[slot] = tok
+            if (self.prefix_cache is not None
+                    and h.prompt_tokens is not None
+                    and h.blocks.length % self.cfg.page_size == 0):
+                # page-aligned decode boundary: publish generated full
+                # pages without waiting for completion (Engine mirror)
+                self._insert_generated(h)
         self.decode_steps_executed += 1
         return out
 
@@ -354,8 +370,23 @@ class SimEngine:
         self.slots[h.slot] = h
         return True
 
+    def _insert_generated(self, h: BranchHandle) -> None:
+        """Mirror of Engine._insert_generated: key the branch's generated
+        full pages into the prefix cache by prompt + generated tokens (the
+        trailing partial page keeps private CoW semantics)."""
+        if self.prefix_cache is None or h.prompt_tokens is None:
+            return
+        written = h.blocks.length - h.prompt_len
+        if written <= 0:
+            return
+        key = list(h.prompt_tokens) + h.tokens[:written]
+        self.prefix_cache.insert(key, h.blocks.pages)
+
     def free_branch(self, h: BranchHandle):
-        """Eagerly release a terminated branch's pages and its slot."""
+        """Eagerly release a terminated branch's pages and its slot
+        (inserting its generated full pages into the prefix cache first,
+        so they park warm on the LRU instead of freeing)."""
+        self._insert_generated(h)
         self.allocator.release(h.blocks)
         if h.slot >= 0:
             self.slots[h.slot] = None

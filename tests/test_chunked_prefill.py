@@ -678,3 +678,184 @@ def test_bucket_overflow_raises():
     # misconfiguration is rejected at construction, before any admission
     with pytest.raises(ValueError, match="must cover a full"):
         _engine(cfg, prefill_buckets=(2, 4))        # top < prefill_chunk=8
+
+
+# --------------------------------------- tree decode + generated-prefix cache
+
+
+def _branch_state(eng, handles):
+    """(tokens, page lists, K/V contents, SSM rows) of every live branch."""
+    out = []
+    for h in handles:
+        kv = (_gather_prefix(eng, h.blocks, h.blocks.length)
+              if eng.model.cfg.uses_attention else None)
+        ssm = None
+        if eng.model.cfg.uses_ssm:
+            ssm = (np.asarray(eng.state["conv"][:, h.slot]),
+                   np.asarray(eng.state["ssd"][:, h.slot]))
+        out.append((list(h.tokens), list(h.blocks.pages), kv, ssm))
+    return out
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_tree_decode_kernel_bit_exact_on_vs_off(family):
+    """decode_kernel="tree" must be bit-exact with the per-branch paged
+    path under a forking workload — same sampled tokens, same page lists,
+    same K/V page contents, same SSM rows. (For the pure-SSM family the
+    tree map is empty and the config must degrade to a no-op.)"""
+    cfg = tiny_config(**FAMILIES[family])
+    prompt = [2, 5, 9, 13, 7, 3, 11]
+
+    def run(kernel):
+        _, _, eng = _engine(cfg, temperature=0.8, seed=3,
+                            decode_kernel=kernel)
+        blocks, lg, ssm = eng.prefill(prompt)
+        h = eng.spawn_branch(0, blocks, lg, ssm, len(prompt),
+                             prompt_tokens=prompt)
+        for _ in range(2):
+            eng.decode_step()
+        c1 = eng.fork_branch(h)          # mid-page fork
+        for _ in range(2):
+            eng.decode_step()
+        c2 = eng.fork_branch(c1)
+        assert c1 is not None and c2 is not None
+        # the fork group is real: siblings share their leading page
+        assert h.blocks.pages[0] == c1.blocks.pages[0] == c2.blocks.pages[0]
+        for _ in range(6):
+            eng.decode_step()
+        state = _branch_state(eng, [h, c1, c2])
+        for b in (h, c1, c2):
+            eng.free_branch(b)
+        eng.release_prefix(blocks)
+        assert eng.allocator.used_pages == 0
+        return state
+
+    for (tok_p, pg_p, kv_p, ssm_p), (tok_t, pg_t, kv_t, ssm_t) in zip(
+            run("paged"), run("tree")):
+        assert tok_p == tok_t
+        assert pg_p == pg_t
+        if kv_p is not None:
+            np.testing.assert_array_equal(kv_p[0], kv_t[0])
+            np.testing.assert_array_equal(kv_p[1], kv_t[1])
+        if ssm_p is not None:
+            np.testing.assert_array_equal(ssm_p[0], ssm_t[0])
+            np.testing.assert_array_equal(ssm_p[1], ssm_t[1])
+
+
+def test_tree_decode_requires_fused_mixed_step():
+    cfg = tiny_config()
+    with pytest.raises(ValueError, match="decode_kernel='tree'"):
+        _engine(cfg, decode_kernel="tree", mixed_step_kernel="decode")
+    with pytest.raises(AssertionError):
+        _engine(cfg, decode_kernel="cascade")
+
+
+def test_generated_prefix_resample_admits_warm():
+    """Resample-after-completion: a finished branch inserts its generated
+    full pages keyed by prompt + generated tokens; re-admitting that
+    trajectory (plus a fresh tail) serves the WHOLE generated prefix from
+    cache — cached_tokens past the prompt, the very same page ids
+    resurrected off the LRU, and zero K/V writes for the shared tokens
+    (the chunk lane starts at the cached boundary)."""
+    cfg = tiny_config()
+    _, _, eng = _engine(cfg, temperature=0.0, prefix_cache=True)
+    prompt = [2, 5, 9, 13, 7, 3, 11, 4]          # 2 full pages (ps=4)
+    blocks, lg, ssm = eng.prefill(prompt)
+    h = eng.spawn_branch(0, blocks, lg, ssm, len(prompt),
+                         prompt_tokens=prompt)
+    for _ in range(10):
+        eng.decode_step()
+    gen = list(h.tokens)
+    written = h.blocks.length - len(prompt)      # last sample not written
+    assert written == len(gen) - 1
+    branch_pages = list(h.blocks.pages)
+    eng.free_branch(h)                           # inserts prompt+generated
+    eng.release_prefix(blocks)
+    assert eng.allocator.used_pages == 0
+    stats = eng.prefix_cache.stats()
+    assert stats["tracked_pages"] * eng.cfg.page_size \
+        >= (len(prompt) + written) // eng.cfg.page_size * eng.cfg.page_size
+
+    resample = prompt + gen[:written] + [95]     # warm resample + new tail
+    probe = eng.match_cached_tokens(resample)
+    assert probe > len(prompt), "generated prefix not probeable"
+    res_before = stats["resurrections"]
+    st = eng.begin_prefill(resample)
+    # the cached span covers the generated prefix, page-aligned and
+    # capped so the last token recomputes
+    cap = (len(resample) - 1) // eng.cfg.page_size * eng.cfg.page_size
+    assert st.cached_tokens == cap > len(prompt)
+    assert st.next_pos == st.cached_tokens       # 0 K/V bytes for the span
+    n_cached = st.cached_tokens // eng.cfg.page_size
+    # identical page ids: resurrected K/V, never recomputed or rewritten
+    assert st.blocks.pages[:n_cached] == branch_pages[:n_cached]
+    assert eng.prefix_cache.stats()["resurrections"] - res_before \
+        == n_cached
+    while not st.done:
+        eng.decode_step()
+    b2, lg2, _ = eng.finish_prefill(st)
+
+    # bit-exactness: a cold engine prefilling the same resample prompt
+    _, _, cold = _engine(cfg, temperature=0.0, prefix_cache=False)
+    bc, lgc, _ = cold.prefill(resample)
+    np.testing.assert_array_equal(np.asarray(lg2), np.asarray(lgc))
+    k2, v2 = _gather_prefix(eng, b2, len(resample))
+    kc, vc = _gather_prefix(cold, bc, len(resample))
+    np.testing.assert_allclose(k2, kc, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(v2, vc, rtol=1e-4, atol=1e-5)
+    eng.release_prefix(b2)
+    cold.release_prefix(bc)
+    eng.allocator.check_invariants()
+
+
+def test_generated_prefix_ssm_snapshot_gate():
+    """hybrid generated-prefix reuse is gated on boundary SSM snapshots:
+    decode-time insertion snapshots (conv, ssd) at every page-aligned
+    boundary, so a warm resample seeds the recurrence from the deepest
+    generated boundary — and stripping that snapshot (white-box) truncates
+    the match to the next-shallower seedable boundary, never serving
+    attention K/V the recurrence cannot resume behind."""
+    cfg = tiny_config(**FAMILIES["hybrid"])
+    _, _, eng = _engine(cfg, temperature=0.0, prefix_cache=True)
+    prompt = [2, 5, 9, 13, 7, 3, 11, 4]          # 2 pages, chunk boundary
+    blocks, lg, ssm = eng.prefill(prompt)
+    h = eng.spawn_branch(0, blocks, lg, ssm, len(prompt),
+                         prompt_tokens=prompt)
+    for _ in range(10):
+        eng.decode_step()
+    gen = list(h.tokens)
+    written = h.blocks.length - len(prompt)
+    eng.free_branch(h)
+    eng.release_prefix(blocks)
+
+    resample = prompt + gen[:written] + [95]
+    cache = eng.prefix_cache
+    m_full = eng.match_cached_tokens(resample)
+    assert m_full > len(prompt), "generated boundary snapshot not seedable"
+    # white-box: strip the deepest snapshot-bearing node; the gate must
+    # retreat to the next boundary that can still seed (conv, ssd)
+    seeded = [n for n in cache._by_page.values() if n.ssm_state is not None]
+    deepest = max(seeded, key=lambda n: n.depth)
+    assert deepest.depth * eng.cfg.page_size == m_full
+    deepest.ssm_state = None
+    m_stripped = eng.match_cached_tokens(resample)
+    assert m_stripped < m_full
+    remaining = [n.depth for n in cache._by_page.values()
+                 if n.ssm_state is not None
+                 and n.depth * eng.cfg.page_size <= m_full]
+    assert m_stripped == max(remaining, default=0) * eng.cfg.page_size
+    # a real admission under the stripped cache still matches a cold
+    # prefill (decode-time snapshots carry the step recurrence's fp32
+    # rounding, so this is allclose, not array_equal)
+    st = eng.begin_prefill(resample)
+    assert st.cached_tokens == m_stripped
+    while not st.done:
+        eng.decode_step()
+    b2, lg2, _ = eng.finish_prefill(st)
+    _, _, cold = _engine(cfg, temperature=0.0, prefix_cache=False)
+    bc, lgc, _ = cold.prefill(resample)
+    np.testing.assert_allclose(np.asarray(lg2), np.asarray(lgc),
+                               rtol=1e-4, atol=1e-4)
+    eng.release_prefix(b2)
+    cold.release_prefix(bc)
+    eng.allocator.check_invariants()

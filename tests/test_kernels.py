@@ -340,3 +340,252 @@ def test_mixed_step_bytes_fused_strictly_fewer():
         assert fus < dec, (chunk, ctx, fus, dec)
         # one 128-row q block streams the context once, not 128 times
         assert dec > 50 * fus, (chunk, ctx, fus, dec)
+
+
+# ---------------------------------------------------------------------------
+# tree/cascade decode attention (shared-ancestor pass + per-branch suffix
+# pass, merged by online-softmax partials). Differential backbone: the tree
+# kernel, the tree jnp ref, the per-branch decode kernel and the per-branch
+# decode ref over the SAME reconstructed full tables must all agree. All
+# lengths are >= 1: the engine always attends at least the current token,
+# and at length 0 the refs' uniform-softmax convention diverges from the
+# kernels' exact-zero rows by design.
+
+
+def _tree_topology(rng, groups, singles, *, qh, kvh, hd, ps):
+    """Build a fork topology and every table the four paths consume.
+
+    ``groups``: list of ``(shared_pages, [branch_len_tokens, ...])`` fork
+    groups — each branch holds the group's shared ancestor pages plus a
+    private suffix covering its remaining tokens. ``singles``: lengths of
+    ungrouped rows (full table stays in ``branch_bt``). Page ids are
+    distinct across the whole topology; tables are sentinel-padded to a
+    common static width with one guaranteed pad column.
+    """
+    next_page = 0
+
+    def take(n):
+        nonlocal next_page
+        ids = list(range(next_page, next_page + n))
+        next_page += n
+        return ids
+
+    full_tables, lengths, group_of, shared_of = [], [], [], []
+    for gi, (ns, br_lens) in enumerate(groups):
+        sp = take(ns)
+        shared_of.append(sp)
+        for tokens in br_lens:
+            suffix = max(tokens - ns * ps, 0)
+            sfx = take(-(-suffix // ps)) if suffix else []
+            full_tables.append(sp + sfx)
+            lengths.append(tokens)
+            group_of.append(gi)
+    for tokens in singles:
+        full_tables.append(take(-(-tokens // ps)))
+        lengths.append(tokens)
+        group_of.append(None)
+
+    b = len(full_tables)
+    num_pages = next_page + 2            # two never-referenced live pages
+    pps = max(len(t) for t in full_tables) + 1   # >= 1 pad column
+    full_bt = np.full((b, pps), num_pages, np.int32)
+    shared_bt = np.full((b, pps), num_pages, np.int32)
+    shared_lens = np.zeros((b,), np.int32)
+    branch_bt = np.full((b, pps), num_pages, np.int32)
+    row_group = np.full((b,), b, np.int32)
+    for i, pages in enumerate(full_tables):
+        full_bt[i, :len(pages)] = pages
+        gi = group_of[i]
+        if gi is None:
+            branch_bt[i, :len(pages)] = pages
+            continue
+        row_group[i] = gi
+        sp = shared_of[gi]
+        shared_bt[gi, :len(sp)] = sp
+        shared_lens[gi] = len(sp) * ps
+        sfx = pages[len(sp):]
+        branch_bt[i, :len(sfx)] = sfx
+
+    q = jnp.asarray(rng.normal(size=(b, qh, hd)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(kvh, num_pages, ps, hd)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(kvh, num_pages, ps, hd)), jnp.float32)
+    return dict(q=q, kp=kp, vp=vp, row_group=jnp.asarray(row_group),
+                shared_bt=jnp.asarray(shared_bt),
+                shared_lens=jnp.asarray(shared_lens),
+                branch_bt=jnp.asarray(branch_bt),
+                full_bt=jnp.asarray(full_bt),
+                lengths=jnp.asarray(lengths, jnp.int32),
+                full_tables=full_tables, group_of=group_of,
+                shared_of=shared_of, num_pages=num_pages, ps=ps)
+
+
+def _tree_all_paths(t):
+    """(tree kernel, tree ref, per-branch kernel, per-branch ref)."""
+    from repro.kernels.paged_attention.ops import paged_tree_attention
+    from repro.kernels.paged_attention.ref import paged_tree_attention_ref
+    tree_args = (t["q"], t["kp"], t["vp"], t["row_group"], t["shared_bt"],
+                 t["shared_lens"], t["branch_bt"], t["lengths"])
+    return (paged_tree_attention(*tree_args),
+            paged_tree_attention_ref(*tree_args),
+            paged_attention(t["q"], t["kp"], t["vp"], t["full_bt"],
+                            t["lengths"]),
+            paged_attention_decode_ref(t["q"], t["kp"], t["vp"],
+                                       t["full_bt"], t["lengths"]))
+
+
+def _assert_tree_differential(t, atol=2e-4):
+    ker, tref, pb_ker, pb_ref = _tree_all_paths(t)
+    # the tree ref reconstructs the exact full tables: bit-identical to
+    # the per-branch ref, not merely close
+    np.testing.assert_array_equal(np.asarray(tref), np.asarray(pb_ref))
+    np.testing.assert_allclose(ker, pb_ref, atol=atol)
+    np.testing.assert_allclose(ker, pb_ker, atol=atol)
+
+
+@pytest.mark.parametrize("qh,kvh", [(4, 2), (4, 1), (4, 4)])  # GQA/MQA/MHA
+def test_tree_decode_matches_per_branch(rng, qh, kvh):
+    """Mixed topology: a 3-way fork, a 2-way fork and a singleton, ragged
+    suffix lengths, under every head regime."""
+    t = _tree_topology(
+        rng,
+        groups=[(2, [2 * 4 + 5, 2 * 4 + 1, 2 * 4 + 9]),
+                (1, [4 + 3, 4 + 4])],
+        singles=[7],
+        qh=qh, kvh=kvh, hd=32, ps=4)
+    _assert_tree_differential(t)
+
+
+def test_tree_decode_ragged_depths(rng):
+    """Shared depths 1..3 pages across groups; one branch's context ends
+    INSIDE its group's shared span (its suffix pass has zero pages and
+    the shared pass must mask tokens past its own length)."""
+    t = _tree_topology(
+        rng,
+        groups=[(3, [3 * 4 + 2, 2 * 4 + 1]),   # second row ends mid-span
+                (2, [2 * 4 + 4, 2 * 4 + 7]),
+                (1, [4 + 1, 4 + 2, 4 + 3])],
+        singles=[],
+        qh=4, kvh=2, hd=32, ps=4)
+    _assert_tree_differential(t)
+
+
+def test_tree_decode_fork_alignment(rng):
+    """Boundary fork vs mid-page fork. A fork at a page boundary keeps
+    the full prefix shared; a mid-page fork copies the straddling page
+    into each branch (CoW), so only the floor-to-page prefix is shared
+    and the straddled page rides in each suffix table."""
+    # boundary: 2 shared pages, suffixes start exactly at token 8
+    t = _tree_topology(rng, groups=[(2, [8 + 1, 8 + 2])], singles=[],
+                       qh=4, kvh=2, hd=32, ps=4)
+    _assert_tree_differential(t)
+    # mid-page: fork at token 6 -> 1 shared page, the half-filled page is
+    # private to each branch (distinct page ids, same logical prefix)
+    t = _tree_topology(rng, groups=[(1, [4 + 6, 4 + 8])], singles=[],
+                       qh=4, kvh=2, hd=32, ps=4)
+    _assert_tree_differential(t)
+
+
+def test_tree_decode_single_branch_degenerate(rng):
+    """A 1-member fork group and a fully ungrouped batch must both
+    reproduce the plain decode kernel bit-for-bit — the tree machinery
+    degenerates to per-branch streaming."""
+    t = _tree_topology(rng, groups=[(2, [2 * 4 + 3])], singles=[9, 5],
+                       qh=4, kvh=2, hd=32, ps=4)
+    ker, _tref, pb_ker, _pb_ref = _tree_all_paths(t)
+    np.testing.assert_allclose(ker, pb_ker, atol=1e-6)
+    # all-ungrouped: sentinel row_group, zero shared spans
+    t2 = _tree_topology(rng, groups=[], singles=[13, 6, 2],
+                        qh=4, kvh=2, hd=32, ps=4)
+    ker2, _t2ref, pb_ker2, _ = _tree_all_paths(t2)
+    np.testing.assert_array_equal(np.asarray(ker2), np.asarray(pb_ker2))
+
+
+def test_tree_decode_poisoned_unshared_page_invariance(rng):
+    """Pages a row does not own — other branches' suffixes and
+    never-referenced pages — must not leak into its output through the
+    shared pass's parked iterations or sentinel clamps. Poisoning branch
+    B's suffix pages leaves every OTHER row bitwise unchanged."""
+    t = _tree_topology(
+        rng,
+        groups=[(2, [2 * 4 + 5, 2 * 4 + 6, 2 * 4 + 2])],
+        singles=[7],
+        qh=4, kvh=2, hd=32, ps=4)
+    from repro.kernels.paged_attention.ops import paged_tree_attention
+    args = (t["row_group"], t["shared_bt"], t["shared_lens"],
+            t["branch_bt"], t["lengths"])
+    base = np.asarray(paged_tree_attention(t["q"], t["kp"], t["vp"], *args))
+    victim = 1                           # poison this branch's suffix
+    own = set(t["full_tables"][victim]) - set(t["shared_of"][0])
+    # plus the two never-referenced live pages and the sentinel clamp
+    # target (num_pages - 1 is never-referenced here by construction)
+    poison = own | {t["num_pages"] - 2, t["num_pages"] - 1}
+    assert not any(p in poison
+                   for i, pages in enumerate(t["full_tables"])
+                   if i != victim for p in pages)
+    mask = np.zeros((t["num_pages"],), bool)
+    mask[sorted(poison)] = True
+    sel = jnp.asarray(mask)[None, :, None, None]
+    kp2 = jnp.where(sel, 1e4, t["kp"])
+    vp2 = jnp.where(sel, 1e4, t["vp"])
+    pert = np.asarray(paged_tree_attention(t["q"], kp2, vp2, *args))
+    rows = [i for i in range(base.shape[0]) if i != victim]
+    np.testing.assert_array_equal(base[rows], pert[rows])
+
+
+def test_tree_decode_bf16_pages(rng):
+    """bf16 K/V pages through both passes (the engine's serving dtype)."""
+    t = _tree_topology(rng, groups=[(2, [2 * 4 + 3, 2 * 4 + 6])],
+                       singles=[5], qh=4, kvh=2, hd=32, ps=4)
+    from repro.kernels.paged_attention.ops import paged_tree_attention
+    kp = t["kp"].astype(jnp.bfloat16)
+    vp = t["vp"].astype(jnp.bfloat16)
+    out = paged_tree_attention(t["q"].astype(jnp.bfloat16), kp, vp,
+                               t["row_group"], t["shared_bt"],
+                               t["shared_lens"], t["branch_bt"],
+                               t["lengths"])
+    ref = paged_attention_decode_ref(t["q"], t["kp"], t["vp"],
+                                     t["full_bt"], t["lengths"])
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref), atol=5e-2)
+
+
+def test_tree_decode_grid_lattice_bounds():
+    """STEP007-style containment proof over the tree grids' full grid ×
+    scalar-case lattice, plus the negative control: stripping the
+    sentinel clamp from the shared pass's KV map must be caught on the
+    all-sentinel case."""
+    import dataclasses
+    import sys
+    from pathlib import Path
+    repo = Path(__file__).resolve().parents[1]
+    if str(repo) not in sys.path:
+        sys.path.insert(0, str(repo))
+    from tools.stepcheck import bounds
+    from tools.stepcheck.bounds import verify_kernel_grid
+    from repro.kernels import paged_tree_branch_grid, paged_tree_shared_grid
+
+    num_pages, ps, pps = 16, 4, 6
+    for kvh in (1, 2, 4):
+        kg = paged_tree_shared_grid(3, 4, 8, kvh, num_pages, ps, 3, pps)
+        cases = bounds.tree_shared_cases(num_pages, ps, pps, 3)
+        assert verify_kernel_grid(kg, cases) == []
+        bg = paged_tree_branch_grid(3, 4, 8, kvh, num_pages, ps, pps)
+        assert verify_kernel_grid(
+            bg, bounds.tree_branch_cases(num_pages, ps, pps, 3)) == []
+
+    kg = paged_tree_shared_grid(3, 4, 8, 2, num_pages, ps, 3, pps)
+    broken = dataclasses.replace(kg, in_mappings=tuple(
+        dataclasses.replace(
+            m, index_map=lambda h, g, ki, sbt, sl: (h, sbt[g, ki], 0, 0))
+        if m.name in ("k_pages", "v_pages") else m
+        for m in kg.in_mappings))
+    caught = verify_kernel_grid(
+        broken, bounds.tree_shared_cases(num_pages, ps, pps, 3))
+    assert {f.symbol for f in caught} == {"k_pages", "v_pages"}
+    # the sentinel chase specifically: only the num_pages-1 clamp keeps
+    # an all-sentinel (no fork groups) step in bounds
+    sentinel = [c for c in bounds.tree_shared_cases(num_pages, ps, pps, 3)
+                if c.name == "all-sentinel"]
+    caught = verify_kernel_grid(broken, sentinel)
+    assert any(f.rule == "STEP007" and "all-sentinel" in f.message
+               for f in caught)

@@ -332,3 +332,195 @@ def test_prefix_cache_acquire_rolls_back_on_mid_loop_failure(monkeypatch):
     for pid in pages:
         assert alloc.refcount(pid) == 1
     alloc.check_invariants()
+
+
+# ---------------------------------------------------- generated-prefix tree
+# (PR: decode-side insertion — branches insert prompt + generated tokens on
+# completion and page boundaries, forks share parked ancestors via revive)
+
+
+def test_fork_parked_prefix_tail_page_revives():
+    """Regression: forking off a held BranchBlocks copy whose pages were
+    released to the cache's LRU (refcount 0, K/V resident) used to
+    KeyError inside ``incref`` — ``fork`` now asks the cache to revive
+    parked pages so the child holds the single new reference."""
+    alloc = PageAllocator(8, 2)
+    cache = PrefixCache(alloc)
+    prompt = [1, 2, 3, 4]                       # 2 full pages
+    b = _admit_through_cache(alloc, cache, prompt)
+    held = b.copy()                             # e.g. a queued request's
+    alloc.release(b)                            # prefix_blocks snapshot
+    assert cache.evictable == 2
+    assert all(alloc.refcount(p) == 0 for p in held.pages)
+    child = alloc.fork(held)                    # pre-fix: KeyError
+    assert child.pages == held.pages
+    assert all(alloc.refcount(p) == 1 for p in child.pages)
+    assert cache.evictable == 0                 # revived off the LRU
+    alloc.check_invariants()
+    alloc.release(child)
+    assert cache.evictable == 2                 # parked again, not freed
+    alloc.check_invariants()
+    cache.drop()
+    assert alloc.used_pages == 0
+
+
+def test_fork_mixed_live_and_parked_prefix_pages():
+    """A fork whose parent holds both live (still-referenced) and parked
+    (refcount-0 LRU) pages takes exactly one new reference per page
+    through the matching path — incref for live, revive for parked."""
+    alloc = PageAllocator(16, 2)
+    cache = PrefixCache(alloc)
+    prompt = [1, 2, 3, 4, 5, 6]
+    b = _admit_through_cache(alloc, cache, prompt)
+    sibling = alloc.fork(b)                     # keeps every page live
+    held = b.copy()
+    alloc.release(b)                            # refcounts drop to 1
+    assert all(alloc.refcount(p) == 1 for p in held.pages)
+    assert cache.evictable == 0                 # nothing parked yet
+    child = alloc.fork(held)                    # plain incref path
+    assert all(alloc.refcount(p) == 2 for p in child.pages)
+    alloc.release(sibling)
+    alloc.release(child)
+    assert cache.evictable == 3
+    # now every tracked page is parked: fork revives all of them
+    child2 = alloc.fork(held)
+    assert all(alloc.refcount(p) == 1 for p in child2.pages)
+    assert cache.evictable == 0
+    alloc.check_invariants()
+    alloc.release(child2)
+    cache.drop()
+    assert alloc.used_pages == 0
+
+
+def test_generated_prefix_collisions_degrade_to_misses():
+    """Two branches share a prompt but generate different tokens under a
+    constant (always-colliding) hash: acquiring one branch's full
+    prompt+generated key must never return the other's generated pages —
+    collisions degrade to shorter matches, never aliased K/V."""
+    alloc = PageAllocator(32, 2)
+    cache = PrefixCache(alloc, hash_fn=lambda p, t: 7)
+    prompt = [1, 2]                             # one full page
+    a = _admit_through_cache(alloc, cache, prompt)
+    bb = alloc.fork(a)
+    gen_a, gen_b = [5, 6, 7, 8], [5, 9, 9, 9]
+    for blocks, gen in ((a, gen_a), (bb, gen_b)):
+        for _t in gen:
+            alloc.append_token(blocks)
+    # completion-time insertion of prompt + generated (full pages only)
+    cache.insert(prompt + gen_a, a.pages)
+    cache.insert(prompt + gen_b, bb.pages)
+    pages_a, _ = cache.acquire(prompt + gen_a + [0])
+    assert pages_a == a.pages[:3] and pages_a[1:] != bb.pages[1:3]
+    for pid in reversed(pages_a):
+        alloc.decref(pid)
+    # a colliding-but-different generated suffix stops at the prompt page
+    pages_x, _ = cache.acquire(prompt + [5, 4, 4, 4, 0])
+    assert pages_x == a.pages[:1]
+    for pid in reversed(pages_x):
+        alloc.decref(pid)
+    alloc.release(a)
+    alloc.release(bb)
+    alloc.check_invariants()
+    cache.drop()
+    assert alloc.used_pages == 0
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 4),                       # page_size
+       st.integers(8, 48),                      # num_pages
+       st.integers(0, 2),                       # hash degradation level
+       st.lists(st.integers(0, 100_000), min_size=1, max_size=80))
+def test_generated_prefix_tree_interleavings(page_size, num_pages, degrade,
+                                             ops):
+    """The full decode-side lifecycle the tree-decoding engine runs:
+    admit / fork / decode-with-boundary-insert / complete-with-insert /
+    evict / bare-acquire-resurrect, interleaved at random and under
+    colliding hashes. Each branch's token list mirrors its block length
+    (prompt + generated), so insertions register generated pages exactly
+    as ``Engine._insert_generated`` does. The live + free + LRU partition
+    and refcount conservation must hold at every step, and draining
+    branches plus the LRU returns the pool to empty."""
+    alloc = PageAllocator(num_pages, page_size)
+    cache = PrefixCache(alloc, hash_fn=_HASH_FNS[degrade])
+    live = []                                   # (blocks, tokens) pairs
+    for op in ops:
+        action = op % 7
+        pick = (op // 7) % max(len(live), 1)
+        size = op % (4 * page_size) + 1
+        prompt = [(op // 24) % 3] * size
+        try:
+            if action == 0:                     # admit via the cache
+                b, _ = cache.admit(prompt)
+                live.append((b, list(prompt)))
+            elif action == 1 and live:          # branch fork
+                b, tokens = live[pick]
+                live.append((alloc.fork(b), list(tokens)))
+            elif action == 2 and live:          # decode one token ...
+                b, tokens = live[pick]
+                alloc.append_token(b)
+                tokens.append(op % 5)
+                if b.length % page_size == 0:   # ... boundary insert
+                    cache.insert(tokens, b.pages)
+            elif action == 3 and live:          # complete: insert + free
+                b, tokens = live.pop(pick)
+                cache.insert(tokens, b.pages)
+                alloc.release(b)
+            elif action == 4 and cache.evictable:   # memory pressure
+                cache.evict_one()
+            elif action == 5 and live:          # generated-prefix lookup
+                _b, tokens = live[pick]         # + drop (resurrect path)
+                pages, _ = cache.acquire(tokens + [9])
+                for pid in reversed(pages):
+                    alloc.decref(pid)
+            elif action == 6 and live:          # chunked growth
+                b, tokens = live[pick]
+                alloc.extend(b, b.length + size)
+                tokens.extend([op % 5] * size)
+        except OutOfPagesError:
+            pass                                # pool pressure is legal
+        for b, tokens in live:
+            assert len(tokens) == b.length      # model stays in lockstep
+        alloc.check_invariants()                # includes cache invariants
+        _refcount_conservation(alloc, [b for b, _t in live])
+    for b, _tokens in live:
+        alloc.release(b)
+    alloc.check_invariants()
+    assert alloc.used_pages == 0, "pages still live after releasing all"
+    cache.drop()
+    alloc.check_invariants()
+    assert cache.evictable == 0 and len(alloc._free) == num_pages
+
+
+def test_tree_decode_map_from_fork_topology():
+    """Unit coverage of ``tree_decode_map``: forked siblings sharing
+    leading page ids form a group with the longest-common-page-prefix as
+    its shared span; singletons, empty slots and page-less rows stay
+    ungrouped with their full table in ``branch_bt``."""
+    import numpy as np
+    from repro.kv import BranchBlocks, tree_decode_map
+    ps, num_pages, ppb = 4, 32, 6
+    sib_a = BranchBlocks(pages=[3, 7, 10], num_shared=2, length=2 * ps + 1)
+    sib_b = BranchBlocks(pages=[3, 7, 11], num_shared=2, length=2 * ps + 2)
+    sib_c = BranchBlocks(pages=[3, 7, 11, 12], num_shared=2,
+                         length=3 * ps + 1)
+    single = BranchBlocks(pages=[20, 21], num_shared=0, length=ps + 2)
+    blocks = [sib_a, None, sib_b, single, sib_c]
+    row_group, shared_bt, shared_lens, branch_bt = tree_decode_map(
+        blocks, pages_per_branch=ppb, num_pages=num_pages, page_size=ps)
+    b = len(blocks)
+    gid = row_group[0]
+    assert gid < b and row_group[2] == gid and row_group[4] == gid
+    assert row_group[1] == b and row_group[3] == b      # ungrouped
+    # lcp of [3,7,10] / [3,7,11] / [3,7,11,12] is [3,7] -> span 2 pages
+    assert shared_lens[gid] == 2 * ps
+    assert list(shared_bt[gid][:2]) == [3, 7]
+    assert all(shared_bt[gid][2:] == num_pages)
+    assert list(branch_bt[0][:1]) == [10]
+    assert list(branch_bt[2][:1]) == [11]
+    assert list(branch_bt[4][:2]) == [11, 12]
+    assert list(branch_bt[3][:2]) == [20, 21]           # full table
+    assert all(branch_bt[1] == num_pages)               # empty slot
+    assert shared_lens[row_group[3]] == 0 if row_group[3] < b else True
+    # sibling pair 2/4 share THREE leading pages ([3,7,11]) but the
+    # group's span is the lcp over all members — never a partial subset
+    np.testing.assert_array_equal(row_group[[0, 2, 4]], gid)

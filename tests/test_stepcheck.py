@@ -126,12 +126,13 @@ def test_lattice_covers_all_kernels_and_head_regimes():
     pairs = bounds.engine_lattice()
     assert sorted({kg.kernel for kg, _ in pairs}) == [
         "flash_prefill", "paged_attention", "paged_flash_prefill",
-        "ssd_scan"]
+        "paged_tree_branch", "paged_tree_shared", "ssd_scan"]
     # MQA / GQA / MHA over 4 query heads for the attention kernels
-    kv_counts = {kg.in_mappings[1].array_shape[0]
-                 for kg, _ in pairs if kg.kernel == "paged_attention"}
-    assert kv_counts == {1, 2, 4}
-    assert len(pairs) == 16
+    for kernel in ("paged_attention", "paged_tree_branch"):
+        kv_counts = {kg.in_mappings[1].array_shape[0]
+                     for kg, _ in pairs if kg.kernel == kernel}
+        assert kv_counts == {1, 2, 4}, kernel
+    assert len(pairs) == 22
     for kg, cases in pairs:
         assert grid_exhaustive_points(kg) > 0 and cases
 

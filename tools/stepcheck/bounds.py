@@ -146,13 +146,51 @@ def paged_attention_cases(num_pages: int, page_size: int,
     return [ScalarCase("ragged", (tables, lengths))]
 
 
+def tree_shared_cases(num_pages: int, page_size: int, pages_per_seq: int,
+                      num_groups: int) -> List[ScalarCase]:
+    """(shared_bt, shared_lens) lattice for the tree shared-ancestor
+    pass: live groups with ragged shared depths, a zero-span group, and
+    a fully sentinel (no fork groups this step) table."""
+    live = np.stack([
+        _bt(range(3), pages_per_seq, num_pages),       # 3 shared pages
+        _bt([9], pages_per_seq, num_pages),            # 1 shared page
+        _bt([], pages_per_seq, num_pages),             # unused group
+    ][:num_groups])
+    lens = np.asarray([3 * page_size, page_size, 0][:num_groups],
+                      np.int32)
+    empty = np.stack([_bt([], pages_per_seq, num_pages)] * num_groups)
+    return [
+        ScalarCase("ragged-depths", (live, lens)),
+        # all-sentinel, zero spans: every iteration parks on entry 0 and
+        # clamps the sentinel — the degenerate no-groups step
+        ScalarCase("all-sentinel", (empty,
+                                    np.zeros((num_groups,), np.int32))),
+    ]
+
+
+def tree_branch_cases(num_pages: int, page_size: int, pages_per_seq: int,
+                      batch: int) -> List[ScalarCase]:
+    """(branch_bt, branch_lens) lattice for the tree suffix pass:
+    ragged suffixes incl. a row fully covered by the shared pass (span
+    0, all-sentinel suffix table)."""
+    tables = np.stack([
+        _bt(range(pages_per_seq), pages_per_seq, num_pages),   # full
+        _bt([11, 6], pages_per_seq, num_pages),                # short
+        _bt([], pages_per_seq, num_pages),                     # covered
+    ][:batch])
+    lens = np.asarray(
+        [pages_per_seq * page_size, page_size + 2, 0][:batch], np.int32)
+    return [ScalarCase("ragged", (tables, lens))]
+
+
 def engine_lattice() -> List[Tuple[object, List[ScalarCase]]]:
     """The (KernelGrid, scalar cases) pairs ``python -m tools.stepcheck``
-    proves in-bounds: all four kernels, swept over GQA (kv < heads), MQA
+    proves in-bounds: all six kernels, swept over GQA (kv < heads), MQA
     (kv = 1) and MHA (kv = heads) head counts plus block-size variations
     that exercise internal padding."""
     from repro.kernels import (flash_prefill_grid, paged_attention_grid,
-                               paged_prefill_grid, ssd_scan_grid)
+                               paged_prefill_grid, paged_tree_branch_grid,
+                               paged_tree_shared_grid, ssd_scan_grid)
 
     out: List[Tuple[object, List[ScalarCase]]] = []
     num_pages, page_size, pps = 16, 4, 6
@@ -166,6 +204,12 @@ def engine_lattice() -> List[Tuple[object, List[ScalarCase]]]:
                                   page_size, pps)
         out.append((kg, paged_attention_cases(num_pages, page_size,
                                               pps, 3)))
+        kg = paged_tree_shared_grid(3, 4, 8, kv_heads, num_pages,
+                                    page_size, 3, pps)
+        out.append((kg, tree_shared_cases(num_pages, page_size, pps, 3)))
+        kg = paged_tree_branch_grid(3, 4, 8, kv_heads, num_pages,
+                                    page_size, pps)
+        out.append((kg, tree_branch_cases(num_pages, page_size, pps, 3)))
         for s in (12, 16):              # 12 exercises internal padding
             kg = flash_prefill_grid(2, s, 4, 8, kv_heads,
                                     block_q=8, block_k=8)

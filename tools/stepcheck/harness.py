@@ -47,6 +47,7 @@ class EngineTarget:
     cache: bool
     engine: Engine
     variants: List[StepVariant]
+    tree: bool = False
 
 
 def model_config(family: str) -> ModelConfig:
@@ -56,17 +57,23 @@ def model_config(family: str) -> ModelConfig:
                        **FAMILY_CONFIGS[family])
 
 
-def build_engine(family: str, cache: bool = False) -> Engine:
+def build_engine(family: str, cache: bool = False,
+                 tree: bool = False) -> Engine:
     """An engine with abstract (eval_shape'd) params — no weights exist."""
     model = Model(model_config(family), dtype=jnp.bfloat16)
     params = jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
-    cfg = EngineConfig(prefix_cache=cache, **ENGINE_KW)
+    cfg = EngineConfig(prefix_cache=cache,
+                       decode_kernel="tree" if tree else "paged",
+                       **ENGINE_KW)
     return Engine(model, params, cfg)
 
 
 def build_targets(include_cache: bool = True) -> List[EngineTarget]:
     """All engine targets, cache-off first (the jaxpr-rule set runs on
-    cache-off targets; cache-on twins only pin signature invariance)."""
+    cache-off targets; cache-on twins only pin signature invariance).
+    One tree-decode target per attention-bearing family traces the
+    ``decode_kernel="tree"`` step so the tree dispatch and its extra
+    argument group stay under the jaxpr rules."""
     out: List[EngineTarget] = []
     for cache in ([False, True] if include_cache else [False]):
         for family in FAMILY_CONFIGS:
@@ -75,6 +82,11 @@ def build_targets(include_cache: bool = True) -> List[EngineTarget]:
             out.append(EngineTarget(
                 name=f"engine[{family}{suffix}]", family=family,
                 cache=cache, engine=eng, variants=eng.step_variants()))
+    for family in ("dense", "hybrid"):   # "ssm" has no attention: tree
+        eng = build_engine(family, cache=False, tree=True)  # is a no-op
+        out.append(EngineTarget(
+            name=f"engine[{family}+tree]", family=family, cache=False,
+            engine=eng, variants=eng.step_variants(), tree=True))
     return out
 
 

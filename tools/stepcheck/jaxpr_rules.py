@@ -25,10 +25,11 @@ from .tracing import (float_width, is_float_dtype, iter_eqns, leaf_groups,
 #:     is a loud finding to review, not a silent extra dispatch).
 ALLOWED_SUB_JITS: Set[str] = {
     # repo kernel wrappers (src/repro/kernels/*/ops.py)
-    "paged_attention", "paged_flash_prefill", "flash_attention", "ssd",
+    "paged_attention", "paged_tree_attention", "paged_flash_prefill",
+    "flash_attention", "ssd",
     # jax internals observed in the traced step across all families
-    "_take", "_where", "_one_hot", "_pad", "floor_divide", "remainder",
-    "clip",
+    "_take", "take_along_axis", "_where", "_one_hot", "_pad",
+    "floor_divide", "remainder", "clip",
     "silu", "softplus", "gelu", "relu", "sigmoid", "cumsum", "tril",
     "sort", "_gumbel", "_uniform", "_threefry_split", "fold_in",
     "_softmax", "logsumexp", "top_k", "isnan", "nan_to_num",

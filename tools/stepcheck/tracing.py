@@ -94,7 +94,7 @@ def leaf_groups(engine, variant) -> List[Tuple[str, int]]:
     — used to map jaxpr invars back to step arguments."""
     names = ["params", "state", "tokens", "positions", "block_tables",
              "lengths", "rng", "chunk_state", "chunk_lens", "slot_valid",
-             "cow_src", "cow_dst"]
+             "cow_src", "cow_dst", "tree"]
     values = (engine.params, engine.state) + tuple(variant.args)
     assert len(names) == len(values), (len(names), len(values))
     return [(name, len(jax.tree_util.tree_leaves(value)))
