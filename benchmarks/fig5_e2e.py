@@ -200,6 +200,72 @@ def run_policies(quick: bool = False, seed: int = 0):
     return rows
 
 
+def run_chaos(quick: bool = False, seed: int = 0):
+    """Chaos benchmark (docs/robustness.md): goodput, survivor completion
+    rate and post-crash recovery time versus injected fault rate, on a
+    fixed burst workload. Each row's ``FaultPlan`` injects step
+    exceptions, OutOfPages storms and slow steps at ``rate`` (plus one
+    hard mid-run crash/restart for nonzero rates) and includes one
+    poisoned request that must end quarantined, never dropped. The
+    rate-0 row runs with NO injector — ``run_sim_experiment`` leaves the
+    engine unwrapped — so it is bit-exact with pre-chaos behavior
+    (pinned by tests/test_faults.py)."""
+    from repro.serving.faults import FaultPlan
+
+    w = SimWorkload(mean_len=100 if quick else 200, sigma_len=0.5,
+                    overthink_p=0.1, correct_p=0.55, prompt_len=256,
+                    prompt_tail=32)
+    nreq = 10 if quick else 20
+    times = poisson_burst_arrivals(nreq, burst_gap=30, burst_mean=4,
+                                   seed=seed + 7)
+    poison = tk.STEP  # never in a normal prompt; planted in one below
+    prompts = []
+    for i in range(nreq):
+        prompt = [tk.BOS] + [tk.digit(0)] * 222 + [tk.digit(i % 10)] * 32 \
+            + [tk.EQUALS]
+        prompts.append(prompt)
+    # one poisoned request (admission always rejects it under a plan with
+    # poison_token set): quarantine accounting must absorb it
+    prompts[nreq // 2] = list(prompts[nreq // 2])
+    prompts[nreq // 2][1] = poison
+    rows = []
+    for rate in (0.0, 0.05, 0.1, 0.2):
+        plan = None
+        if rate > 0:
+            plan = FaultPlan(seed=seed + 1, step_rate=rate,
+                             oop_rate=rate / 2, slow_rate=rate,
+                             crash_at=(150,), poison_token=poison)
+        ec = SimEngineConfig(max_slots=64, num_pages=500000,
+                             prefill_chunk=64, step_token_budget=256,
+                             prefix_cache=True)
+        m, acc = run_sim_experiment(
+            "sart", 4, num_requests=nreq, workload=w, engine_cfg=ec,
+            window=100, seed=seed, arrival_times=times, prompts=prompts,
+            fault_plan=plan)
+        f = m["faults"]
+        quarantined = f["quarantined_requests"]
+        survivors = nreq - quarantined
+        completed = m["completed_requests"]
+        # recovery time: first finish after the last engine restart
+        finishes = [r["finish"] for r in m["requests"]
+                    if r["finish"] is not None]
+        post = [t - f["last_restart_clock"] for t in finishes
+                if t >= f["last_restart_clock"] >= 0]
+        rows.append({
+            "fault_rate": rate,
+            "goodput": completed / max(1, m["clock"]),
+            "survivor_completion": completed / max(1, survivors),
+            "quarantined": quarantined,
+            "retries": f["retries"],
+            "restarts": f["engine_restarts"],
+            "recovered": f["recovered"],
+            "recovery_steps": min(post) if post else None,
+            "accuracy": acc,
+            "clock": m["clock"],
+        })
+    return rows
+
+
 def run(quick: bool = False, seed: int = 0):
     w = SimWorkload(mean_len=250 if quick else 2000, sigma_len=0.6,
                     overthink_p=0.12, correct_p=0.55)
@@ -300,6 +366,19 @@ def main(quick: bool = False):
     print(f"fig5_policy_edf_vs_fifo_attainment,"
           f"{edf['attainment']:.2f},fifo={fifo['attainment']:.2f},"
           f"strict={edf['attainment'] > fifo['attainment']}")
+    # chaos acceptance: goodput / survivor completion / recovery vs
+    # injected fault rate; the rate-0 row runs uninjected (bit-exact)
+    chaos = run_chaos(quick=quick)
+    for r in chaos:
+        rec = ("none" if r["recovery_steps"] is None
+               else f"{r['recovery_steps']}")
+        print(f"fig5_chaos_rate{r['fault_rate']:.2f},"
+              f"{r['goodput'] * 1000:.2f},"
+              f"survivor_completion={r['survivor_completion']:.2f};"
+              f"quarantined={r['quarantined']};retries={r['retries']};"
+              f"restarts={r['restarts']};recovered={r['recovered']};"
+              f"recovery_steps={rec};acc={r['accuracy']:.2f};"
+              f"clock={r['clock']}")
 
 
 if __name__ == "__main__":

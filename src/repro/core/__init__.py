@@ -11,7 +11,8 @@ from .policies import (ADMISSION_POLICIES, AdmissionPolicy, ComposedPolicy,
 from .prm import (PRM, OraclePRM, RewardHeadPRM, init_prm_head,
                   reward_from_hidden)
 from .pruning import PruningConfig, RequestMeta, TwoPhasePruner
-from .scheduler import (POLICIES, Request, Scheduler, SchedulerConfig,
+from .scheduler import (POLICIES, EvictionStallError, Request, Scheduler,
+                        SchedulerConfig, SchedulerFaultError,
                         percentile_latency)
 
 __all__ = [
@@ -21,8 +22,8 @@ __all__ = [
     "PRM", "OraclePRM", "RewardHeadPRM", "init_prm_head",
     "reward_from_hidden",
     "PruningConfig", "RequestMeta", "TwoPhasePruner",
-    "POLICIES", "Request", "Scheduler", "SchedulerConfig",
-    "percentile_latency",
+    "POLICIES", "EvictionStallError", "Request", "Scheduler",
+    "SchedulerConfig", "SchedulerFaultError", "percentile_latency",
     "ADMISSION_POLICIES", "AdmissionPolicy", "ComposedPolicy",
     "EdfPolicy", "FifoPolicy", "LpmPolicy", "PriorityPolicy",
     "make_policy", "select_next",

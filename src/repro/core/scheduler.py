@@ -59,6 +59,18 @@ from .prm import PRM
 POLICIES = ("vanilla", "sc", "sart", "sart_noprune", "rebase")
 
 
+class EvictionStallError(RuntimeError):
+    """Raised (into the engine-fault path) when ``OutOfPagesError``
+    pressure cannot be relieved: force-completing every live branch freed
+    zero allocator pages — the pre-fix scheduler span forever here."""
+
+
+class SchedulerFaultError(RuntimeError):
+    """Engine faults exhausted ``max_engine_restarts``: the failure is
+    persistent, so it propagates out of ``run()`` with the last cause
+    chained instead of restarting forever."""
+
+
 @dataclasses.dataclass(frozen=True)
 class SchedulerConfig:
     policy: str = "sart"
@@ -81,6 +93,16 @@ class SchedulerConfig:
     # it preempts the policy ordering (mirrors the chunk-lane packer's
     # prefill_starvation_bound, one layer up).
     admission_starvation_bound: int = 4
+    # Failure-domain isolation (docs/robustness.md). Attributable
+    # admission faults retry up to retry_budget times with exponential
+    # backoff (retry_backoff * 2**(retries-1) ticks) before the request
+    # is quarantined; step_fault_tolerance consecutive non-attributable
+    # decode faults trigger an engine restart, bounded by
+    # max_engine_restarts before the fault propagates out of run().
+    retry_budget: int = 3
+    retry_backoff: int = 4
+    step_fault_tolerance: int = 3
+    max_engine_restarts: int = 8
 
     def resolve(self) -> "SchedulerConfig":
         """Normalized copy with policy-dependent defaults applied:
@@ -122,6 +144,12 @@ class Request:
     first_branch: int = -1        # clock when the first branch was seated
     finish: int = -1
     final_answer: object = None
+    # failure-domain state (docs/robustness.md)
+    retries: int = 0              # attributable faults charged so far
+    not_before: int = 0           # backoff: earliest re-admission clock
+    quarantined: bool = False     # terminal: retry budget exhausted
+    quarantine_reason: Optional[str] = None
+    had_fault: bool = False       # saw any fault (drives `recovered`)
 
     @property
     def done(self) -> bool:
@@ -163,6 +191,13 @@ class Scheduler:
         self.clock = 0
         self.timeline = Timeline()
         self._next_request_id = 0
+        # failure-domain accounting (docs/robustness.md): quarantine /
+        # retry / restart / recovered counters surface in metrics()
+        self.fault_counters = {"step_faults": 0, "retries": 0,
+                               "quarantined": 0, "requeued": 0,
+                               "engine_restarts": 0, "recovered": 0,
+                               "last_restart_clock": -1}
+        self._fault_streak = 0    # consecutive non-attributable faults
 
     # ---------------------------------------------------------------- intake
     def submit(self, prompt: List[int], payload=None, arrival: int = 0,
@@ -187,10 +222,29 @@ class Scheduler:
                 continue
             self._decode_window()
             self._window_bookkeeping()
+        self._drain_truncated()
         return self.metrics()
 
     def _all_done(self) -> bool:
-        return all(r.done for r in self.requests.values())
+        """Quarantined requests are terminal too — the retry budget is
+        exhausted, so waiting on them would spin forever."""
+        return all(r.done or r.quarantined for r in self.requests.values())
+
+    def _drain_truncated(self) -> None:
+        """A run stopped at ``max_steps`` can leave admitted prompts with
+        chunks still pending; abort their prefill states through the
+        engine's normal release path so ``PageAllocator.check_invariants``
+        holds after *every* run, and requeue the requests (they surface as
+        unfinished in metrics, never dropped)."""
+        if not self.prefilling:
+            return
+        for req in reversed(self.prefilling):
+            if req.prefill_state is not None:
+                self.engine.abort_prefill(req.prefill_state)
+                req.prefill_state = None
+            self.request_queue.appendleft(req)
+            self.fault_counters["requeued"] += 1
+        self.prefilling.clear()
 
     def probe_cached_tokens(self, req: Request) -> int:
         """Non-mutating prefix-cache probe for LPM ordering: how many of
@@ -208,7 +262,9 @@ class Scheduler:
         admission policy orders the set; the starvation bound caps how
         often a request may be passed over (under ``fifo`` the choice is
         always the oldest arrived request — legacy order, bit-exact)."""
-        arrived = [r for r in self.request_queue if r.arrival <= self.clock]
+        arrived = [r for r in self.request_queue
+                   if r.arrival <= self.clock
+                   and r.not_before <= self.clock]
         if not arrived:
             return None
         chosen = select_next(self.admission, arrived, self,
@@ -285,7 +341,10 @@ class Scheduler:
         (``admission_capacity``: the max lanes one mixed step can carry —
         1 for legacy single-lane FIFO engines). Returns True if a request
         was admitted, False when at capacity, out of arrivals, or out of
-        pages (the request is requeued)."""
+        pages (the request is requeued). Any other admission exception is
+        *attributable* to the request being admitted: it is routed to the
+        quarantine/retry path instead of crashing ``run()`` — the seed
+        popped the request from the arrived set and dropped it."""
         capacity = getattr(self.engine, "admission_capacity", 1)
         if len(self.prefilling) >= capacity:
             return False
@@ -297,7 +356,31 @@ class Scheduler:
         except OutOfPagesError:
             self.request_queue.appendleft(req)
             return False
+        except Exception as exc:  # attributable: quarantine, don't crash
+            self._quarantine_or_requeue(req, exc)
         return True
+
+    def _quarantine_or_requeue(self, req: Request, exc: Exception) -> None:
+        """Charge an attributable fault to ``req``: requeue it with
+        exponential backoff while the retry budget lasts, then quarantine
+        it terminally — it stays in metrics (finish=None, quarantined)
+        rather than being dropped or retried forever."""
+        if req in self.prefilling:
+            self.prefilling.remove(req)
+        if req.prefill_state is not None:
+            self.engine.abort_prefill(req.prefill_state)
+            req.prefill_state = None
+        req.retries += 1
+        req.had_fault = True
+        if req.retries > self.cfg.retry_budget:
+            req.quarantined = True
+            req.quarantine_reason = repr(exc)
+            self.fault_counters["quarantined"] += 1
+        else:
+            self.fault_counters["retries"] += 1
+            req.not_before = (self.clock + self.cfg.retry_backoff
+                              * (1 << (req.retries - 1)))
+            self.request_queue.append(req)
 
     def _admit(self, req: Request):
         """Algorithm 1 PREFILL, now asynchronous and uniform across model
@@ -335,10 +418,14 @@ class Scheduler:
         req.prefix_blocks = blocks
         req.last_logits = logits
         req.ssm_state = ssm_state
-        req.meta = self.pruner.new_meta(self.cfg.n, self.cfg.m)
-        init_branches = (self._rebase_initial_width()
-                         if self.cfg.policy == "rebase" else self.cfg.n)
-        req.pending = init_branches
+        if req.meta is None:
+            req.meta = self.pruner.new_meta(self.cfg.n, self.cfg.m)
+            req.pending = (self._rebase_initial_width()
+                           if self.cfg.policy == "rebase" else self.cfg.n)
+        # else: re-admission after an engine restart or snapshot restore —
+        # pruner meta and completed branches survive; ``pending`` already
+        # carries the branch budget the teardown preserved (in-flight
+        # decode work resumes as resampling)
         self.branch_queue.append(req)
 
     def _poll_prefills(self) -> bool:
@@ -387,9 +474,21 @@ class Scheduler:
             try:
                 self.engine.decode_step()
             except OutOfPagesError:
-                self._evict_longest()
+                if not self._evict_longest():
+                    # nothing evictable freed pages: route the stall to
+                    # the engine-fault domain (bounded restarts) instead
+                    # of retrying OutOfPages forever without progress
+                    self._on_engine_fault(EvictionStallError(
+                        "OutOfPages with no evictable progress: "
+                        "force-completing every live branch freed 0 pages"))
                 continue
-            self.clock += 1
+            except Exception as exc:  # non-attributable: engine fault domain
+                self._on_engine_fault(exc)
+                continue
+            self._fault_streak = 0
+            # a faulty-but-alive engine can report slow steps (deadline
+            # pressure): charge the extra ticks the step actually cost
+            self.clock += 1 + getattr(self.engine, "last_step_penalty", 0)
             if self._poll_prefills():
                 # seed parity: branches spawned the moment prefill finished;
                 # refill mid-window instead of waiting out the window
@@ -398,15 +497,83 @@ class Scheduler:
             self.timeline.record(self.clock, self.engine.num_active,
                                  self.engine.live_tokens())
 
-    def _evict_longest(self):
-        """Memory pressure: force-complete the longest live branch."""
-        live = [h for h in self.engine.slots if h is not None]
-        if not live:
-            return
-        victim = max(live, key=lambda h: h.blocks.length)
-        req = self.requests[victim.request_id]
-        self._complete_branch(req, victim, truncated=True)
-        self._maybe_finalize(req)
+    def _evict_longest(self) -> bool:
+        """Memory pressure: force-complete live branches, longest first,
+        until allocator pages are actually freed. Returns False when no
+        victim frees anything (pages all prefix-cache-shared, or no live
+        branches) — the pre-fix code force-completed one victim blindly
+        and span the rest of the window retrying ``OutOfPagesError``."""
+        live = sorted((h for h in self.engine.slots if h is not None),
+                      key=lambda h: h.blocks.length, reverse=True)
+        for victim in live:
+            req = self.requests[victim.request_id]
+            before = self.engine.allocator.free_pages
+            self._complete_branch(req, victim, truncated=True)
+            self._maybe_finalize(req)
+            if self.engine.allocator.free_pages > before:
+                return True
+        return False
+
+    def _on_engine_fault(self, exc: Exception) -> None:
+        """Non-attributable engine failure during decode: burn the tick,
+        and after ``step_fault_tolerance`` consecutive faults restart the
+        engine instead of crashing ``run()`` (bounded by
+        ``max_engine_restarts``)."""
+        self.fault_counters["step_faults"] += 1
+        self._fault_streak += 1
+        self.clock += 1               # the faulted step still cost a tick
+        if self._fault_streak >= self.cfg.step_fault_tolerance:
+            self._restart_engine(exc)
+
+    def _restart_engine(self, cause: Optional[Exception] = None) -> None:
+        """Engine-restart path: tear down all engine-resident state
+        through the normal release paths (aborted prefills, freed
+        branches, released prefixes — so allocator invariants hold and
+        generated pages park warm on the prefix cache), requeue every
+        unfinished request, and restart the engine if it supports it.
+        Request-level progress (completed branches, rewards, pruner meta)
+        survives; lost in-flight decode work resumes as resampling."""
+        if (self.fault_counters["engine_restarts"]
+                >= self.cfg.max_engine_restarts):
+            raise SchedulerFaultError(
+                f"engine fault persists after "
+                f"{self.cfg.max_engine_restarts} restarts") from cause
+        self.fault_counters["engine_restarts"] += 1
+        self.fault_counters["last_restart_clock"] = self.clock
+        self._fault_streak = 0
+        survivors = []
+        for req in self.requests.values():
+            if req.done or req.quarantined:
+                continue
+            if req.prefill_state is not None:
+                self.engine.abort_prefill(req.prefill_state)
+                req.prefill_state = None
+            if req.live:
+                # in-flight branches are lost with the engine; preserve
+                # the branch budget so they resample after re-admission
+                req.pending += len(req.live)
+                for h in list(req.live.values()):
+                    self.engine.free_branch(h)
+                req.live.clear()
+            if req.prefix_blocks is not None:
+                self.engine.release_prefix(req.prefix_blocks)
+                req.prefix_blocks = None
+            req.last_logits = None
+            req.ssm_state = None
+            req.had_fault = True
+            if req not in self.request_queue:
+                survivors.append(req)
+        self.prefilling.clear()
+        self.branch_queue.clear()
+        self.suspended.clear()
+        # survivors re-admit ahead of never-admitted arrivals, in id order
+        for req in sorted(survivors, key=lambda r: r.request_id,
+                          reverse=True):
+            self.request_queue.appendleft(req)
+        self.fault_counters["requeued"] += len(survivors)
+        restart = getattr(self.engine, "restart", None)
+        if restart is not None:
+            restart()
 
     def _check_completions(self):
         for h in list(self.engine.slots):
@@ -476,6 +643,8 @@ class Scheduler:
         else:
             req.final_answer = best_of_n(req.completed, self.answer_fn)
         req.finish = self.clock
+        if req.had_fault:
+            self.fault_counters["recovered"] += 1
 
     # ---------------------------------------------------------------- rebase
     def _rebase_step(self, req: Request):
@@ -509,6 +678,89 @@ class Scheduler:
                 break
             req.live[child.branch_id] = child
             total += 1
+
+    # ----------------------------------------------------- checkpoint/restore
+    def snapshot(self) -> Dict:
+        """JSON-serializable checkpoint of *request-level* progress:
+        completed branch tokens+rewards+truncated flags, pruner meta, the
+        clock and fault counters, and each request's queue/terminal
+        standing. Engine-resident state — KV pages, prefill chunk
+        progress, in-flight branch tokens — is deliberately NOT
+        checkpointed: after ``restore`` survivors re-admit from the
+        queue, the prefix cache resurrects warm prompt (and generated)
+        prefixes, and lost in-flight decode resumes as resampling.
+        ``payload`` objects and the ``Timeline`` are also excluded
+        (re-attach payloads after restore if graders need them)."""
+        reqs = []
+        for req in self.requests.values():
+            reqs.append({
+                "request_id": req.request_id,
+                "prompt": list(req.prompt),
+                "arrival": req.arrival,
+                "deadline": req.deadline,
+                "priority": req.priority,
+                "passed_over": req.passed_over,
+                "retries": req.retries,
+                "not_before": req.not_before,
+                "quarantined": req.quarantined,
+                "quarantine_reason": req.quarantine_reason,
+                "had_fault": req.had_fault,
+                "first_service": req.first_service,
+                "first_branch": req.first_branch,
+                "finish": req.finish,
+                "final_answer": req.final_answer,
+                "cached_tokens": req.cached_tokens,
+                "completed": [[list(t), float(r), bool(tr)]
+                              for t, r, tr in req.completed],
+                # branch budget still owed: live branches collapse to
+                # pending spawns on restore (resampling)
+                "outstanding": len(req.live) + req.pending,
+                "meta": (dataclasses.asdict(req.meta)
+                         if req.meta is not None else None),
+            })
+        return {"version": 1, "clock": self.clock,
+                "next_request_id": self._next_request_id,
+                "fault_counters": dict(self.fault_counters),
+                "requests": reqs}
+
+    @classmethod
+    def restore(cls, snap: Dict, engine: Engine, prm: PRM,
+                cfg: SchedulerConfig, answer_fn: Callable) -> "Scheduler":
+        """Rebuild a scheduler from ``snapshot()`` output against a fresh
+        engine. Finished and quarantined requests keep their terminal
+        records; every other request is requeued for re-admission with
+        its completed branches, pruner meta and remaining branch budget
+        intact (``_harvest_prefill`` skips re-initializing meta)."""
+        if snap.get("version") != 1:
+            raise ValueError(f"unknown snapshot version {snap.get('version')!r}")
+        sch = cls(engine, prm, cfg, answer_fn)
+        sch.clock = snap["clock"]
+        sch._next_request_id = snap["next_request_id"]
+        sch.fault_counters.update(snap.get("fault_counters", {}))
+        for rec in snap["requests"]:
+            req = Request(rec["request_id"], list(rec["prompt"]),
+                          rec["arrival"], None, deadline=rec["deadline"],
+                          priority=rec["priority"])
+            req.passed_over = rec["passed_over"]
+            req.retries = rec["retries"]
+            req.not_before = rec["not_before"]
+            req.quarantined = rec["quarantined"]
+            req.quarantine_reason = rec["quarantine_reason"]
+            req.had_fault = rec["had_fault"]
+            req.first_service = rec["first_service"]
+            req.first_branch = rec["first_branch"]
+            req.finish = rec["finish"]
+            req.final_answer = rec["final_answer"]
+            req.cached_tokens = rec["cached_tokens"]
+            req.completed = [(list(t), float(r), bool(tr))
+                             for t, r, tr in rec["completed"]]
+            req.pending = rec["outstanding"]
+            if rec["meta"] is not None:
+                req.meta = RequestMeta(**rec["meta"])
+            sch.requests[req.request_id] = req
+            if not (req.done or req.quarantined):
+                sch.request_queue.append(req)
+        return sch
 
     # ---------------------------------------------------------------- metrics
     def metrics(self) -> Dict:
@@ -545,6 +797,8 @@ class Scheduler:
                                  else done and req.finish <= req.deadline),
                 "answer": req.final_answer,
                 "response_lengths": [len(t) for t, *_ in req.completed],
+                "retries": req.retries,
+                "quarantined": req.quarantined,
             })
         slo = [r for r in recs if r["deadline"] is not None]
         met = sum(1 for r in slo if r["deadline_met"])
@@ -570,6 +824,15 @@ class Scheduler:
         pc = stats() if callable(stats) else None
         if pc is not None:
             out["prefix_cache"] = pc
+        # failure-domain counters (always present; all-zero on clean runs)
+        # plus the injector's own tallies when a FaultInjector drives the
+        # run — chaos benchmarks key on these (docs/robustness.md)
+        out["faults"] = dict(self.fault_counters)
+        out["faults"]["quarantined_requests"] = sum(
+            1 for r in recs if r["quarantined"])
+        inj = getattr(self.engine, "fault_stats", None)
+        if callable(inj):
+            out["faults"]["injected"] = inj()
         return out
 
 

@@ -74,14 +74,16 @@ def serve(policy: str, n: int, num_requests: int, rate_gap: int,
           arch: str = "dense", mixed_step_kernel: str = "fused",
           step_token_budget: int = 0, prefix_cache: bool = False,
           admission_policy: str = "fifo",
-          deadline: Optional[int] = None) -> dict:
+          deadline: Optional[int] = None,
+          fault_plan: Optional[str] = None) -> dict:
     import numpy as np
 
     from ..core import OraclePRM, RewardHeadPRM, Scheduler, SchedulerConfig
     from ..core.scheduler import percentile_latency
     from ..data import tasks
     from ..data import tokenizer as tk
-    from ..serving import Engine, EngineConfig, SamplingParams
+    from ..serving import (Engine, EngineConfig, FaultInjector, FaultPlan,
+                           SamplingParams)
 
     model, params, prm_head = load_reasoner(ckpt, arch)
     engine = Engine(model, params, EngineConfig(
@@ -96,7 +98,12 @@ def serve(policy: str, n: int, num_requests: int, rate_gap: int,
     else:
         prm = OraclePRM(tasks.oracle_grader, noise=0.05, seed=seed + 1)
 
-    sch = Scheduler(engine, prm,
+    driven = engine
+    if fault_plan:
+        # seeded chaos harness: the scheduler drives the injector through
+        # the identical duck-typed interface (docs/robustness.md)
+        driven = FaultInjector(engine, FaultPlan.parse(fault_plan))
+    sch = Scheduler(driven, prm,
                     SchedulerConfig(policy=policy, n=n, window=window,
                                     max_tokens=max_tokens,
                                     admission_policy=admission_policy),
@@ -146,6 +153,9 @@ def serve(policy: str, n: int, num_requests: int, rate_gap: int,
         "slo": metrics["slo"],
         "completed_requests": metrics["completed_requests"],
         "unfinished_requests": metrics["unfinished_requests"],
+        # failure-domain counters (quarantine/retry/restart/recovered) +
+        # the injector's tallies when --fault-plan drives chaos
+        "faults": metrics["faults"],
     }
     return out
 
@@ -187,6 +197,12 @@ def main():
                     help="per-request SLO: finish within this many decode "
                          "steps of arrival (drives edf ordering and the "
                          "slo attainment metrics)")
+    ap.add_argument("--fault-plan", default=None,
+                    help="seeded chaos injection, e.g. "
+                         "'seed=3,step_rate=0.1,oop_rate=0.05,crash_at=50"
+                         "+120,poison_token=5' (see repro.serving.FaultPlan"
+                         ".parse); the run reports quarantine/retry/restart"
+                         "/recovered counters under 'faults'")
     ap.add_argument("--prm", default="oracle", choices=["oracle", "head"])
     ap.add_argument("--window", type=int, default=8)
     ap.add_argument("--max-tokens", type=int, default=96)
@@ -198,7 +214,8 @@ def main():
                 args.ckpt, args.prm, args.window, args.max_tokens,
                 args.slots, args.seed, args.temperature, args.arch,
                 args.mixed_step_kernel, args.step_token_budget,
-                args.prefix_cache, args.admission_policy, args.deadline)
+                args.prefix_cache, args.admission_policy, args.deadline,
+                args.fault_plan)
     print(json.dumps(out, indent=2))
 
 

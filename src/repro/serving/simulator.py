@@ -501,7 +501,8 @@ def run_sim_experiment(policy: str, n: int, *, num_requests: int = 40,
                        deadlines: Optional[List[Optional[int]]] = None,
                        priorities: Optional[List[int]] = None,
                        prompts: Optional[List[List[int]]] = None,
-                       max_steps: int = 200_000_000):
+                       max_steps: int = 200_000_000,
+                       fault_plan=None):
     """One simulated serving run; returns (metrics, accuracy).
 
     ``arrival_gap`` is the decode-step gap between request arrivals (the
@@ -517,18 +518,26 @@ def run_sim_experiment(policy: str, n: int, *, num_requests: int = 40,
     (e.g. adversarial warm/cold mixes for cache-aware policy studies).
     Accuracy counts only finished requests but divides by all submitted,
     so an overload run (``max_steps``) scores what it actually served.
+
+    ``fault_plan`` (a ``repro.serving.FaultPlan``) wraps the SimEngine in
+    a seeded ``FaultInjector`` for chaos runs — the scheduler then drives
+    the wrapper through the identical duck-typed interface, so fault-free
+    plans stay bit-exact with the unwrapped engine.
     """
     from ..core import OraclePRM, Scheduler, SchedulerConfig
     from ..data.tasks import extract_answer
+    from .faults import FaultInjector
 
     workload = workload or SimWorkload()
     engine_cfg = engine_cfg or SimEngineConfig()
     engine = SimEngine(engine_cfg, workload, seed=seed)
     prm = SimPRM(engine)
+    driven = (FaultInjector(engine, fault_plan)
+              if fault_plan is not None else engine)
     cfg = SchedulerConfig(policy=policy, n=n, m=m, alpha=alpha, beta=beta,
                           window=window, max_tokens=max_tokens,
                           admission_policy=admission_policy)
-    sch = Scheduler(engine, prm, cfg, answer_fn=extract_answer)
+    sch = Scheduler(driven, prm, cfg, answer_fn=extract_answer)
     rng = np.random.default_rng(seed + 1)
     for i in range(num_requests):
         task = SimTask(answer=int(rng.integers(0, 10)))

@@ -1,0 +1,46 @@
+"""REP007 negative fixture: accounted failures stay silent."""
+
+
+def step():
+    raise RuntimeError("boom")
+
+
+def reraises():
+    try:
+        step()
+    except Exception:
+        raise                       # re-raise: accounted
+
+
+def wraps_and_raises():
+    try:
+        step()
+    except Exception as exc:
+        raise RuntimeError("context") from exc
+
+
+class Sched:
+    def _quarantine_or_requeue(self, req, exc):
+        pass
+
+    def _on_engine_fault(self, exc):
+        pass
+
+    def routed_to_quarantine(self, req):
+        try:
+            step()
+        except Exception as exc:
+            self._quarantine_or_requeue(req, exc)   # recovery route
+
+    def routed_to_fault_domain(self):
+        try:
+            step()
+        except Exception as exc:
+            self._on_engine_fault(exc)              # recovery route
+
+
+def narrow_handler():
+    try:
+        step()
+    except ValueError:
+        pass                        # narrow except: out of scope

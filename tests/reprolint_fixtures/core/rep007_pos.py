@@ -1,0 +1,26 @@
+"""REP007 positive fixture: broad handlers that swallow the failure."""
+
+
+def step():
+    raise RuntimeError("boom")
+
+
+def swallow_and_log(log):
+    try:
+        step()
+    except Exception:           # finding: neither re-raise nor recovery
+        log.append("oops")
+
+
+def swallow_bare():
+    try:
+        step()
+    except:                     # noqa: E722  finding: bare except, swallowed
+        pass
+
+
+def swallow_tuple(log):
+    try:
+        step()
+    except (ValueError, Exception) as exc:   # finding: Exception in tuple
+        log.append(str(exc))

@@ -1,0 +1,533 @@
+"""Chaos/fault-injection tests (docs/robustness.md): failure-domain
+isolation, quarantine/backoff, engine restart, snapshot/restore, eviction
+stall escalation, and fault-free bit-exactness of the injector.
+
+The hypothesis-backed property tests fuzz random fault interleavings
+(OutOfPages storms, step exceptions, corrupted logits, slow steps, hard
+crash/restart) against both ``SimEngine`` and the live ``Engine``, and
+assert the failure-domain contract: allocator refcount conservation and
+the live/free/LRU partition hold at exit, and every submitted request is
+terminally accounted — completed or quarantined, never dropped.
+"""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (OraclePRM, Scheduler, SchedulerConfig,
+                        SchedulerFaultError)
+from repro.data import tasks
+from repro.data import tokenizer as tk
+from repro.data.tasks import extract_answer
+from repro.models import Model
+from repro.serving import Engine, EngineConfig, SamplingParams
+from repro.serving.faults import (EngineCrashFault, FaultInjector, FaultPlan,
+                                  InjectedStepFault, PoisonedRequestFault)
+from repro.serving.simulator import (SimEngine, SimEngineConfig, SimPRM,
+                                     SimTask, SimWorkload,
+                                     run_sim_experiment)
+
+from conftest import tiny_config
+from prop import given, settings, st
+
+POISON = tk.STEP       # never appears in a normal prompt
+
+
+def _digest(m, acc=None):
+    """Trajectory fingerprint for bit-exactness comparisons."""
+    recs = tuple(
+        (r["request_id"], r["arrival"], r["first_service"], r["ttfb"],
+         r["finish"], r["e2e"], r["num_completed"], r["num_pruned"],
+         r["answer"], tuple(r["response_lengths"]))
+        for r in m["requests"])
+    return (m["clock"], m["decode_steps"],
+            None if acc is None else round(acc, 6), recs)
+
+
+def _sim_setup(num_requests=8, seed=0, plan=None, poison_idx=None,
+               engine_kw=None, sched_kw=None, mean_len=80):
+    """SimEngine + Scheduler (optionally fault-injected) with submitted
+    requests; returns (inner_engine, scheduler)."""
+    w = SimWorkload(mean_len=mean_len, sigma_len=0.5, prompt_len=64,
+                    prm_drift=6.0, prm_noise=0.05)
+    ec = SimEngineConfig(**{**dict(max_slots=32, page_size=8,
+                                   num_pages=8192, prefill_chunk=32),
+                            **(engine_kw or {})})
+    eng = SimEngine(ec, w, seed=seed)
+    driven = FaultInjector(eng, plan) if plan is not None else eng
+    cfg = SchedulerConfig(policy="sart", n=4, window=20,
+                          **(sched_kw or {}))
+    sch = Scheduler(driven, SimPRM(eng), cfg, answer_fn=extract_answer)
+    rng = np.random.default_rng(seed + 1)
+    for i in range(num_requests):
+        task = SimTask(answer=int(rng.integers(0, 10)))
+        prompt = [tk.BOS] + [tk.digit(i % 10)] * 62 + [tk.EQUALS]
+        if i == poison_idx:
+            prompt[1] = POISON
+        req = sch.submit(prompt, payload=task, arrival=i * 5)
+        eng.tasks[req.request_id] = task
+    return eng, sch
+
+
+# ----------------------------------------------------------------- FaultPlan
+def test_faultplan_parse_roundtrip():
+    plan = FaultPlan.parse(
+        "seed=3,step_rate=0.1,oop_rate=0.05,crash_at=50+120,"
+        "poison_token=5,slow_rate=0.2,slow_penalty=4,admit_fail_rate=0.3")
+    assert plan == FaultPlan(seed=3, step_rate=0.1, oop_rate=0.05,
+                             crash_at=(50, 120), poison_token=5,
+                             slow_rate=0.2, slow_penalty=4,
+                             admit_fail_rate=0.3)
+    assert plan.enabled
+    assert not FaultPlan().enabled
+    with pytest.raises(ValueError):
+        FaultPlan.parse("no_such_field=1")
+
+
+def test_injector_is_deterministic_and_delegates():
+    """Same plan + same call sequence => same injected faults; all
+    non-intercepted attributes resolve on the wrapped engine."""
+    w = SimWorkload(mean_len=50, prompt_len=16)
+    plan = FaultPlan(seed=5, step_rate=0.3)
+    outcomes = []
+    for _ in range(2):
+        eng = SimEngine(SimEngineConfig(max_slots=4, page_size=8,
+                                        num_pages=512, prefill_chunk=8),
+                        w, seed=0)
+        inj = FaultInjector(eng, plan)
+        assert inj.cfg is eng.cfg and inj.allocator is eng.allocator
+        st_ = inj.begin_prefill([tk.BOS] * 8)
+        while not st_.done:
+            inj.decode_step()
+        blocks, lg, ssm = inj.finish_prefill(st_)
+        inj.spawn_branch(0, blocks, lg, ssm, 8)
+        run = []
+        for _ in range(30):
+            try:
+                inj.decode_step()
+                run.append("ok")
+            except InjectedStepFault:
+                run.append("fault")
+        outcomes.append(tuple(run))
+        assert "fault" in run and "ok" in run
+    assert outcomes[0] == outcomes[1]
+
+
+def test_injector_crash_then_restart():
+    w = SimWorkload(mean_len=50, prompt_len=16)
+    eng = SimEngine(SimEngineConfig(max_slots=4, page_size=8, num_pages=512,
+                                    prefill_chunk=8), w, seed=0)
+    inj = FaultInjector(eng, FaultPlan(crash_at=(1,)))
+    st_ = inj.begin_prefill([tk.BOS] * 8)
+    inj.decode_step()                      # step 0: chunk advances
+    assert st_.done
+    with pytest.raises(EngineCrashFault):
+        inj.decode_step()                  # step 1: planned crash
+    with pytest.raises(EngineCrashFault):
+        inj.decode_step()                  # still down
+    inj.restart()
+    inj.decode_step()                      # back up
+    assert inj.fault_stats()["crash"] == 1
+    assert inj.fault_stats()["restarts"] == 1
+
+
+# ----------------------------------------------------- fault-free bit-exact
+def test_chaos_disabled_injector_is_bit_exact_sim():
+    """Acceptance: with the injector disabled (empty plan), tokens and
+    metrics are bit-exact with a no-injector run."""
+    runs = []
+    for plan in (None, FaultPlan()):
+        m, acc = run_sim_experiment(
+            "sart", 4, num_requests=10, workload=SimWorkload(
+                mean_len=120, sigma_len=0.5, prompt_len=128, prompt_tail=16),
+            engine_cfg=SimEngineConfig(max_slots=32, num_pages=65536,
+                                       prefill_chunk=64,
+                                       step_token_budget=128,
+                                       prefix_cache=True),
+            window=50, seed=0, arrival_times=[0, 0, 0, 20, 20, 40, 40,
+                                              40, 60, 60],
+            fault_plan=plan)
+        runs.append(_digest(m, acc))
+    assert runs[0] == runs[1]
+    assert runs[0][0] > 0
+
+
+# --------------------------------------------------- admission quarantining
+def test_chaos_poisoned_admission_quarantines_not_drops():
+    """Satellite regression: the seed popped the request in ``_admit_one``
+    and let the exception crash ``run()`` — a poisoned prompt must end
+    terminally quarantined with bounded retries, while every other
+    request completes untouched."""
+    plan = FaultPlan(seed=1, poison_token=POISON)
+    eng, sch = _sim_setup(num_requests=6, plan=plan, poison_idx=2)
+    m = sch.run()
+    bad = m["requests"][2]
+    assert bad["quarantined"] and bad["finish"] is None
+    assert bad["retries"] == sch.cfg.retry_budget + 1
+    assert sch.requests[2].quarantine_reason is not None
+    assert "PoisonedRequestFault" in sch.requests[2].quarantine_reason
+    for r in m["requests"]:
+        if r["request_id"] != 2:
+            assert not r["quarantined"] and r["finish"] is not None
+    f = m["faults"]
+    assert f["quarantined"] == 1 and f["quarantined_requests"] == 1
+    assert f["retries"] == sch.cfg.retry_budget
+    eng.allocator.check_invariants()
+    assert eng.allocator.used_pages == 0
+
+
+def test_chaos_transient_admission_fault_retries_with_backoff():
+    """A transient begin_prefill failure retries with exponential backoff
+    and eventually admits — the request recovers instead of quarantining."""
+    plan = FaultPlan(seed=4, admit_fail_rate=0.5)
+    eng, sch = _sim_setup(num_requests=6, plan=plan,
+                          sched_kw=dict(retry_budget=10))
+    m = sch.run()
+    assert m["unfinished_requests"] == 0
+    f = m["faults"]
+    assert f["retries"] > 0 and f["quarantined"] == 0
+    assert f["recovered"] >= 1          # a retried request finished
+    retried = [r for r in m["requests"] if r["retries"] > 0]
+    assert retried and all(r["finish"] is not None for r in retried)
+    eng.allocator.check_invariants()
+
+
+def test_chaos_backoff_is_exponential():
+    """not_before grows as retry_backoff * 2**(retries-1) from the clock
+    of each failure."""
+    eng, sch = _sim_setup(num_requests=1)
+    req = sch.requests[0]
+    sch.clock = 100
+    sch._quarantine_or_requeue(req, RuntimeError("x"))
+    assert req.retries == 1
+    assert req.not_before == 100 + sch.cfg.retry_backoff
+    sch.clock = 200
+    sch._quarantine_or_requeue(req, RuntimeError("x"))
+    assert req.not_before == 200 + 2 * sch.cfg.retry_backoff
+    sch.clock = 300
+    sch._quarantine_or_requeue(req, RuntimeError("x"))
+    assert req.not_before == 300 + 4 * sch.cfg.retry_backoff
+    assert not req.quarantined
+    sch._quarantine_or_requeue(req, RuntimeError("x"))  # budget exhausted
+    assert req.quarantined
+
+
+# ------------------------------------------------------- storms and restarts
+def test_chaos_step_fault_storm_completes_all_nonpoisoned():
+    """Acceptance: seeded plan with step-exception rate >= 10% plus a
+    mid-run hard crash — every non-poisoned request completes (zero
+    drops), allocator invariants hold at exit, and metrics carries the
+    quarantine/retry/restart/recovered counters."""
+    plan = FaultPlan(seed=3, step_rate=0.15, crash_at=(60,),
+                     poison_token=POISON)
+    eng, sch = _sim_setup(num_requests=8, plan=plan, poison_idx=5)
+    m = sch.run()
+    assert len(m["requests"]) == 8      # terminally accounted, no drops
+    for r in m["requests"]:
+        if r["request_id"] == 5:
+            assert r["quarantined"]
+        else:
+            assert r["finish"] is not None
+    f = m["faults"]
+    for key in ("quarantined", "retries", "engine_restarts", "recovered",
+                "step_faults", "requeued"):
+        assert key in f
+    assert f["engine_restarts"] >= 1    # the crash forced a restart
+    assert f["recovered"] >= 1
+    assert f["injected"]["crash"] == 1
+    eng.allocator.check_invariants()
+    assert eng.allocator.used_pages == 0
+
+
+def test_chaos_crash_restart_preserves_completed_branches():
+    """Branches completed before the crash keep their tokens/rewards;
+    lost in-flight work resamples (completed count still reaches m)."""
+    plan = FaultPlan(seed=2, crash_at=(100,))
+    eng, sch = _sim_setup(num_requests=6, plan=plan, mean_len=150)
+    m = sch.run()
+    assert m["unfinished_requests"] == 0
+    assert m["faults"]["engine_restarts"] >= 1
+    for r in m["requests"]:
+        assert r["num_completed"] >= 1
+    eng.allocator.check_invariants()
+
+
+def test_chaos_slow_steps_charge_clock():
+    """Slow-step injection advances the scheduler clock by the penalty,
+    so deadline pressure is real: the same workload finishes later."""
+    clocks = {}
+    for tag, plan in (("clean", None),
+                      ("slow", FaultPlan(seed=6, slow_rate=0.5,
+                                         slow_penalty=8))):
+        m, _ = run_sim_experiment(
+            "sart", 4, num_requests=6,
+            workload=SimWorkload(mean_len=80, sigma_len=0.4, prompt_len=64),
+            engine_cfg=SimEngineConfig(max_slots=32, num_pages=8192,
+                                       page_size=8, prefill_chunk=32),
+            window=20, seed=0, fault_plan=plan)
+        clocks[tag] = m["clock"]
+        assert m["unfinished_requests"] == 0
+    assert clocks["slow"] > clocks["clean"]
+
+
+def test_chaos_restart_budget_exhaustion_raises_diagnosable():
+    """A fault that persists across max_engine_restarts propagates as
+    SchedulerFaultError (with the cause chained) instead of restarting
+    forever."""
+    plan = FaultPlan(seed=0, step_rate=1.0)    # every step faults
+    eng, sch = _sim_setup(num_requests=2, plan=plan,
+                          sched_kw=dict(max_engine_restarts=2))
+    with pytest.raises(SchedulerFaultError) as ei:
+        sch.run()
+    assert isinstance(ei.value.__cause__, InjectedStepFault)
+    assert sch.fault_counters["engine_restarts"] == 2
+
+
+# ------------------------------------------------------- eviction escalation
+def test_evict_longest_escalates_past_shared_victim():
+    """Satellite regression: when force-completing the longest branch
+    frees zero pages (all its pages shared), eviction must escalate to
+    the next victim instead of letting _decode_window spin on
+    OutOfPagesError without progress."""
+    w = SimWorkload(mean_len=10_000, sigma_len=0.1, prompt_len=16)
+    eng = SimEngine(SimEngineConfig(max_slots=4, page_size=8, num_pages=3,
+                                    prefill_chunk=16), w, seed=0)
+    sch = Scheduler(eng, SimPRM(eng), SchedulerConfig(
+        policy="sart", n=2, m=2, window=4, max_tokens=1 << 20),
+        answer_fn=extract_answer)
+    req = sch.submit([tk.BOS] * 16, payload=SimTask())
+    eng.tasks[0] = SimTask()
+    blocks, lg, ssm = eng.prefill(req.prompt)       # 2 of 3 pages
+    parent = eng.spawn_branch(0, blocks, lg, ssm, 16)
+    # decode the parent alone up to its page boundary: its third page is
+    # private (refcount 1) until the fork below shares it
+    for _ in range(8):
+        eng.decode_step()
+    assert parent.blocks.length == 24 and len(parent.blocks.pages) == 3
+    child = eng.fork_branch(parent)                 # shares ALL 3 pages
+    req.live = {parent.branch_id: parent, child.branch_id: child}
+    req.prefix_blocks = blocks
+    req.meta = sch.pruner.new_meta(4, 4)            # don't finalize at 2
+    req.pending = 2
+    assert eng.allocator.free_pages == 0
+    # both branches sit at a page boundary: the next step needs 2 pages
+    from repro.kv import OutOfPagesError
+    with pytest.raises(OutOfPagesError):
+        eng.decode_step()
+    # pre-fix behavior completed ONE victim (the parent): every parent
+    # page is still shared with the child, so zero pages free and the
+    # window would retry OutOfPages forever. The fix escalates to the
+    # child, whose release drops the generated page's last reference.
+    assert sch._evict_longest() is True
+    assert req.meta.num_completed == 2              # both victims evicted
+    assert req.meta.num_truncated == 2
+    assert eng.allocator.free_pages > 0
+    eng.release_prefix(blocks)
+    eng.allocator.check_invariants()
+
+
+def test_evict_longest_reports_stall_when_nothing_freeable():
+    """When no victim frees pages at all (every page shared with the
+    request's own prefix), _evict_longest returns False so the caller
+    can route the stall to the bounded engine-fault path — a diagnosable
+    error instead of the pre-fix infinite spin."""
+    w = SimWorkload(mean_len=10_000, sigma_len=0.1, prompt_len=16)
+    eng = SimEngine(SimEngineConfig(max_slots=4, page_size=8, num_pages=2,
+                                    prefill_chunk=16), w, seed=0)
+    sch = Scheduler(eng, SimPRM(eng), SchedulerConfig(
+        policy="sart", n=2, m=2, window=4, max_tokens=1 << 20),
+        answer_fn=extract_answer)
+    req = sch.submit([tk.BOS] * 16, payload=SimTask())
+    eng.tasks[0] = SimTask()
+    blocks, lg, ssm = eng.prefill(req.prompt)       # all pages used
+    b1 = eng.spawn_branch(0, blocks, lg, ssm, 16)   # shares both pages
+    b2 = eng.spawn_branch(0, blocks, lg, ssm, 16)
+    req.live = {b1.branch_id: b1, b2.branch_id: b2}
+    req.prefix_blocks = blocks
+    req.meta = sch.pruner.new_meta(4, 4)
+    req.pending = 2
+    # every victim's pages stay referenced by the prefix: nothing frees
+    assert sch._evict_longest() is False
+    assert req.meta.num_truncated == 2
+    # with no live branches left, eviction reports the stall immediately
+    assert sch._evict_longest() is False
+    eng.release_prefix(blocks)
+    eng.allocator.check_invariants()
+
+
+# ----------------------------------------------------------- truncated drain
+def test_chaos_truncated_run_drains_prefilling():
+    """Satellite regression: a run stopped at max_steps mid-prefill must
+    abort the pending ChunkedPrefillStates (allocator invariants hold
+    after every run) and requeue the requests, never drop them."""
+    w = SimWorkload(mean_len=400, sigma_len=0.4, prompt_len=256)
+    ec = SimEngineConfig(max_slots=8, page_size=8, num_pages=65536,
+                         prefill_chunk=16)   # 16 chunk-steps per prompt
+    eng = SimEngine(ec, w, seed=0)
+    sch = Scheduler(eng, SimPRM(eng), SchedulerConfig(
+        policy="sart", n=4, window=10, max_tokens=1 << 20),
+        answer_fn=extract_answer)
+    for i in range(4):
+        t = SimTask()
+        r = sch.submit([tk.BOS] + [tk.digit(i)] * 254 + [tk.EQUALS],
+                       payload=t, arrival=i * 4)
+        eng.tasks[r.request_id] = t
+    m = sch.run(max_steps=8)                 # cap hits mid-prefill
+    assert m["unfinished_requests"] > 0
+    assert not sch.prefilling
+    assert not eng.has_pending_prefill
+    eng.allocator.check_invariants()
+    # requeued, not dropped: every unfinished request is back in queue
+    queued = {r.request_id for r in sch.request_queue}
+    for r in m["requests"]:
+        if r["finish"] is None:
+            assert r["request_id"] in queued
+
+
+# ---------------------------------------------------------- snapshot/restore
+def test_chaos_snapshot_restore_roundtrip_completes():
+    """Checkpoint/restore rescheduling: snapshot a half-done run, rebuild
+    against a FRESH engine (KV pages gone), and drive to completion —
+    completed branches, rewards, truncated flags and pruner meta survive;
+    in-flight work resamples; nothing is dropped."""
+    w = SimWorkload(mean_len=120, sigma_len=0.5, prompt_len=64,
+                    prm_drift=6.0, prm_noise=0.05)
+    ec = SimEngineConfig(max_slots=16, page_size=8, num_pages=8192,
+                         prefill_chunk=32)
+    eng = SimEngine(ec, w, seed=0)
+    cfg = SchedulerConfig(policy="sart", n=4, window=20)
+    sch = Scheduler(eng, SimPRM(eng), cfg, answer_fn=extract_answer)
+    rng = np.random.default_rng(1)
+    task_by_id = {}
+    for i in range(6):
+        t = SimTask(answer=int(rng.integers(0, 10)))
+        r = sch.submit([tk.BOS] + [tk.digit(i)] * 62 + [tk.EQUALS],
+                       payload=t, arrival=i * 5)
+        eng.tasks[r.request_id] = t
+        task_by_id[r.request_id] = t
+    sch.run(max_steps=80)                    # half-done "crash point"
+    snap = json.loads(json.dumps(sch.snapshot()))   # wire round-trip
+    assert snap["version"] == 1 and snap["clock"] >= 80
+    pre_completed = {r["request_id"]: [tuple(c[0]) for c in r["completed"]]
+                     for r in snap["requests"]}
+
+    eng2 = SimEngine(ec, w, seed=7)          # fresh engine: KV pages gone
+    for rid, t in task_by_id.items():
+        eng2.tasks[rid] = t                  # payloads re-attached by hand
+    sch2 = Scheduler.restore(snap, eng2, SimPRM(eng2), cfg, extract_answer)
+    assert sch2.clock == snap["clock"]
+    m = sch2.run()
+    assert m["unfinished_requests"] == 0
+    assert len(m["requests"]) == 6
+    eng2.allocator.check_invariants()
+    assert eng2.allocator.used_pages == 0
+    # pre-crash completed branches retained verbatim in the final record
+    for req in sch2.requests.values():
+        kept = [tuple(t_) for t_, _, _ in req.completed]
+        for tokens in pre_completed[req.request_id]:
+            assert tokens in kept
+    # submit() keeps numbering from the snapshot
+    assert sch2._next_request_id == snap["next_request_id"]
+
+
+def test_chaos_snapshot_rejects_unknown_version():
+    eng, sch = _sim_setup(num_requests=1)
+    snap = sch.snapshot()
+    snap["version"] = 99
+    with pytest.raises(ValueError):
+        Scheduler.restore(snap, eng, SimPRM(eng), sch.cfg, extract_answer)
+
+
+# -------------------------------------------------------- property: sim chaos
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000),
+       st.floats(0.0, 0.25),
+       st.floats(0.0, 0.2),
+       st.booleans(),
+       st.booleans())
+def test_chaos_property_sim_interleavings(seed, step_rate, oop_rate,
+                                          crash, cached):
+    """Random fault interleavings against SimEngine: allocator refcount
+    conservation + live/free/LRU partition hold at exit, and every
+    submitted request is terminally accounted (completed or quarantined,
+    never dropped)."""
+    plan = FaultPlan(seed=seed, step_rate=step_rate, oop_rate=oop_rate,
+                     nan_rate=step_rate / 2, slow_rate=oop_rate,
+                     crash_at=(40 + seed % 60,) if crash else (),
+                     poison_token=POISON)
+    eng, sch = _sim_setup(
+        num_requests=6, seed=seed % 7, plan=plan,
+        poison_idx=seed % 6 if seed % 3 == 0 else None,
+        engine_kw=dict(prefix_cache=cached, num_pages=4096))
+    try:
+        m = sch.run(max_steps=100_000)
+    except SchedulerFaultError:
+        # persistent-fault escape hatch: allowed, but never a hang — and
+        # the allocator must still satisfy its invariants
+        eng.allocator.check_invariants()
+        return
+    assert len(m["requests"]) == 6
+    for r in m["requests"]:
+        assert r["finish"] is not None or r["quarantined"], \
+            f"request {r['request_id']} dropped"
+    eng.allocator.check_invariants()
+    assert eng.allocator.used_pages == 0
+    f = m["faults"]
+    assert f["quarantined_requests"] == sum(
+        1 for r in m["requests"] if r["quarantined"])
+    if not plan.enabled:
+        assert f["step_faults"] == 0 and f["engine_restarts"] == 0
+
+
+# ------------------------------------------------------- property: live chaos
+def _live_sched(plan, seed=0, prefix_cache=False):
+    cfg = tiny_config(vocab_size=tk.VOCAB_SIZE)
+    model = Model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    eng = Engine(model, params, EngineConfig(
+        page_size=8, num_pages=128, max_slots=4, max_pages_per_branch=8,
+        eos_id=tk.EOS, sampling=SamplingParams(temperature=1.0), seed=1,
+        prefill_chunk=8, prefix_cache=prefix_cache))
+    driven = FaultInjector(eng, plan) if plan is not None else eng
+    prm = OraclePRM(tasks.oracle_grader, noise=0.05, seed=2)
+    sch = Scheduler(driven, prm, SchedulerConfig(
+        policy="sart", n=2, m=1, window=8, max_tokens=24),
+        answer_fn=extract_answer)
+    rng = np.random.default_rng(seed + 3)
+    for i in range(3):
+        p = tasks.gen_problem(rng)
+        sch.submit(p.prompt_tokens(), payload=p, arrival=i * 2)
+    return eng, sch
+
+
+def test_chaos_disabled_injector_is_bit_exact_live_engine():
+    """Fault-free bit-exactness on the live Engine: the empty-plan
+    injector run matches the bare-engine run token-for-token."""
+    runs = []
+    for plan in (None, FaultPlan()):
+        eng, sch = _live_sched(plan)
+        m = sch.run(max_steps=10_000)
+        runs.append(_digest(m))
+        assert eng.allocator.used_pages == 0
+    assert runs[0] == runs[1]
+
+
+@pytest.mark.parametrize("seed,crash", [(0, True), (1, False), (2, True)])
+def test_chaos_property_live_engine_interleavings(seed, crash):
+    """Injected fault interleavings against the live Engine: the restart
+    path tears down real KV state through the normal release paths, the
+    prefix cache survives for warm re-admission, and every request is
+    terminally accounted."""
+    plan = FaultPlan(seed=seed, step_rate=0.1, oop_rate=0.05,
+                     crash_at=(30,) if crash else ())
+    eng, sch = _live_sched(plan, seed=seed, prefix_cache=True)
+    m = sch.run(max_steps=50_000)
+    assert len(m["requests"]) == 3
+    for r in m["requests"]:
+        assert r["finish"] is not None or r["quarantined"]
+    eng.allocator.check_invariants()
+    assert all(s is None for s in eng.slots)
+    if crash:
+        assert m["faults"]["engine_restarts"] >= 1 \
+            or m["faults"]["injected"]["crash"] == 0

@@ -37,7 +37,7 @@ def shapes(findings):
 def test_rule_catalog_complete():
     codes = [r.code for r in all_rules()]
     assert codes == ["REP001", "REP002", "REP003", "REP004", "REP005",
-                     "REP006"]
+                     "REP006", "REP007"]
     for r in all_rules():
         assert r.summary and r.name != "unnamed"
 
@@ -149,6 +149,31 @@ def test_rep006_positive_exact():
 
 def test_rep006_negative_silent():
     assert lint(FIX / "src" / "repro" / "kv" / "rep006_neg.py") == []
+
+
+# ------------------------------------------------------------------- REP007
+def test_rep007_positive_exact():
+    fs = lint(FIX / "core" / "rep007_pos.py")
+    assert shapes(fs) == [("REP007", "swallow_and_log"),
+                          ("REP007", "swallow_bare"),
+                          ("REP007", "swallow_tuple")]
+    assert "bare except" in fs[1].message
+    assert all("recovery path" in f.message for f in fs)
+
+
+def test_rep007_negative_silent():
+    assert lint(FIX / "core" / "rep007_neg.py") == []
+
+
+def test_rep007_is_path_scoped():
+    # the same swallows outside core//serving/ (launch glue, tools) are
+    # out of the failure-domain contract's scope and must not fire
+    import shutil
+    import tempfile
+    with tempfile.TemporaryDirectory(dir=FIX) as tmp:
+        dst = Path(tmp) / "rep007_pos_copy.py"
+        shutil.copy(FIX / "core" / "rep007_pos.py", dst)
+        assert lint(dst) == []
 
 
 # ------------------------------------------------------------------- REP000

@@ -686,6 +686,34 @@ def test_metrics_emit_unfinished_requests():
     assert np.isfinite(percentile_latency(m, 50))
 
 
+def test_truncated_run_drains_prefill_states():
+    """Satellite bugfix: stopping run() at max_steps while prompts are
+    mid-chunked-prefill must abort those ChunkedPrefillStates (freeing
+    their partial KV pages) and requeue the requests — the allocator
+    invariants hold after EVERY run, truncated or not."""
+    w = SimWorkload(mean_len=80, sigma_len=0.4, prompt_len=256)
+    engine = SimEngine(SimEngineConfig(max_slots=8, page_size=8,
+                                       num_pages=4096, prefill_chunk=16),
+                       w, seed=0)                # 16 chunk-steps per prompt
+    cfg = SchedulerConfig(policy="sart", n=4, window=10, max_tokens=1 << 20)
+    sch = Scheduler(engine, SimPRM(engine), cfg, answer_fn=extract_answer)
+    for i in range(4):
+        task = SimTask()
+        req = sch.submit([tk.BOS] + [tk.digit(i)] * 254 + [tk.EQUALS],
+                         payload=task, arrival=0)
+        engine.tasks[req.request_id] = task
+    m = sch.run(max_steps=1)                 # one window: prefills in flight
+    assert m["unfinished_requests"] == 4
+    assert sch.prefilling == [] and not engine.has_pending_prefill
+    engine.allocator.check_invariants()
+    assert engine.allocator.used_pages == 0  # partial prefill pages freed
+    # requeued, not dropped: every unfinished request is still schedulable
+    queued = {r.request_id for r in sch.request_queue}
+    for r in m["requests"]:
+        if r["finish"] is None:
+            assert r["request_id"] in queued
+
+
 @pytest.mark.parametrize("family_kw", [
     dict(arch_type="ssm", d_ff=0, ssm_state=16, ssm_head_dim=32, ssm_chunk=8),
     dict(arch_type="hybrid", ssm_state=16, ssm_head_dim=32, ssm_chunk=8),

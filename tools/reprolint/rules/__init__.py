@@ -1,4 +1,5 @@
 """Rule modules register themselves on import (``@register``)."""
 from . import (rep001_jit_retrace, rep002_alloc_discipline,  # noqa: F401
                rep003_pallas_sentinel, rep004_queue_identity,
-               rep005_host_sync, rep006_docstrings)
+               rep005_host_sync, rep006_docstrings,
+               rep007_swallowed_except)

@@ -1,0 +1,82 @@
+"""REP007 — swallowed broad exception in the serving failure domain.
+
+The scheduler's failure-domain contract (docs/robustness.md) is that
+every fault is *accounted*: re-raised, quarantined against a request,
+or routed to the engine-restart path. A ``except Exception:`` / bare
+``except:`` handler in ``core/`` or ``serving/`` whose body neither
+re-raises nor calls into a recovery path silently deletes a failure
+from that accounting — the exact bug class the pre-fix
+``Scheduler._admit_one`` had (the admitted request was popped and the
+exception dropped it on the floor).
+
+Detection: for each broad handler (bare, ``Exception`` or
+``BaseException``, possibly inside a tuple), the handler body must
+contain a ``raise`` or a call whose dotted name mentions a recovery
+route (``quarantine`` / ``requeue`` / ``restart`` / ``fault``).
+Narrow handlers (``except OutOfPagesError:``) are out of scope — they
+are part of documented control flow. Intentional swallows carry an
+inline ``# reprolint: disable=REP007`` with a justification or a
+baseline entry, like every other rule.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from ..framework import (FileContext, Finding, ProjectContext, Rule,
+                         dotted_name, register)
+
+_BROAD = ("Exception", "BaseException")
+_RECOVERY_MARKERS = ("quarantine", "requeue", "restart", "fault")
+
+
+def _is_broad(handler: ast.ExceptHandler) -> bool:
+    if handler.type is None:           # bare `except:`
+        return True
+    types = (handler.type.elts if isinstance(handler.type, ast.Tuple)
+             else [handler.type])
+    for t in types:
+        if dotted_name(t).rsplit(".", 1)[-1] in _BROAD:
+            return True
+    return False
+
+
+def _routes_or_reraises(handler: ast.ExceptHandler) -> bool:
+    for node in ast.walk(handler):
+        if isinstance(node, ast.Raise):
+            return True
+        if isinstance(node, ast.Call):
+            callee = dotted_name(node.func).lower()
+            if any(marker in callee for marker in _RECOVERY_MARKERS):
+                return True
+    return False
+
+
+@register
+class SwallowedExceptRule(Rule):
+    code = "REP007"
+    name = "swallowed-broad-except"
+    summary = ("bare `except:`/`except Exception:` in core/+serving/ that "
+               "neither re-raises nor routes to a recovery path "
+               "(quarantine/requeue/restart/fault) — failures vanish from "
+               "the failure-domain accounting")
+    path_filter = ("core/", "serving/")
+
+    def check(self, ctx: FileContext,
+              project: ProjectContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.ExceptHandler):
+                continue
+            if not _is_broad(node):
+                continue
+            if _routes_or_reraises(node):
+                continue
+            caught = ("bare except" if node.type is None
+                      else f"except {ast.unparse(node.type)}")
+            yield ctx.finding(
+                node, self.code,
+                f"`{caught}` swallows the failure: the handler neither "
+                "re-raises nor routes it to a recovery path "
+                "(quarantine/requeue/restart/fault) — every fault in the "
+                "serving failure domain must stay accounted "
+                "(docs/robustness.md)")
